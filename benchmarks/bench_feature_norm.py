@@ -1,0 +1,86 @@
+"""Paper Figure 4: effect of FA feature normalization on loss/accuracy.
+
+The paper reports ~75% training-loss reduction and ~6% accuracy gain when
+device-only features are normalized with globally-learned FA factors.
+We train the classifier on raw vs FA-normalized features and report both
+ratios.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import mlp as mlp_cfg
+from repro.configs.base import FLConfig
+from repro.core.analytics import normalization
+from repro.core.fl.round import build_round_step, init_fl_state
+from repro.data.synthetic import ClassifierTask
+from repro.models.model import build_mlp_classifier
+
+COHORT = 64
+ROUNDS = 50
+
+
+def _train(normalize: str, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    cfg = mlp_cfg.CONFIG
+    task = ClassifierTask(num_features=cfg.num_features, pos_ratio=0.3,
+                          seed=seed)
+    model = build_mlp_classifier(cfg)
+    fl = FLConfig(cohort_size=COHORT, local_steps=2, local_lr=0.3,
+                  clip_norm=1.0, noise_multiplier=0.2)
+    step = jax.jit(build_round_step(model.loss_fn, fl, cohort_size=COHORT,
+                                    clients_per_chunk=16))
+    state = init_fl_state(model.init(key), fl)
+
+    factors = None
+    if normalize == "fa":
+        # federated analytics over an independent device sample
+        fa = task.sample_devices(20_000, rng_seed=777)
+        factors = normalization.learn_minmax(
+            jnp.asarray(fa["features_raw"]), lo=-4096.0, hi=4096.0,
+            rng=key, n_thresholds=128)
+
+    losses = []
+    for r in range(ROUNDS):
+        rng = jax.random.fold_in(key, r)
+        d = task.sample_devices(COHORT, rng_seed=seed * 37 + r)
+        x = jnp.asarray(d["features_raw"])
+        if factors is not None:
+            x = factors.apply(x)
+        state, met = step(state, {"features": x[:, None, :],
+                                  "label": jnp.asarray(d["label"])[:, None]}, rng)
+        losses.append(float(met["loss"]))
+
+    ev = task.sample_devices(4000, rng_seed=4242)
+    xe = jnp.asarray(ev["features_raw"])
+    if factors is not None:
+        xe = factors.apply(xe)
+    _, mets = model.loss_fn(state.params, {"features": xe,
+                                           "label": jnp.asarray(ev["label"])})
+    return {"final_loss": float(np.mean(losses[-5:])),
+            "first_loss": float(np.mean(losses[:3])),
+            "acc": float(mets["accuracy"])}
+
+
+def run() -> None:
+    raw = _train("raw")
+    fa = _train("fa")
+    loss_reduction = 1.0 - fa["final_loss"] / max(raw["final_loss"], 1e-9)
+    acc_gain = fa["acc"] - raw["acc"]
+    emit("feature_norm/raw", 0.0,
+         f"final_loss={raw['final_loss']:.4f};acc={raw['acc']:.3f}")
+    emit("feature_norm/fa_normalized", 0.0,
+         f"final_loss={fa['final_loss']:.4f};acc={fa['acc']:.3f}")
+    emit("feature_norm/train_loss_reduction", 0.0,
+         f"{loss_reduction * 100:.1f}% (paper: ~75%)")
+    emit("feature_norm/accuracy_gain", 0.0,
+         f"{acc_gain * 100:.1f}pp (paper: ~6%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure/claim.
+
+  bench_label_balance   Paper Fig. 3 (score-distribution skew)
+  bench_feature_norm    Paper Fig. 4 (loss reduction / accuracy gain)
+  bench_noise_placement Paper §Model aggregation (tee vs device noise)
+                        + §Abstract ("minimal degradation" vs central)
+  bench_async           Paper §Training (Papaya 5x / 8x claims)
+  bench_comm            Secure-agg bytes vs quantization width
+  bench_fa_bits         FA bit-protocol estimator error scaling
+  bench_kernels         Kernel micro-timings + TPU roofline context
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    import benchmarks.bench_label_balance as b1
+    import benchmarks.bench_feature_norm as b2
+    import benchmarks.bench_noise_placement as b3
+    import benchmarks.bench_async as b4
+    import benchmarks.bench_comm as b5
+    import benchmarks.bench_fa_bits as b6
+    import benchmarks.bench_kernels as b7
+
+    failures = 0
+    for mod in (b1, b2, b3, b4, b5, b6, b7):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"# FAILED {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

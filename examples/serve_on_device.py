@@ -1,0 +1,16 @@
+"""On-device inference example (PyTorch Mobile analogue).
+
+Batched requests against a reduced LLM with int8-quantized weights and a
+KV cache: prefill + token-by-token decode, the inference path the paper
+serves from the shared Feature Store foundation.
+
+Run:  PYTHONPATH=src python examples/serve_on_device.py
+"""
+import sys
+
+from repro.launch import serve
+
+sys.exit(serve.main([
+    "--arch", "qwen2-1.5b", "--reduced", "--int8",
+    "--batch", "4", "--prompt-len", "32", "--decode-tokens", "16",
+]))

@@ -1,0 +1,42 @@
+"""Render EXPERIMENTS.md roofline tables from dryrun JSONL sinks."""
+import json
+import sys
+
+
+def fmt_t(s):
+    if s is None:
+        return "n/a"
+    if s == 0:
+        return "0"
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def main(path):
+    rows = [json.loads(l) for l in open(path)]
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+          "peak/dev | useful FLOPs ratio | coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                  f"({r['skipped'][:40]}…) | — | — | — |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | — |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        ratio = rf.get("useful_flops_ratio", 0)
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(rf['t_compute_s'])} | "
+              f"{fmt_t(rf['t_memory_s'])} | {fmt_t(rf['t_collective_s'])} | "
+              f"**{rf['dominant']}** | {mem['peak_bytes_est'] / 2**30:.1f}GiB | "
+              f"{ratio:.2f} | "
+              f"{rf['collectives']['total_wire_bytes']:.2e} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

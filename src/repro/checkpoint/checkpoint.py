@@ -1,0 +1,101 @@
+"""Checkpointing: msgpack-serialized pytrees with a manifest + integrity hash.
+
+Saves global FL state (params, server-opt state, round index) and restores it
+bit-exactly.  Arrays are stored as raw little-endian bytes with dtype/shape
+metadata; the manifest tracks step, config fingerprint and a sha256 of the
+payload so a torn write is detected at restore.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_SENTINEL = "__nd__"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {
+        _SENTINEL: True,
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _is_packed(d) -> bool:
+    return isinstance(d, dict) and d.get(_SENTINEL) is True
+
+
+def _unpack_leaf(d):
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def _to_packable(tree):
+    if isinstance(tree, dict):
+        return {k: _to_packable(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": type(tree).__name__,
+                "items": [_to_packable(v) for v in tree]}
+    if hasattr(tree, "_fields"):  # NamedTuple
+        return {"__nt__": list(tree._fields),
+                "items": [_to_packable(getattr(tree, f)) for f in tree._fields]}
+    if isinstance(tree, (np.ndarray, jnp.ndarray)) or np.isscalar(tree):
+        return _pack_leaf(tree)
+    raise TypeError(f"cannot checkpoint {type(tree)}")
+
+
+def _from_packable(obj):
+    if _is_packed(obj):
+        return jnp.asarray(_unpack_leaf(obj))
+    if isinstance(obj, dict) and "__seq__" in obj:
+        seq = [_from_packable(v) for v in obj["items"]]
+        return tuple(seq) if obj["__seq__"] == "tuple" else seq
+    if isinstance(obj, dict) and "__nt__" in obj:
+        # restored as plain dict keyed by field (callers rebuild NamedTuples)
+        return {f: _from_packable(v) for f, v in zip(obj["__nt__"], obj["items"])}
+    if isinstance(obj, dict):
+        return {k: _from_packable(v) for k, v in obj.items()}
+    raise TypeError(type(obj))
+
+
+def save(path: str, tree: Any, *, step: int = 0,
+         metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    payload = msgpack.packb(_to_packable(tree), use_bin_type=True)
+    digest = hashlib.sha256(payload).hexdigest()
+    tmp = os.path.join(path, ".payload.tmp")
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, os.path.join(path, "payload.msgpack"))
+    manifest = {"step": step, "sha256": digest, "metadata": metadata or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str) -> Tuple[Any, Dict[str, Any]]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "payload.msgpack"), "rb") as f:
+        payload = f.read()
+    digest = hashlib.sha256(payload).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint corrupt: sha mismatch at {path}")
+    tree = _from_packable(msgpack.unpackb(payload, raw=False))
+    return tree, manifest
+
+
+def latest_step_dir(root: str) -> Optional[str]:
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    return os.path.join(root, max(steps, key=lambda s: int(s.split("_")[1])))

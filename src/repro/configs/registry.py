@@ -1,0 +1,107 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-shape input specs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.shapes import SHAPES
+
+# arch-id -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+# Sliding-window used for the long_500k decode variant of full-attention archs
+# (beyond-paper addition; see DESIGN.md §Shape-applicability).
+LONG_CONTEXT_WINDOW = 4096
+
+# (arch, shape) pairs that are skipped, with the reason recorded in DESIGN.md.
+SKIPS = {
+    ("whisper-tiny", "long_500k"): (
+        "enc-dec with learned absolute positions and 448-token decoder "
+        "context; 500k decode is architecturally unrepresentable"
+    ),
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def config_for_pair(arch: str, shape_name: str, reduced: bool = False) -> Optional[ModelConfig]:
+    """Config adjusted for the given input shape; None if the pair is skipped."""
+    if (arch, shape_name) in SKIPS:
+        return None
+    cfg = get_config(arch, reduced=reduced)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        # full-attention archs run long-context decode via the sliding-window
+        # ring-buffer variant (sub-quadratic requirement).
+        cfg = cfg.decode_variant(LONG_CONTEXT_WINDOW)
+    if shape.seq_len > cfg.max_seq_len:
+        cfg = cfg.with_overrides(max_seq_len=shape.seq_len)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    Train mode: the full DP-FL round batch — one sequence per client
+    (the paper's "one sample per device" regime).
+    Prefill: the request batch.  Decode: one new token + position.
+    (Decode cache specs come from ``jax.eval_shape`` over ``init_cache`` in the
+    launch layer, since the cache is model-structured.)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode == "decode":
+        # one new token against a seq_len-deep cache; the cache specs are
+        # derived via jax.eval_shape(init_cache, ...) in the launch layer.
+        return {
+            "tokens": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+        }
+
+    def token_batch(n_text: int):
+        d: Dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": sds((B, n_text), jnp.int32),
+        }
+        if shape.mode == "train":
+            d["labels"] = sds((B, n_text), jnp.int32)
+            d["loss_mask"] = sds((B, n_text), dtype)
+        return d
+
+    if cfg.family == "vlm":
+        n_img = cfg.num_image_tokens
+        n_text = S - n_img
+        d = token_batch(n_text)
+        # stub ViT frontend: precomputed projected patch embeddings
+        d["patch_embeds"] = sds((B, n_img, cfg.d_model), dtype)
+        return d
+    if cfg.family == "audio":
+        d = token_batch(S)
+        # stub conv/mel frontend: precomputed frame embeddings
+        d["audio_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), dtype)
+        return d
+    return token_batch(S)

@@ -1,0 +1,118 @@
+"""Bit-efficient federated analytics (Cormode & Markov 2021, paper ref [4]).
+
+Each device contributes ONE BIT per queried statistic:
+  - mean estimation: device with value x in [lo, hi] sends
+    b ~ Bernoulli((x - lo) / (hi - lo)); the population mean of b is an
+    unbiased estimate of the normalized mean.
+  - quantile / CDF estimation: for threshold t the device sends b = 1[x <= t];
+    the mean of b estimates F(t).  A threshold grid gives the full CDF, from
+    which any percentile is read off.
+
+Local differential privacy via randomized response: with prob p_flip the bit
+is replaced by a fair coin; the server debiases
+  E[b_rr] = (1 - p_flip) E[b] + p_flip/2.
+
+This is the paper's Federated Analytics Server computation ("manipulation of
+individual bit values ... fits our scalability needs"), used for feature
+normalization and label statistics.  The hot aggregation loop has a Pallas
+kernel (repro.kernels.bitagg); this module is the protocol + estimators.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_mean_bits(values: jnp.ndarray, lo: float, hi: float, rng,
+                     flip_prob: float = 0.0) -> jnp.ndarray:
+    """values: (n_devices, n_features) -> uint8 bits, one per (device, feature)."""
+    p = jnp.clip((values - lo) / (hi - lo), 0.0, 1.0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    bits = (jax.random.uniform(k1, values.shape) < p)
+    if flip_prob > 0.0:
+        flip = jax.random.uniform(k2, values.shape) < flip_prob
+        coin = jax.random.uniform(k3, values.shape) < 0.5
+        bits = jnp.where(flip, coin, bits)
+    return bits.astype(jnp.uint8)
+
+
+def encode_threshold_bits(values: jnp.ndarray, thresholds: jnp.ndarray, rng,
+                          flip_prob: float = 0.0) -> jnp.ndarray:
+    """values: (n, f); thresholds: (t,) -> bits (n, f, t):  1[x <= thr]."""
+    bits = (values[..., None] <= thresholds)
+    if flip_prob > 0.0:
+        k1, k2 = jax.random.split(rng)
+        flip = jax.random.uniform(k1, bits.shape) < flip_prob
+        coin = jax.random.uniform(k2, bits.shape) < 0.5
+        bits = jnp.where(flip, coin, bits)
+    return bits.astype(jnp.uint8)
+
+
+def debias(bit_mean: jnp.ndarray, flip_prob: float) -> jnp.ndarray:
+    """Invert randomized response on an aggregated bit mean."""
+    if flip_prob <= 0.0:
+        return bit_mean
+    return jnp.clip((bit_mean - flip_prob / 2.0) / (1.0 - flip_prob), 0.0, 1.0)
+
+
+def estimate_mean(bits: jnp.ndarray, lo: float, hi: float,
+                  flip_prob: float = 0.0) -> jnp.ndarray:
+    """bits: (n_devices, n_features) -> unbiased mean estimate per feature."""
+    m = debias(bits.astype(jnp.float32).mean(0), flip_prob)
+    return lo + m * (hi - lo)
+
+
+def estimate_cdf(bits: jnp.ndarray, flip_prob: float = 0.0) -> jnp.ndarray:
+    """bits: (n, f, t) threshold bits -> monotone CDF estimate (f, t)."""
+    cdf = debias(bits.astype(jnp.float32).mean(0), flip_prob)
+    # enforce monotonicity (isotonic projection via running max)
+    return jax.lax.associative_scan(jnp.maximum, cdf, axis=-1)
+
+
+def percentile_from_cdf(cdf: jnp.ndarray, thresholds: jnp.ndarray,
+                        q: float) -> jnp.ndarray:
+    """Linear-interpolated q-quantile (q in [0,1]) from a threshold-grid CDF."""
+    t = thresholds.astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(cdf < q, axis=-1), 0, len(thresholds) - 1)
+    idx0 = jnp.maximum(idx - 1, 0)
+    c0 = jnp.take_along_axis(cdf, idx0[..., None], -1)[..., 0]
+    c1 = jnp.take_along_axis(cdf, idx[..., None], -1)[..., 0]
+    t0, t1 = t[idx0], t[idx]
+    w = jnp.where(c1 > c0, (q - c0) / jnp.maximum(c1 - c0, 1e-9), 0.0)
+    return t0 + jnp.clip(w, 0.0, 1.0) * (t1 - t0)
+
+
+def estimate_variance(values_shape_hint: None = None, *, mean_bits=None,
+                      sq_bits=None, lo: float = 0.0, hi: float = 1.0,
+                      flip_prob: float = 0.0) -> jnp.ndarray:
+    """Var from two bit queries: E[x] and E[x^2] (x^2 in [lo^2-ish, hi^2])."""
+    m = estimate_mean(mean_bits, lo, hi, flip_prob)
+    hi2 = max(abs(lo), abs(hi)) ** 2
+    m2 = estimate_mean(sq_bits, 0.0, hi2, flip_prob)
+    return jnp.maximum(m2 - jnp.square(m), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Interactive bisection (log2(range)/round precision per extra round)
+# ---------------------------------------------------------------------------
+def bisect_percentile(sample_fn, lo: float, hi: float, q: float,
+                      rounds: int, rng, flip_prob: float = 0.0) -> float:
+    """Multi-round single-threshold protocol: each round asks a fresh device
+    sample for 1[x <= mid] bits and halves the bracket.
+
+    sample_fn(rng) -> (n_devices,) values from a *fresh* random device cohort
+    (the paper: statistics devices are selected independently of training).
+    """
+    for r in range(rounds):
+        mid = 0.5 * (lo + hi)
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, r))
+        vals = sample_fn(k1)
+        bits = encode_threshold_bits(vals[:, None], jnp.asarray([mid]), k2, flip_prob)
+        frac = float(debias(bits.astype(jnp.float32).mean(0), flip_prob)[0, 0])
+        if frac < q:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

@@ -1,0 +1,75 @@
+"""Label balancing via federated analytics (challenge 1, paper Fig. 3).
+
+The label is "treated as yet another feature": a bit query over a random
+device cohort estimates the positive-class ratio DURING TRAINING; the
+estimate is exported to the metadata store, and the Orchestrator converts it
+into a per-class sample drop-off rate applied at submission time on device.
+
+The paper's key lesson: the server-side-only static ratio fails under
+training-time uncertainty (dropout, battery), so the ratio must be refreshed
+from federated analytics as rounds progress.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analytics import bitagg
+
+
+@dataclass(frozen=True)
+class DropoffPolicy:
+    """Per-class keep probabilities enforcing a target label ratio."""
+
+    keep_pos: float
+    keep_neg: float
+    estimated_pos_ratio: float
+
+    def keep_probability(self, label) -> jnp.ndarray:
+        label = jnp.asarray(label, jnp.float32)
+        return label * self.keep_pos + (1.0 - label) * self.keep_neg
+
+
+def estimate_label_ratio(labels: jnp.ndarray, rng, flip_prob: float = 0.0) -> float:
+    """labels: (n_devices,) in {0,1} from an FA cohort -> P(y=1) estimate.
+
+    The label bit IS the message (no Bernoulli encoding needed); randomized
+    response still protects each device's true label.
+    """
+    bits = labels.astype(jnp.uint8)[:, None]
+    if flip_prob > 0.0:
+        k1, k2 = jax.random.split(rng)
+        flip = jax.random.uniform(k1, bits.shape) < flip_prob
+        coin = jax.random.uniform(k2, bits.shape) < 0.5
+        bits = jnp.where(flip, coin.astype(jnp.uint8), bits)
+    return float(bitagg.debias(bits.astype(jnp.float32).mean(), flip_prob))
+
+
+def policy_from_ratio(pos_ratio: float, target_pos_ratio: float = 0.5) -> DropoffPolicy:
+    """Down-sample the majority class to hit the target ratio in expectation.
+
+    keep_minority = 1; keep_majority chosen so that after drop-off
+    P(y=1 | kept) == target.
+    """
+    pos_ratio = min(max(pos_ratio, 1e-6), 1.0 - 1e-6)
+    t = target_pos_ratio
+    # odds needed: keep_pos * p / (keep_neg * (1-p)) == t / (1-t)
+    if pos_ratio < t:  # positives are the minority
+        keep_pos = 1.0
+        keep_neg = (pos_ratio / (1.0 - pos_ratio)) * ((1.0 - t) / t)
+    else:
+        keep_neg = 1.0
+        keep_pos = ((1.0 - pos_ratio) / pos_ratio) * (t / (1.0 - t))
+    return DropoffPolicy(min(keep_pos, 1.0), min(keep_neg, 1.0), pos_ratio)
+
+
+def apply_dropoff(labels: jnp.ndarray, policy: DropoffPolicy, rng) -> jnp.ndarray:
+    """Sample-submission weights (1 keep / 0 drop) for a training cohort.
+
+    Used as the `weight` entry of the round-step batch, so dropped samples
+    stay shape-stable (the device simply never submits).
+    """
+    keep_p = policy.keep_probability(labels)
+    return (jax.random.uniform(rng, labels.shape) < keep_p).astype(jnp.float32)

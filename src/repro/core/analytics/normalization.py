@@ -1,0 +1,64 @@
+"""Feature normalization from federated-analytics statistics (challenge 6).
+
+In server ML, normalization factors come from the training set; here they are
+*learned globally* via the bit protocol over a random device sample, inside
+the trusted boundary.  Supported schemes:
+  - zscore: (x - mean) / std        (mean + second-moment bit queries)
+  - minmax: (x - p01) / (p99 - p01) (robust percentile scaling from CDF bits)
+
+The resulting ``NormalizationFactors`` are exported to the (untrusted)
+metadata store and pushed to devices, where the Signal Transformer applies
+them — see core/signal_transformer.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analytics import bitagg
+
+
+@dataclass(frozen=True)
+class NormalizationFactors:
+    scheme: str  # zscore | minmax
+    shift: np.ndarray  # (n_features,)
+    scale: np.ndarray  # (n_features,)
+
+    def apply(self, x):
+        return (x - jnp.asarray(self.shift)) / jnp.asarray(self.scale)
+
+
+def learn_zscore(feature_sample: jnp.ndarray, lo: float, hi: float, rng,
+                 flip_prob: float = 0.0) -> NormalizationFactors:
+    """feature_sample: (n_devices, n_features) from the FA device cohort.
+
+    Two bit queries per feature (x, then x^2); unbiased under randomized
+    response.
+    """
+    k1, k2 = jax.random.split(rng)
+    mean_bits = bitagg.encode_mean_bits(feature_sample, lo, hi, k1, flip_prob)
+    hi2 = max(abs(lo), abs(hi)) ** 2
+    sq_bits = bitagg.encode_mean_bits(jnp.square(feature_sample), 0.0, hi2, k2,
+                                      flip_prob)
+    mean = bitagg.estimate_mean(mean_bits, lo, hi, flip_prob)
+    var = bitagg.estimate_variance(mean_bits=mean_bits, sq_bits=sq_bits,
+                                   lo=lo, hi=hi, flip_prob=flip_prob)
+    std = jnp.sqrt(jnp.maximum(var, 1e-6))
+    return NormalizationFactors("zscore", np.asarray(mean), np.asarray(std))
+
+
+def learn_minmax(feature_sample: jnp.ndarray, lo: float, hi: float, rng,
+                 n_thresholds: int = 64, q_lo: float = 0.01, q_hi: float = 0.99,
+                 flip_prob: float = 0.0) -> NormalizationFactors:
+    """Robust percentile scaling from one threshold-grid bit query."""
+    thresholds = jnp.linspace(lo, hi, n_thresholds)
+    bits = bitagg.encode_threshold_bits(feature_sample, thresholds, rng, flip_prob)
+    cdf = bitagg.estimate_cdf(bits, flip_prob)
+    p_lo = bitagg.percentile_from_cdf(cdf, thresholds, q_lo)
+    p_hi = bitagg.percentile_from_cdf(cdf, thresholds, q_hi)
+    scale = jnp.maximum(p_hi - p_lo, 1e-6)
+    return NormalizationFactors("minmax", np.asarray(p_lo), np.asarray(scale))

@@ -1,0 +1,74 @@
+"""Synthetic device population — the fleet the control plane orchestrates.
+
+Models the resource heterogeneity the paper's eligibility heuristics guard
+against: battery level, charging, network type, free storage, app version
+(slow release cycles: versions follow a long-tailed adoption curve) and
+device speed (for the async-FL wall-clock simulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class DeviceState:
+    device_id: int
+    app_version: int
+    battery: float  # 0..1
+    charging: bool
+    on_wifi: bool
+    storage_free_mb: float
+    speed: float  # local-train seconds for one round
+    last_participation_round: int = -(10 ** 9)
+    alive: bool = True  # comes and goes (connectivity)
+
+
+class DevicePopulation:
+    """N simulated devices with an evolving resource state."""
+
+    def __init__(self, n: int, seed: int = 0, latest_app_version: int = 10):
+        self.rs = np.random.RandomState(seed)
+        self.latest_app_version = latest_app_version
+        # long-tailed version adoption: most on recent, a tail far behind
+        versions = latest_app_version - self.rs.geometric(p=0.45, size=n).clip(1, 9)
+        self.devices: List[DeviceState] = [
+            DeviceState(
+                device_id=i,
+                app_version=int(versions[i]),
+                battery=float(self.rs.uniform(0.05, 1.0)),
+                charging=bool(self.rs.uniform() < 0.3),
+                on_wifi=bool(self.rs.uniform() < 0.6),
+                storage_free_mb=float(self.rs.lognormal(6.0, 1.0)),
+                speed=float(np.exp(self.rs.normal(2.5, 0.8))),
+            )
+            for i in range(n)
+        ]
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def step(self) -> None:
+        """Advance one round of world time: battery drain/charge, churn."""
+        for d in self.devices:
+            if d.charging:
+                d.battery = min(1.0, d.battery + self.rs.uniform(0.0, 0.2))
+                if d.battery > 0.95 and self.rs.uniform() < 0.5:
+                    d.charging = False
+            else:
+                d.battery = max(0.0, d.battery - self.rs.uniform(0.0, 0.1))
+                if d.battery < 0.3 and self.rs.uniform() < 0.4:
+                    d.charging = True
+            if self.rs.uniform() < 0.1:
+                d.on_wifi = not d.on_wifi
+            d.alive = self.rs.uniform() > 0.05  # transient connectivity loss
+            if self.rs.uniform() < 0.02 and d.app_version < self.latest_app_version:
+                d.app_version += 1  # slow trickle of app updates
+
+    def sample(self, k: int) -> List[DeviceState]:
+        idx = self.rs.choice(len(self.devices), size=min(k, len(self.devices)),
+                             replace=False)
+        return [self.devices[i] for i in idx]

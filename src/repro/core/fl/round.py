@@ -1,0 +1,233 @@
+"""The synchronous DP-FL round step — the paper's training technique, jitted.
+
+One round =
+  1. every cohort client runs K local SGD steps on its on-device samples
+     (the paper's regime: ~one sample per device, so per-client == per-example);
+  2. each client's model delta is L2-clipped (DP-SGD) and, in ``device`` noise
+     placement, locally noised;
+  3. deltas are fixed-point quantized and summed with wraparound int32
+     arithmetic — bit-identical to the pairwise-masked secure-aggregation sum
+     (masks cancel; see core/fl/secure_agg.py), lowering to one big integer
+     all-reduce over the (pod, data) axes;
+  4. in ``tee`` placement, Gaussian noise is added once to the decoded
+     aggregate inside the trusted boundary;
+  5. the server optimizer applies the noised mean delta to the global model.
+
+Two execution strategies over the cohort:
+  - ``client_parallel=True``: clients sharded over the `data` mesh axis,
+    vmapped grad per chunk — fast path for models whose full per-client delta
+    fits per-device (<~8B params with TP16).
+  - ``client_parallel=False``: sequential scan over clients; each client's
+    single sequence is itself sharded (sequence/FSDP parallelism) so the
+    per-client delta is fully 2-D sharded — required for the >=16B archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fl import dp
+from repro.core.fl.server_opt import build_server_opt
+
+
+class FLState(NamedTuple):
+    params: Any
+    opt_state: Any
+    round_idx: jnp.ndarray  # int32 scalar
+
+
+def init_fl_state(params, fl_cfg) -> FLState:
+    opt = build_server_opt(fl_cfg)
+    return FLState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def build_client_update(loss_fn: Callable, fl_cfg) -> Callable:
+    """client_update(params, client_batch, rng) -> (delta_f32, first_loss)."""
+    K, lr = fl_cfg.local_steps, fl_cfg.local_lr
+
+    def client_update(params, cbatch, rng):
+        del rng  # local data order is fixed (single sample per device)
+
+        def one_step(p, _):
+            loss, g = jax.value_and_grad(
+                lambda q: loss_fn(q, cbatch)[0])(p)
+            p2 = jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32) - lr * b.astype(jnp.float32)
+                              ).astype(a.dtype), p, g)
+            return p2, loss
+
+        pK, losses = jax.lax.scan(one_step, params, None, length=K)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), pK, params)
+        return delta, losses[0]
+
+    return client_update
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point secure-aggregation encoding inside the round step
+# ---------------------------------------------------------------------------
+def _sa_scale(fl_cfg, cohort_size: int) -> float:
+    """Fixed-point scale such that a cohort-sized sum cannot wrap int32.
+
+    Effective per-client levels = (2^(bits-1)-1)/cohort - 1 — the field must
+    hold the sum including the stochastic-rounding carry bit, exactly as in
+    deployed secure aggregation.
+    """
+    levels = (2 ** (fl_cfg.secure_agg_bits - 1) - 1) / cohort_size - 1.0
+    return max(levels, 1.0) / fl_cfg.secure_agg_range
+
+
+def _sa_encode(x: jnp.ndarray, scale: float, rng) -> jnp.ndarray:
+    xf = x.astype(jnp.float32) * scale
+    floor = jnp.floor(xf)
+    frac = xf - floor
+    bit = (jax.random.uniform(rng, x.shape) < frac).astype(jnp.float32)
+    return (floor + bit).astype(jnp.int32)
+
+
+def _sa_encode_tree(tree, scale: float, rng):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_sa_encode(x, scale, k) for x, k in zip(leaves, keys)])
+
+
+def _sa_decode_tree(tree, scale: float):
+    return jax.tree.map(lambda q: q.astype(jnp.float32) / scale, tree)
+
+
+# ---------------------------------------------------------------------------
+def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
+                     client_parallel: bool = True,
+                     clients_per_chunk: int = 0) -> Callable:
+    """Returns round_step(state, batch, rng) -> (state, metrics).
+
+    batch: pytree whose leaves have leading axis `cohort_size`
+           (per-client on-device data), plus optional 'weight' (cohort,)
+           from the Orchestrator's sample-submission control.
+    """
+    client_update = build_client_update(loss_fn, fl_cfg)
+    server = build_server_opt(fl_cfg)
+    use_secure_agg = fl_cfg.secure_agg_bits > 0
+    sa_scale = _sa_scale(fl_cfg, cohort_size) if use_secure_agg else 1.0
+    dev_noise = dp.noise_stddev(fl_cfg, cohort_size, "device") \
+        if fl_cfg.noise_placement == "device" else 0.0
+    tee_noise = dp.noise_stddev(fl_cfg, cohort_size, "tee") \
+        if fl_cfg.noise_placement == "tee" else 0.0
+
+    if clients_per_chunk <= 0:
+        clients_per_chunk = cohort_size if client_parallel else 1
+    m = clients_per_chunk
+    assert cohort_size % m == 0
+    n_chunks = cohort_size // m
+
+    def one_client(params, cbatch, rng):
+        delta, loss = client_update(params, cbatch, rng)
+        delta, nrm, was_clipped = dp.clip_update(delta, fl_cfg.clip_norm)
+        if dev_noise > 0.0:
+            delta = dp.add_noise(delta, jax.random.fold_in(rng, 1), dev_noise)
+        return delta, loss, nrm, was_clipped
+
+    def round_step(state: FLState, batch, rng):
+        params = state.params
+        weights = batch.get("weight")
+        if weights is None:
+            weights = jnp.ones((cohort_size,), jnp.float32)
+        batch = {k: v for k, v in batch.items() if k != "weight"}
+        # reshape cohort -> (n_chunks, m, ...).  The (m, n_chunks)-then-swap
+        # order keeps a cohort axis that is block-sharded m-ways aligned with
+        # the chunk's client axis — no resharding collective is needed.
+        cbatches = jax.tree.map(
+            lambda x: x.reshape((m, n_chunks) + x.shape[1:]).swapaxes(0, 1), batch)
+        wchunks = weights.reshape(m, n_chunks).swapaxes(0, 1)
+        rngs = jax.random.split(rng, n_chunks * m).reshape(n_chunks, m, 2)
+
+        acc_dtype = jnp.int32 if use_secure_agg else jnp.float32
+        deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
+        if deferred:
+            # per-client-slot partial accumulators: slot axis shards like the
+            # client axis, so the chunk-scan accumulation is collective-free
+            # and the cross-device reduction happens ONCE after the scan.
+            acc0 = jax.tree.map(
+                lambda x: jnp.zeros((m,) + x.shape, acc_dtype), params)
+        else:
+            acc0 = jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dtype), params)
+        stats0 = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+        def chunk_body(carry, xs):
+            acc, (loss_s, norm_s, clip_s, w_s) = carry
+            cbatch, crng, w = xs
+
+            if m == 1:
+                squeezed = jax.tree.map(lambda x: x[0], cbatch)
+                delta, loss, nrm, was_clipped = one_client(params, squeezed, crng[0])
+                w0 = w[0]
+                delta = jax.tree.map(lambda d: d * w0, delta)
+                if use_secure_agg:
+                    enc = _sa_encode_tree(delta, sa_scale,
+                                          jax.random.fold_in(crng[0], 2))
+                else:
+                    enc = delta
+                acc = jax.tree.map(lambda a, e: a + e, acc, enc)
+                stats = (loss_s + loss * w0, norm_s + nrm * w0,
+                         clip_s + was_clipped.astype(jnp.float32) * w0, w_s + w0)
+            else:
+                deltas, losses, nrms, clips = jax.vmap(
+                    one_client, in_axes=(None, 0, 0))(params, cbatch, crng)
+                deltas = jax.tree.map(
+                    lambda d: d * w.reshape((m,) + (1,) * (d.ndim - 1)), deltas)
+                if use_secure_agg:
+                    encs = jax.vmap(_sa_encode_tree, in_axes=(0, None, 0))(
+                        deltas, sa_scale, crng)
+                else:
+                    encs = deltas
+                if deferred:
+                    acc = jax.tree.map(lambda a, e: a + e.astype(a.dtype),
+                                       acc, encs)
+                else:
+                    acc = jax.tree.map(lambda a, e: a + e.sum(0).astype(a.dtype),
+                                       acc, encs)
+                stats = (loss_s + (losses * w).sum(), norm_s + (nrms * w).sum(),
+                         clip_s + (clips.astype(jnp.float32) * w).sum(),
+                         w_s + w.sum())
+            return (acc, stats), None
+
+        (acc, (loss_s, norm_s, clip_s, w_s)), _ = jax.lax.scan(
+            chunk_body, (acc0, stats0), (cbatches, rngs, wchunks))
+
+        w_total = jnp.maximum(w_s, 1e-9)
+        if deferred:
+            acc = jax.tree.map(lambda a: a.sum(0), acc)  # one reduction/round
+        if use_secure_agg:
+            agg = _sa_decode_tree(acc, sa_scale)
+        else:
+            agg = acc
+        mean_delta = jax.tree.map(lambda a: a / w_total, agg)
+
+        if tee_noise > 0.0:
+            # central DP: one Gaussian draw on the aggregate inside the TEE
+            mean_delta = dp.add_noise(
+                mean_delta, jax.random.fold_in(rng, 0xDEE), tee_noise * cohort_size / w_total)
+
+        new_params, new_opt = server.apply(params, state.opt_state, mean_delta)
+        metrics = {
+            "loss": loss_s / w_total,
+            "update_norm": norm_s / w_total,
+            "clip_fraction": clip_s / w_total,
+            "participation": w_s / cohort_size,
+            "round": state.round_idx,
+        }
+        return FLState(new_params, new_opt, state.round_idx + 1), metrics
+
+    return round_step
+
+
+def rounds_to_epsilon(fl_cfg, cohort_size: int, population: int, rounds: int) -> float:
+    """Convenience wrapper over the RDP accountant (see accountant.py)."""
+    from repro.core.fl.accountant import compute_epsilon
+    q = cohort_size / population
+    return compute_epsilon(q, fl_cfg.noise_multiplier, rounds, fl_cfg.dp_delta)

@@ -1,0 +1,88 @@
+"""Server-side optimizers: the aggregated client delta is a pseudo-gradient.
+
+FedAvg / FedAvgM / FedAdam / FedAdagrad (Reddi et al. 2021 semantics); the
+paper uses weighted-averaging FedAvg, the adaptive variants are first-class
+options for the hillclimbs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerOpt(NamedTuple):
+    init: Callable[[Any], Any]
+    apply: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (params, state, delta)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def build_server_opt(fl_cfg) -> ServerOpt:
+    lr = fl_cfg.server_lr
+    b1, b2, eps = fl_cfg.server_beta1, fl_cfg.server_beta2, fl_cfg.server_eps
+    kind = fl_cfg.server_opt
+
+    if kind == "fedavg":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32)}
+
+        def apply(params, state, delta):
+            new = jax.tree.map(
+                lambda p, d: (p.astype(jnp.float32) + lr * d.astype(jnp.float32)
+                              ).astype(p.dtype), params, delta)
+            return new, {"step": state["step"] + 1}
+
+    elif kind == "fedavgm":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32), "m": _zeros_like_f32(params)}
+
+        def apply(params, state, delta):
+            m = jax.tree.map(lambda m_, d: b1 * m_ + d.astype(jnp.float32),
+                             state["m"], delta)
+            new = jax.tree.map(
+                lambda p, m_: (p.astype(jnp.float32) + lr * m_).astype(p.dtype),
+                params, m)
+            return new, {"step": state["step"] + 1, "m": m}
+
+    elif kind == "fedadam":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32), "m": _zeros_like_f32(params),
+                    "v": _zeros_like_f32(params)}
+
+        def apply(params, state, delta):
+            t = state["step"] + 1
+            tf = t.astype(jnp.float32)
+            m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+                             state["m"], delta)
+            v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) *
+                             jnp.square(d.astype(jnp.float32)), state["v"], delta)
+            mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** tf), m)
+            vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** tf), v)
+            new = jax.tree.map(
+                lambda p, m_, v_: (p.astype(jnp.float32) +
+                                   lr * m_ / (jnp.sqrt(v_) + eps)).astype(p.dtype),
+                params, mh, vh)
+            return new, {"step": t, "m": m, "v": v}
+
+    elif kind == "fedadagrad":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32), "v": _zeros_like_f32(params)}
+
+        def apply(params, state, delta):
+            v = jax.tree.map(lambda v_, d: v_ + jnp.square(d.astype(jnp.float32)),
+                             state["v"], delta)
+            new = jax.tree.map(
+                lambda p, d, v_: (p.astype(jnp.float32) +
+                                  lr * d.astype(jnp.float32) /
+                                  (jnp.sqrt(v_) + eps)).astype(p.dtype),
+                params, delta, v)
+            return new, {"step": state["step"] + 1, "v": v}
+
+    else:
+        raise ValueError(kind)
+
+    return ServerOpt(init, apply)

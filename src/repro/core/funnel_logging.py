@@ -1,0 +1,88 @@
+"""De-identified funnel logging (paper §Logging).
+
+Dataflow is divided into PHASES, each into STEPS.  The conservation invariant
+the paper uses for debugging: successful + failed step outcomes of phase k
+must add up to the successes of phase k-1.  Events carry only an ephemeral
+session id (random, unlinkable to a user) — never a device/user identifier.
+"""
+from __future__ import annotations
+
+import secrets
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+def new_session_id() -> str:
+    """Ephemeral random id, regenerated per product-surface session."""
+    return secrets.token_hex(8)
+
+
+@dataclass(frozen=True)
+class FunnelEvent:
+    session_id: str
+    phase: str
+    step: str
+    success: bool
+    detail: str = ""  # must never contain identifying information
+
+
+_FORBIDDEN_KEYS = ("device_id", "user", "email", "phone", "label", "feature")
+
+
+class FunnelLogger:
+    """Server-side sink of de-identified events + integrity checking."""
+
+    def __init__(self, phases: List[str]):
+        self.phases = list(phases)
+        self.events: List[FunnelEvent] = []
+        self._dedup: set = set()
+
+    def log(self, session_id: str, phase: str, step: str, success: bool,
+            detail: str = "") -> None:
+        if phase not in self.phases:
+            raise ValueError(f"unknown phase {phase!r}")
+        low = detail.lower()
+        for bad in _FORBIDDEN_KEYS:
+            if bad in low:
+                raise ValueError(
+                    f"privacy violation: detail mentions {bad!r} — logging of "
+                    "identifying information is forbidden")
+        key = (session_id, phase, step)
+        if key in self._dedup:  # session-scoped dedup across use cases
+            return
+        self._dedup.add(key)
+        self.events.append(FunnelEvent(session_id, phase, step, success, detail))
+
+    # --- analysis ---------------------------------------------------------
+    def counts(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {
+            p: {"success": 0, "failure": 0} for p in self.phases}
+        for e in self.events:
+            out[e.phase]["success" if e.success else "failure"] += 1
+        return out
+
+    def dropoff_report(self) -> List[Tuple[str, int, int, float]]:
+        """(phase, entered, succeeded, drop_rate) per phase, in order."""
+        c = self.counts()
+        report = []
+        prev_success: Optional[int] = None
+        for p in self.phases:
+            entered = c[p]["success"] + c[p]["failure"]
+            ok = c[p]["success"]
+            rate = 0.0 if entered == 0 else 1.0 - ok / entered
+            report.append((p, entered, ok, rate))
+            prev_success = ok
+        return report
+
+    def check_conservation(self) -> List[str]:
+        """Funnel integrity: phase k entries == phase k-1 successes."""
+        problems = []
+        c = self.counts()
+        for prev, cur in zip(self.phases[:-1], self.phases[1:]):
+            entered = c[cur]["success"] + c[cur]["failure"]
+            if entered > c[prev]["success"]:
+                problems.append(
+                    f"phase {cur!r} saw {entered} entries but {prev!r} only "
+                    f"succeeded {c[prev]['success']} times")
+        return problems

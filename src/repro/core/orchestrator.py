@@ -1,0 +1,133 @@
+"""Orchestrator — coordinates everything on device outside local training.
+
+Paper tasks: (1) scheduling, (2) eligibility checks, (3) server-to-device
+data-flow init, (4) sample-submission control (label balancing), and
+(5) funnel logging / perf metrics.  Plus the server-side metadata store the
+devices consult (eligibility criteria, model version, label stats, transform
+specs, data purpose).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.analytics.label_balance import DropoffPolicy, policy_from_ratio
+from repro.core.device_sim import DevicePopulation, DeviceState
+from repro.core.funnel_logging import FunnelLogger, new_session_id
+from repro.core.signal_transformer import TransformSpec
+
+FUNNEL_PHASES = [
+    "scheduled", "eligibility", "data_init", "feature_extraction",
+    "training", "submission",
+]
+
+
+@dataclass(frozen=True)
+class EligibilityCriteria:
+    """Served as metadata; verified ON DEVICE (never with uploaded state)."""
+
+    min_battery: float = 0.4
+    require_charging: bool = True
+    require_wifi: bool = True
+    min_app_version: int = 0
+    min_storage_mb: float = 200.0
+    cooldown_rounds: int = 5  # participation rate-limit per device
+
+
+class MetadataStore:
+    """Server-side data/metadata serving endpoints (untrusted zone —
+    holds only aggregates and configuration, never user data)."""
+
+    def __init__(self):
+        self._kv: Dict[str, Any] = {
+            "model_version": 0,
+            "eligibility": EligibilityCriteria(),
+            "label_pos_ratio": None,  # refreshed from federated analytics
+            "normalization": None,
+            "transform_spec": None,
+            "purpose": "fl-training",
+        }
+
+    def get(self, key: str) -> Any:
+        return self._kv[key]
+
+    def put(self, key: str, value: Any) -> None:
+        self._kv[key] = value
+
+
+class Orchestrator:
+    def __init__(self, population: DevicePopulation, metadata: MetadataStore,
+                 logger: Optional[FunnelLogger] = None, seed: int = 0):
+        self.population = population
+        self.metadata = metadata
+        self.logger = logger or FunnelLogger(FUNNEL_PHASES)
+        self.rs = np.random.RandomState(seed)
+        self.round_idx = 0
+
+    # --- eligibility (the carefully crafted heuristics) --------------------
+    def check_eligibility(self, d: DeviceState,
+                          c: Optional[EligibilityCriteria] = None) -> Tuple[bool, str]:
+        c = c or self.metadata.get("eligibility")
+        if not d.alive:
+            return False, "offline"
+        if d.battery < c.min_battery:
+            return False, "battery"
+        if c.require_charging and not d.charging:
+            return False, "not_charging"
+        if c.require_wifi and not d.on_wifi:
+            return False, "no_wifi"
+        if d.app_version < c.min_app_version:
+            return False, "app_version"
+        if d.storage_free_mb < c.min_storage_mb:
+            return False, "storage"
+        if self.round_idx - d.last_participation_round < c.cooldown_rounds:
+            return False, "cooldown"
+        return True, "ok"
+
+    # --- cohort selection ---------------------------------------------------
+    def select_cohort(self, cohort_size: int, over_select: float = 2.0
+                      ) -> List[DeviceState]:
+        """Schedule candidates, run on-device checks, return participants."""
+        candidates = self.population.sample(int(cohort_size * over_select))
+        cohort: List[DeviceState] = []
+        for d in candidates:
+            sid = new_session_id()
+            self.logger.log(sid, "scheduled", "selected", True)
+            ok, reason = self.check_eligibility(d)
+            self.logger.log(sid, "eligibility", reason, ok)
+            if not ok:
+                continue
+            self.logger.log(sid, "data_init", "metadata_fetch", True)
+            cohort.append(d)
+            if len(cohort) >= cohort_size:
+                break
+        return cohort
+
+    # --- sample submission control (label balancing) ------------------------
+    def submission_policy(self, target_pos_ratio: float = 0.5) -> DropoffPolicy:
+        """Drop-off rate from the MOST RECENT FA label-ratio estimate."""
+        ratio = self.metadata.get("label_pos_ratio")
+        if ratio is None:
+            return DropoffPolicy(1.0, 1.0, 0.5)  # no FA estimate yet: keep all
+        return policy_from_ratio(float(ratio), target_pos_ratio)
+
+    def control_submission(self, label: int, policy: DropoffPolicy) -> bool:
+        keep_p = float(policy.keep_pos if label == 1 else policy.keep_neg)
+        return bool(self.rs.uniform() < keep_p)
+
+    # --- round bookkeeping ---------------------------------------------------
+    def finish_round(self, participants: List[DeviceState]) -> None:
+        for d in participants:
+            d.last_participation_round = self.round_idx
+        self.round_idx += 1
+        self.population.step()
+
+    def push_transform_spec(self, spec: TransformSpec) -> None:
+        """Server push without an app release (TorchScript analogue)."""
+        current = self.metadata.get("transform_spec")
+        if current is not None and spec.version <= current.version:
+            raise ValueError("transform spec versions must increase")
+        self.metadata.put("transform_spec", spec)

@@ -1,0 +1,127 @@
+"""Signal Transformer — the on-device ML-infra component (paper §Architecture).
+
+Transforms raw device signals into model features:
+  - local signal transformation (log1p/clip/bucketize/...)
+  - local feature normalization with globally-learned FA factors
+  - server-side feature injection (feature origin 1)
+  - local value overrides (feature origin 3: device value wins when present)
+
+Transform programs are *data*, not code: a versioned list of primitive ops
+(the TorchScript-push analogue) that the server can push to devices without
+an app release — collapsing the feature dev cycle from weeks to hours
+(paper §Slow release cycles).  Programs are executed by a tiny interpreter
+over jnp arrays, so a pushed program runs identically on-device (here) and
+in server-side validation.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TransformSpec:
+    """Versioned, serializable transform program."""
+
+    version: int
+    ops: Sequence[Dict[str, Any]]  # [{'op': 'log1p', 'field': 'x'}, ...]
+    min_app_version: int = 0  # critical functionality stays version-independent
+
+    def to_json(self) -> str:
+        return json.dumps({"version": self.version, "ops": list(self.ops),
+                           "min_app_version": self.min_app_version})
+
+    @staticmethod
+    def from_json(s: str) -> "TransformSpec":
+        d = json.loads(s)
+        return TransformSpec(d["version"], d["ops"], d.get("min_app_version", 0))
+
+
+_PRIMITIVES = ("identity", "log1p", "abs", "clip", "scale", "zscore", "minmax",
+               "bucketize", "inject_server", "override_with_local", "select")
+
+
+def validate_spec(spec: TransformSpec) -> None:
+    for op in spec.ops:
+        if op.get("op") not in _PRIMITIVES:
+            raise ValueError(f"unknown transform primitive: {op.get('op')!r}")
+        if "field" not in op and op["op"] != "select":
+            raise ValueError(f"op missing 'field': {op}")
+
+
+class SignalTransformer:
+    """On-device interpreter for pushed TransformSpecs."""
+
+    def __init__(self, spec: TransformSpec):
+        validate_spec(spec)
+        self.spec = spec
+
+    def apply(self, signals: Dict[str, jnp.ndarray],
+              server_features: Optional[Dict[str, jnp.ndarray]] = None
+              ) -> Dict[str, jnp.ndarray]:
+        """signals: raw on-device values; server_features: injected via the
+        server-to-device data flow.  Returns the feature dict."""
+        env: Dict[str, jnp.ndarray] = {k: jnp.asarray(v) for k, v in signals.items()}
+        server = server_features or {}
+        for op in self.spec.ops:
+            kind = op["op"]
+            f = op.get("field")
+            if kind == "identity":
+                pass
+            elif kind == "log1p":
+                env[f] = jnp.log1p(jnp.maximum(env[f], 0.0))
+            elif kind == "abs":
+                env[f] = jnp.abs(env[f])
+            elif kind == "clip":
+                env[f] = jnp.clip(env[f], op["lo"], op["hi"])
+            elif kind == "scale":
+                env[f] = env[f] * op["factor"]
+            elif kind == "zscore":
+                env[f] = (env[f] - op["mean"]) / max(op["std"], 1e-6)
+            elif kind == "minmax":
+                env[f] = (env[f] - op["lo"]) / max(op["hi"] - op["lo"], 1e-6)
+            elif kind == "bucketize":
+                bounds = jnp.asarray(op["boundaries"], jnp.float32)
+                env[f] = jnp.searchsorted(bounds, env[f]).astype(jnp.float32)
+            elif kind == "inject_server":
+                # feature origin (1): server-side value shipped to device
+                env[f] = jnp.asarray(server.get(f, op.get("default", 0.0)))
+            elif kind == "override_with_local":
+                # feature origin (3): device-local value wins when available
+                local = op["local_field"]
+                if local in signals:
+                    env[f] = jnp.asarray(signals[local])
+                elif f not in env:
+                    env[f] = jnp.asarray(server.get(f, op.get("default", 0.0)))
+            elif kind == "select":
+                order = op["fields"]
+                return {k: env[k] for k in order}
+        return env
+
+    def feature_vector(self, signals, server_features=None) -> jnp.ndarray:
+        """Stacked (n_features,) vector in spec `select` order (model input)."""
+        feats = self.apply(signals, server_features)
+        return jnp.stack([jnp.asarray(v, jnp.float32).reshape(()) if jnp.ndim(v) == 0
+                          else jnp.asarray(v, jnp.float32).reshape(-1)[0]
+                          for v in feats.values()])
+
+
+def spec_with_normalization(spec: TransformSpec, factors, fields: Sequence[str],
+                            new_version: int) -> TransformSpec:
+    """Re-issue a spec with FA-learned normalization baked in (server push)."""
+    ops = [dict(o) for o in spec.ops if o["op"] not in ("zscore", "minmax")]
+    select = [o for o in ops if o["op"] == "select"]
+    ops = [o for o in ops if o["op"] != "select"]
+    for i, f in enumerate(fields):
+        if factors.scheme == "zscore":
+            ops.append({"op": "zscore", "field": f,
+                        "mean": float(factors.shift[i]), "std": float(factors.scale[i])})
+        else:
+            ops.append({"op": "minmax", "field": f, "lo": float(factors.shift[i]),
+                        "hi": float(factors.shift[i] + factors.scale[i])})
+    ops.extend(select)
+    return TransformSpec(new_version, ops, spec.min_app_version)

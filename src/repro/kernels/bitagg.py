@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: federated-analytics bit-vote aggregation.
+
+counts[f, t] = sum_n RR( values[n, f] <= thresholds[t] ) — the Federated
+Analytics Server's whole job, fused: threshold compare, randomized response
+(host-provided uniforms), and the device-axis reduction, tiled so the (N, F)
+value block and the (F_blk, T) count tile stay in VMEM.  The device axis is
+the innermost grid dim and accumulates into the same output tile, so counts
+never round-trip HBM per device block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_F = 8
+
+
+def _bitagg_kernel(vals_ref, thr_ref, u_ref, out_ref, *, flip_prob: float):
+    n = pl.program_id(1)  # device-block index (innermost: accumulate)
+
+    @pl.when(n == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...].astype(jnp.float32)  # (Nb, Fb)
+    thr = thr_ref[...].astype(jnp.float32)  # (T,)
+    u = u_ref[...]  # (Nb, Fb, T)
+    bits = (vals[..., None] <= thr[None, None, :]).astype(jnp.float32)
+    force1 = (u < flip_prob / 2.0).astype(jnp.float32)
+    keep = (u >= flip_prob).astype(jnp.float32)
+    rr = force1 + keep * bits  # randomized response
+    out_ref[...] += rr.sum(axis=0)  # (Fb, T)
+
+
+def bit_counts(values: jnp.ndarray, thresholds: jnp.ndarray,
+               uniforms: jnp.ndarray, flip_prob: float, *,
+               block_n: int = DEFAULT_BLOCK_N, block_f: int = DEFAULT_BLOCK_F,
+               interpret: bool = False) -> jnp.ndarray:
+    """values: (N, F); thresholds: (T,); uniforms: (N, F, T) -> counts (F, T)."""
+    N, F = values.shape
+    (T,) = thresholds.shape
+    block_n = min(block_n, N)
+    block_f = min(block_f, F)
+    assert N % block_n == 0 and F % block_f == 0
+    grid = (F // block_f, N // block_n)
+    kern = functools.partial(_bitagg_kernel, flip_prob=flip_prob)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_f), lambda f, n: (n, f)),
+            pl.BlockSpec((T,), lambda f, n: (0,)),
+            pl.BlockSpec((block_n, block_f, T), lambda f, n: (n, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_f, T), lambda f, n: (f, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, T), jnp.float32),
+        interpret=interpret,
+    )(values, thresholds, uniforms)

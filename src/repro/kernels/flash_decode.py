@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash decode — online-softmax single-token attention.
+
+Serving hot spot for the decode shapes (decode_32k / long_500k): one query
+token against a W-deep (ring-buffer) KV cache.  The cache is streamed through
+VMEM in S-blocks with the online-softmax recurrence, so the (H, W) score
+matrix never materializes; running (max, denom, acc) live in the output tiles
+which Pallas keeps resident across the innermost grid dimension.
+
+Grid: (batch, kv_head, W/block_s); block operands:
+  q    (rep, hd)    — the kv-head's query group (GQA)
+  k, v (block_s, hd)
+  slot (block_s,)   — absolute positions of cache slots (ring-buffer aware)
+MXU work is (rep x hd) @ (hd x block_s) per step — hd=128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 256
+_NEG = -1e30
+
+
+def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, slot_ref,
+                         o_ref, m_ref, l_ref, *, window: int):
+    s = pl.program_id(2)  # kv-block index (innermost)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (rep, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+    slot_pos = slot_ref[...]  # (bs,) int32
+    pos = pos_ref[0]
+
+    scores = q @ k.T  # (rep, bs)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        valid &= (pos - slot_pos) < window
+    scores = jnp.where(valid[None, :], scores, _NEG)
+
+    m_prev = m_ref[0, 0]  # (rep, 1)
+    m_new = jnp.maximum(m_prev[:, 0], scores.max(axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)  # (rep, 1)
+    p = jnp.exp(scores - m_new)  # (rep, bs)
+    l_ref[0, 0] = l_ref[0, 0] * alpha + p.sum(axis=1, keepdims=True)
+    o_ref[0, 0] = o_ref[0, 0] * alpha + p @ v
+    m_ref[0, 0] = m_new
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 slot_pos: jnp.ndarray, pos, *, window: int = 0,
+                 block_s: int = DEFAULT_BLOCK_S,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, hd) pre-scaled; k, v: (B, W, KV, hd); slot_pos: (W,) int32;
+    pos: scalar int32.  window=0 -> full causal cache.  Returns (B, H, hd) f32.
+    """
+    B, H, hd = q.shape
+    _, W, KV, _ = k.shape
+    rep = H // KV
+    block_s = min(block_s, W)
+    assert W % block_s == 0
+    qg = q.reshape(B, KV, rep, hd)
+    kt = k.swapaxes(1, 2)  # (B, KV, W, hd)
+    vt = v.swapaxes(1, 2)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    grid = (B, KV, W // block_s)
+    kern = functools.partial(_flash_decode_kernel, window=window)
+    out, _, _ = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, s: (0,)),
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, g, s: (b, g, s, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, g, s: (b, g, s, 0)),
+            pl.BlockSpec((block_s,), lambda b, g, s: (s,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, rep, 1), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, rep, 1), lambda b, g, s: (b, g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, rep, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kt, vt, slot_pos)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- dp_clip ---------------------------------------------------------------
+def sq_norms(deltas: jnp.ndarray) -> jnp.ndarray:
+    """deltas: (C, D) -> per-client sum of squares (C,) in f32."""
+    return jnp.sum(jnp.square(deltas.astype(jnp.float32)), axis=1)
+
+
+def clip_scale_accumulate(deltas: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """sum_c scales[c] * deltas[c] -> (D,) f32 (the clipped-update reduce)."""
+    return jnp.einsum("cd,c->d", deltas.astype(jnp.float32),
+                      scales.astype(jnp.float32))
+
+
+def dp_clip_reduce(deltas: jnp.ndarray, clip_norm: float) -> jnp.ndarray:
+    """Fused per-client clip + accumulate: the DP-SGD hot loop."""
+    nrm = jnp.sqrt(sq_norms(deltas))
+    scales = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, 1e-12))
+    return clip_scale_accumulate(deltas, scales)
+
+
+# --- secure_agg --------------------------------------------------------------
+def quantize_mask(x: jnp.ndarray, mask: jnp.ndarray, scale: float,
+                  uniforms: jnp.ndarray, value_range: float = None) -> jnp.ndarray:
+    """Fixed-point stochastic-round encode + additive mask (mod 2^32).
+
+    x: (D,) f32; mask: (D,) int32; uniforms: (D,) f32 in [0,1).
+    """
+    xf = x.astype(jnp.float32)
+    if value_range is not None:
+        xf = jnp.clip(xf, -value_range, value_range)
+    xf = xf * scale
+    floor = jnp.floor(xf)
+    bit = (uniforms < (xf - floor)).astype(jnp.float32)
+    q = (floor + bit).astype(jnp.int32)
+    return q + mask  # int32 wraparound
+
+
+def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) / scale
+
+
+# --- bitagg -------------------------------------------------------------------
+def bit_counts(values: jnp.ndarray, thresholds: jnp.ndarray,
+               uniforms: jnp.ndarray, flip_prob: float) -> jnp.ndarray:
+    """Threshold-bit vote counts with randomized response.
+
+    values: (N, F); thresholds: (T,); uniforms: (N, F, T) two-in-one draws —
+    u < flip_prob/2 forces 1, u in [flip_prob/2, flip_prob) forces 0.
+    Returns counts (F, T) f32.
+    """
+    bits = (values[..., None] <= thresholds).astype(jnp.float32)
+    force1 = (uniforms < flip_prob / 2.0).astype(jnp.float32)
+    keep = (uniforms >= flip_prob).astype(jnp.float32)
+    bits_rr = force1 + keep * bits
+    return bits_rr.sum(axis=0)
+
+
+# --- flash_decode -------------------------------------------------------------
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 slot_pos: jnp.ndarray, pos, window) -> jnp.ndarray:
+    """Single-token windowed decode attention (per batch row).
+
+    q: (H, hd) scaled queries; k, v: (W, KV, hd); slot_pos: (W,) int32;
+    pos: scalar int32.  GQA via head grouping.  Returns (H, hd) f32.
+    """
+    H, hd = q.shape
+    W, KV, _ = k.shape
+    rep = H // KV
+    qg = q.reshape(KV, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("grk,sgk->grs", qg, k.astype(jnp.float32))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    scores = jnp.where(valid[None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("grs,sgk->grk", probs, v.astype(jnp.float32))
+    return out.reshape(H, hd)

@@ -1,0 +1,30 @@
+"""Production meshes.  Functions, not module constants — importing this module
+never touches jax device state (device count is locked at first use)."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 (256 chips) per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over host devices for CPU integration tests."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def batch_axes(mesh):
+    """The axes a client/batch dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)

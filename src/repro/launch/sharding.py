@@ -1,0 +1,185 @@
+"""Sharding rules: param-path -> PartitionSpec for every architecture.
+
+Scheme (see DESIGN.md §Distribution design):
+  - tensor parallel (TP) on the `model` axis: attention heads, MLP hidden,
+    experts (expert parallelism), vocab;
+  - optional FSDP on the `data` axis (cfg.fsdp, the >=multi-B archs):
+    the non-TP matrix dimension shards over `data`;
+  - scanned stacks have a leading layer dimension (never sharded);
+  - a dimension gets a mesh axis only if its size divides the axis size
+    (e.g. kv=8 heads on a 16-way model axis stay replicated and the decode
+    path shards the cache *sequence* dimension instead — flash-decode).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return False
+    if isinstance(axis, tuple):
+        n = int(np.prod([mesh.shape[a] for a in axis]))
+    else:
+        n = mesh.shape.get(axis, 1)
+    return dim % n == 0 and n > 1
+
+
+def _maybe(dim: int, mesh, axis):
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def _leaf_spec(path_keys, leaf, mesh, tp, fsdp) -> P:
+    """Rule table keyed by the leaf's parameter name."""
+    name = path_keys[-1]
+    shape = leaf.shape
+    off = 1 if "scan" in path_keys else 0  # stacked layer dim leads
+
+    def spec(*axes):
+        axes = tuple(_maybe(shape[off + i], mesh, a) for i, a in enumerate(axes))
+        full = (None,) * off + axes
+        # never reuse a mesh axis across dims of one tensor
+        seen, out = set(), []
+        for a in full:
+            names = a if isinstance(a, tuple) else (a,)
+            if a is not None and any(n in seen for n in names):
+                out.append(None)
+            else:
+                out.append(a)
+                seen.update(n for n in names if n)
+        return P(*out)
+
+    d = len(shape) - off
+    if name in ("embed",):
+        return spec(tp, fsdp)
+    if name in ("unembed",):
+        return spec(fsdp, tp)
+    if name in ("pos_embed",):
+        return spec(None, None)
+    if name == "wq":
+        return spec(fsdp, tp, None)
+    if name in ("wk", "wv"):
+        return spec(fsdp, tp, None)
+    if name == "wo":
+        return spec(tp, None, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return spec(tp, None)
+    if name in ("w_in", "w_gate", "w_branch") and d == 2:
+        return spec(fsdp, tp)
+    if name == "w_out" and d == 2:
+        return spec(tp, fsdp)
+    if name in ("w_in", "w_gate") and d == 3:  # stacked experts (E, d, f)
+        if _fits(shape[off + 0], mesh, tp):
+            return spec(tp, fsdp, None)  # expert parallelism
+        return spec(None, fsdp, tp)  # few experts (e.g. shared): TP the hidden
+    if name == "w_out" and d == 3:  # (E, f, d)
+        if _fits(shape[off + 0], mesh, tp):
+            return spec(tp, None, fsdp)
+        return spec(None, tp, fsdp)
+    if name == "router":
+        return spec(fsdp, None)
+    if name == "in_proj":  # mamba (d, proj)
+        return spec(fsdp, tp)
+    if name == "out_proj":  # mamba (di, d)
+        return spec(tp, fsdp)
+    if name in ("w_a", "w_x"):  # rglru gates (r, r)
+        return spec(None, tp)
+    if name == "conv_w":
+        return spec(None, None)
+    # 1-D / small leaves (norms, biases, dt_bias, A_log, D, lambda, step...)
+    return P(*(None,) * len(shape))
+
+
+def param_specs(params, mesh, *, tp="model", fsdp_axis=None):
+    """Pytree of PartitionSpec mirroring `params`."""
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        return _leaf_spec(keys, leaf, mesh, tp, fsdp_axis)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params, mesh, *, tp="model", fsdp_axis=None):
+    specs = param_specs(params, mesh, tp=tp, fsdp_axis=fsdp_axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+def train_batch_specs(batch_sds, mesh, *, client_axis=None, seq_axis=None):
+    """Cohort batch: leaves (cohort, local_B, seq...) or (cohort,)."""
+    ca = client_axis
+
+    def f(path, leaf):
+        dims = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            dims[0] = _maybe(leaf.shape[0], mesh, ca)
+        if seq_axis is not None and len(leaf.shape) >= 3:
+            dims[2] = _maybe(leaf.shape[2], mesh, seq_axis)
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(f, batch_sds)
+
+
+def infer_batch_specs(batch_sds, mesh):
+    """Inference batch: leading dim is the request batch."""
+    ba = batch_axes(mesh)
+
+    def f(leaf):
+        dims = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            dims[0] = _maybe(leaf.shape[0], mesh, ba)
+        return P(*dims)
+
+    return jax.tree.map(f, batch_sds)
+
+
+def cache_specs(cache_sds, mesh, *, shard_seq: bool = False):
+    """KV/state cache sharding.
+
+    Default: batch on (pod, data), kv-heads on `model` when they divide it.
+    shard_seq: shard the cache *sequence* dim on `model` instead (the
+    flash-decode layout for kv_heads < model-axis archs).
+    """
+    ba = batch_axes(mesh)
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        off = 1 if "scan" in keys else 0
+        dims = [None] * len(shape)
+        if name == "pos":  # (W,) slot positions, replicated
+            return P(*dims)
+        if off < len(shape):
+            dims[off] = _maybe(shape[off], mesh, ba)  # batch dim
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) >= off + 4:
+            if shard_seq:
+                dims[off + 1] = _maybe(shape[off + 1], mesh, "model")
+            else:
+                dims[off + 2] = _maybe(shape[off + 2], mesh, "model")
+        elif name == "ssm" and len(shape) >= off + 4:
+            dims[off + 1] = _maybe(shape[off + 1], mesh, "model")  # heads
+        elif name == "conv" and len(shape) >= off + 3:
+            dims[off + 2] = _maybe(shape[off + 2], mesh, "model")  # channels
+        elif name == "h" and len(shape) >= off + 2:
+            dims[off + 1] = _maybe(shape[off + 1], mesh, "model")  # rglru width
+        elif name == "memory" and len(shape) >= off + 3:
+            pass  # (B, S_enc, d) batch-sharded only
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(f, cache_sds)
+
+
+def to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

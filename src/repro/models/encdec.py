@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Encoder: bidirectional attention over precomputed frame embeddings with
+sinusoidal positions.  Decoder: causal self-attention (KV cache for decode)
++ cross-attention over the encoder memory + MLP.  LayerNorm, GELU, learned
+decoder positions — per arXiv:2212.04356.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_cross_attention(key, cfg):
+    return L.init_attention(key, cfg)
+
+
+def cross_attention(cfg, p, x, memory):
+    """x: (B, S_dec, d) queries over memory (B, S_enc, d).  No mask, no rope."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dgk->bsgk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", memory, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q * (cfg.head_dim ** -0.5)
+    scores = L._grouped_scores(q, k).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = L._grouped_out(probs, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def cross_kv(cfg, p, memory):
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dgk->bsgk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", memory, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+def init_encoder_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "norm1": L.init_norm(cfg, d),
+        "attn": L.init_attention(k1, cfg),
+        "norm2": L.init_norm(cfg, d),
+        "mlp": L.init_mlp(k2, cfg, cfg.d_ff),
+    }
+
+
+def apply_encoder_block(cfg, p, x):
+    h = L.attention(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x),
+                    jnp.arange(x.shape[1]), causal=False)
+    x = x + h
+    return x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+
+
+def init_decoder_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "norm1": L.init_norm(cfg, d),
+        "self_attn": L.init_attention(k1, cfg),
+        "norm_c": L.init_norm(cfg, d),
+        "cross_attn": init_cross_attention(k2, cfg),
+        "norm2": L.init_norm(cfg, d),
+        "mlp": L.init_mlp(k3, cfg, cfg.d_ff),
+    }
+
+
+def apply_decoder_block(cfg, p, x, positions, memory):
+    h = L.attention(cfg, p["self_attn"], L.apply_norm(cfg, p["norm1"], x), positions)
+    x = x + h
+    x = x + cross_attention(cfg, p["cross_attn"], L.apply_norm(cfg, p["norm_c"], x), memory)
+    return x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+
+
+# ---------------------------------------------------------------------------
+def init_encdec(key, cfg) -> Dict:
+    p: Dict = {"embedding": L.init_embedding(jax.random.fold_in(key, 0), cfg)}
+    for i in range(cfg.num_encoder_layers):
+        p[f"enc_{i}"] = init_encoder_block(jax.random.fold_in(key, 100 + i), cfg)
+    p["enc_norm"] = L.init_norm(cfg, cfg.d_model)
+    for i in range(cfg.num_layers):
+        p[f"dec_{i}"] = init_decoder_block(jax.random.fold_in(key, 200 + i), cfg)
+    p["dec_norm"] = L.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def encode(cfg, p, audio_embeds):
+    """audio_embeds: (B, S_enc, d) — stub frontend output."""
+    x = audio_embeds + L.sincos_positions(audio_embeds.shape[1], cfg.d_model).astype(
+        audio_embeds.dtype)
+    for i in range(cfg.num_encoder_layers):
+        x = apply_encoder_block(cfg, p[f"enc_{i}"], x)
+    return L.apply_norm(cfg, p["enc_norm"], x)
+
+
+def decode_train(cfg, p, memory, tokens):
+    """Teacher-forced decoder pass.  tokens: (B, S) -> logits (B, S, V)."""
+    emb = p["embedding"]
+    S = tokens.shape[1]
+    x = L.embed_tokens(cfg, emb, tokens, memory.dtype)
+    x = x + emb["pos_embed"][:S].astype(x.dtype)
+    positions = jnp.arange(S)
+    for i in range(cfg.num_layers):
+        x = apply_decoder_block(cfg, p[f"dec_{i}"], x, positions, memory)
+    x = L.apply_norm(cfg, p["dec_norm"], x)
+    return L.unembed(cfg, emb, x)
+
+
+def apply_encdec(cfg, p, batch):
+    memory = encode(cfg, p, batch["audio_embeds"])
+    return decode_train(cfg, p, memory, batch["tokens"])
+
+
+# --- decode path -----------------------------------------------------------
+def init_encdec_cache(cfg, batch_size: int, max_len: int, dtype=jnp.float32) -> Dict:
+    c: Dict = {"memory": jnp.zeros((batch_size, cfg.encoder_seq, cfg.d_model), dtype)}
+    for i in range(cfg.num_layers):
+        c[f"dec_{i}"] = {
+            "self": L.init_kv_cache(cfg, batch_size, max_len, dtype),
+            "cross_k": jnp.zeros((batch_size, cfg.encoder_seq, cfg.num_kv_heads,
+                                  cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((batch_size, cfg.encoder_seq, cfg.num_kv_heads,
+                                  cfg.head_dim), dtype),
+        }
+    return c
+
+
+def prefill_encdec(cfg, p, batch, max_len: int, dtype=jnp.float32):
+    """Encode audio + teacher-force the prompt, filling decode caches."""
+    memory = encode(cfg, p, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    emb = p["embedding"]
+    x = L.embed_tokens(cfg, emb, tokens, memory.dtype)
+    x = x + emb["pos_embed"][:S].astype(x.dtype)
+    positions = jnp.arange(S)
+    cache: Dict = {"memory": memory}
+    for i in range(cfg.num_layers):
+        bp = p[f"dec_{i}"]
+        h, (k, v) = L.attention(cfg, bp["self_attn"], L.apply_norm(cfg, bp["norm1"], x),
+                                positions, return_kv=True)
+        x = x + h
+        self_c = L.fill_kv_cache(cfg, L.init_kv_cache(cfg, B, max_len, dtype), k, v, positions)
+        x = x + cross_attention(cfg, bp["cross_attn"], L.apply_norm(cfg, bp["norm_c"], x),
+                                memory)
+        x = x + L.apply_mlp(cfg, bp["mlp"], L.apply_norm(cfg, bp["norm2"], x))
+        ck, cv = cross_kv(cfg, bp["cross_attn"], memory)
+        cache[f"dec_{i}"] = {"self": self_c, "cross_k": ck, "cross_v": cv}
+    x = L.apply_norm(cfg, p["dec_norm"], x)
+    return L.unembed(cfg, emb, x), cache
+
+
+def decode_step_encdec(cfg, p, cache, tokens, pos):
+    """tokens: (B, 1) one new decoder token at absolute position `pos`."""
+    emb = p["embedding"]
+    x = L.embed_tokens(cfg, emb, tokens, cache["memory"].dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(emb["pos_embed"], pos, 1, 0).astype(x.dtype)[None]
+    new_cache: Dict = {"memory": cache["memory"]}
+    for i in range(cfg.num_layers):
+        bp = p[f"dec_{i}"]
+        c = cache[f"dec_{i}"]
+        h, self_c = L.attention_decode(cfg, bp["self_attn"],
+                                       L.apply_norm(cfg, bp["norm1"], x), c["self"], pos)
+        x = x + h
+        h, _ = L.attention_decode(cfg, bp["cross_attn"], L.apply_norm(cfg, bp["norm_c"], x),
+                                  None, pos, cross_kv=(c["cross_k"], c["cross_v"]))
+        x = x + h
+        x = x + L.apply_mlp(cfg, bp["mlp"], L.apply_norm(cfg, bp["norm2"], x))
+        new_cache[f"dec_{i}"] = {"self": self_c, "cross_k": c["cross_k"],
+                                 "cross_v": c["cross_v"]}
+    x = L.apply_norm(cfg, p["dec_norm"], x)
+    return L.unembed(cfg, emb, x), new_cache

@@ -1,0 +1,327 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+All layers are pure functions ``(cfg, params, x, ...) -> y`` with params as
+nested dicts, so stacks can be scanned and sharded by path-based rules.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Query-chunk size for memory-safe attention (linear-in-queries score memory).
+ATTN_QUERY_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rmsnorm_gated(x, z, scale, eps: float = 1e-6):
+    """Mamba-2 style gated RMSNorm: RMSNorm(x * silu(z))."""
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation / NeoX convention)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(h * hd)
+    p = {
+        "wq": jax.random.normal(k1, (d, h, hd), jnp.float32) * s_in,
+        "wk": jax.random.normal(k2, (d, kv, hd), jnp.float32) * s_in,
+        "wv": jax.random.normal(k3, (d, kv, hd), jnp.float32) * s_in,
+        "wo": jax.random.normal(k4, (h, hd, d), jnp.float32) * s_out,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    return p
+
+
+def _qkv(cfg, p, x, positions, use_rope: bool):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """q: (B,Q,H,hd)  k: (B,S,KV,hd)  ->  (B,KV,rep,Q,S) grouped GQA scores."""
+    B, Q, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Q, KV, rep, hd)
+    return jnp.einsum("bqgrk,bsgk->bgrqs", qg, k)
+
+
+def _grouped_out(probs, v):
+    """probs: (B,KV,rep,Q,S)  v: (B,S,KV,hd)  ->  (B,Q,H,hd)."""
+    B, KV, rep, Q, S = probs.shape
+    out = jnp.einsum("bgrqs,bsgk->bqgrk", probs, v)
+    return out.reshape(B, Q, KV * rep, v.shape[-1])
+
+
+def attention(cfg, p, x, positions, *, causal: bool = True, window: Optional[int] = None,
+              kv_override=None, cross: bool = False, return_kv: bool = False):
+    """Training/prefill attention, chunked over queries (memory-safe).
+
+    kv_override: (k, v, k_positions) — for cross attention over encoder memory.
+    return_kv: also return the (k, v) computed here (prefill cache fill).
+    """
+    B, S, _ = x.shape
+    use_rope = cfg.pos_emb == "rope" and not cross
+    q, k, v = _qkv(cfg, p, x, positions, use_rope)
+    if kv_override is not None:
+        k, v, k_positions = kv_override
+    else:
+        k_positions = positions
+    scale = cfg.head_dim ** -0.5
+    q = q * scale
+
+    if getattr(cfg, "attn_seq_shard", False):
+        # context parallelism: queries shard the `model` axis (K/V are
+        # all-gathered — cheap for GQA) so attention compute is TP-sharded
+        # even when num_heads doesn't divide the axis.
+        from jax.sharding import PartitionSpec as _P
+        q = jax.lax.with_sharding_constraint(
+            q, _P(None, "model", None, None))
+
+    chunk = getattr(cfg, "attn_q_chunk", 0) or ATTN_QUERY_CHUNK
+    if S % chunk != 0:
+        chunk = S
+    n_chunks = S // chunk
+    neg = jnp.finfo(jnp.float32).min
+
+    def one_chunk(qc, qpos):
+        # qc: (B, chunk, H, hd); qpos: (chunk,)
+        scores = _grouped_scores(qc, k).astype(jnp.float32)  # (B,KV,rep,chunk,S)
+        if causal and not cross:
+            mask = qpos[:, None] >= k_positions[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - k_positions[None, :]) < window
+            scores = jnp.where(mask[None, None, None], scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return _grouped_out(probs, v)  # (B, chunk, H, hd)
+
+    if n_chunks == 1:
+        out = one_chunk(q, positions)
+    else:
+        qs = q.reshape(B, n_chunks, chunk, *q.shape[2:]).swapaxes(0, 1)
+        ps = positions.reshape(n_chunks, chunk)
+        out = jax.lax.map(lambda args: one_chunk(*args), (qs, ps))
+        out = out.swapaxes(0, 1).reshape(B, S, *out.shape[3:])
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def fill_kv_cache(cfg, cache, k, v, positions):
+    """Write prefill (k, v) at `positions` into a fresh cache (full or ring)."""
+    S = k.shape[1]
+    W = cache["k"].shape[1]
+    if W >= S:  # full cache: contiguous write
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        cpos = cache["pos"].at[:S].set(positions.astype(jnp.int32))
+        return {"k": ck, "v": cv, "pos": cpos}
+    # ring buffer: keep the last W entries at slot = pos % W
+    tail_pos = positions[S - W:]
+    slots = tail_pos % W
+    ck = cache["k"].at[:, slots].set(k[:, S - W:].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v[:, S - W:].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[slots].set(tail_pos.astype(jnp.int32))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def attention_decode(cfg, p, x, cache, pos, *, window: Optional[int] = None,
+                     cross_kv=None):
+    """Single-token decode against a (ring-buffer or full) KV cache.
+
+    x: (B, 1, d); cache: {'k': (B, W, KV, hd), 'v': ..., 'pos': (W,) int32}
+    pos: scalar int32 absolute position of the new token.
+    Returns (out (B,1,d), new_cache).
+    """
+    use_rope = cfg.pos_emb == "rope" and cross_kv is None
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions, use_rope)
+    scale = cfg.head_dim ** -0.5
+    q = q * scale
+
+    if cross_kv is not None:
+        k, v = cross_kv  # (B, S_enc, KV, hd)
+        scores = _grouped_scores(q, k).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _grouped_out(probs, v)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache
+
+    W = cache["k"].shape[1]
+    slot = pos if window is None else pos % W  # ring buffer when windowed
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache["pos"], positions, (slot,))
+
+    scores = _grouped_scores(q, k).astype(jnp.float32)  # (B,KV,rep,1,W)
+    if getattr(cfg, "attn_seq_shard", False):
+        # decode context parallelism: the (B,H,W) score rows shard the cache
+        # sequence over `model` (softmax reductions become tiny all-reduces) —
+        # the fallback when heads don't divide the TP axis.
+        from jax.sharding import PartitionSpec as _P
+        scores = jax.lax.with_sharding_constraint(
+            scores, _P(None, None, None, None, "model"))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    scores = jnp.where(valid[None, None, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _grouped_out(probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "pos": slot_pos}
+
+
+def init_kv_cache(cfg, batch_size: int, max_len: int, dtype=jnp.float32):
+    W = max_len if cfg.attention_window is None else min(cfg.attention_window, max_len)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch_size, W, kv, hd), dtype),
+        "v": jnp.zeros((batch_size, W, kv, hd), dtype),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff: int, d: Optional[int] = None):
+    d = d or cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_in": jax.random.normal(k1, (d, d_ff), jnp.float32) * s_in,
+        "w_out": jax.random.normal(k2, (d_ff, d), jnp.float32) * s_out,
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, d_ff), jnp.float32) * s_in
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * h
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.mlp_act)
+    return h @ p["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+def init_embedding(key, cfg):
+    p = {"embed": jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+         * (1.0 / math.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab_size), jnp.float32) \
+            * (1.0 / math.sqrt(cfg.d_model))
+    if cfg.pos_emb == "learned":
+        k3 = jax.random.fold_in(key, 2)
+        p["pos_embed"] = jax.random.normal(k3, (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.02
+    return p
+
+
+def embed_tokens(cfg, p, tokens, dtype):
+    x = p["embed"].astype(dtype)[tokens]
+    if cfg.family == "hybrid":  # gemma lineage scales embeddings
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(cfg, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["embed"].astype(x.dtype).T
+    return x @ p["unembed"].astype(x.dtype)
+
+
+def sincos_positions(seq_len: int, d_model: int):
+    """Fixed sinusoidal embeddings (whisper encoder)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def cross_entropy(logits, labels, mask=None):
+    """Mean masked token cross-entropy, computed in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,174 @@
+"""Model facade: build any assigned architecture into a uniform interface.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  init(key)                         -> params
+  apply(params, batch)              -> (logits, aux)
+  loss_fn(params, batch)            -> (loss, metrics)
+  init_cache(batch_size, max_len)   -> decode cache
+  prefill(params, batch, max_len)   -> (logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable
+    apply: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _embed_inputs(cfg, params, batch, dtype):
+    """Token / patch / frame embedding with early fusion for VLM."""
+    emb = params["embedding"]
+    x = L.embed_tokens(cfg, emb, batch["tokens"], dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # early fusion: stubbed ViT patch embeddings prepended to text tokens
+        x = jnp.concatenate([batch["patch_embeds"].astype(dtype), x], axis=1)
+    if cfg.pos_emb == "learned":
+        x = x + emb["pos_embed"][: x.shape[1]].astype(dtype)
+    return x
+
+
+def build_model(cfg, *, use_ragged_moe: bool = False) -> Model:
+    if use_ragged_moe and not getattr(cfg, "moe_ragged", False):
+        cfg = cfg.with_overrides(moe_ragged=True)
+    if cfg.family == "audio":
+        return _build_encdec(cfg)
+    dtype = _dtype(cfg)
+
+    def init(key):
+        return {
+            "embedding": L.init_embedding(jax.random.fold_in(key, 0), cfg),
+            "stack": T.init_stack(jax.random.fold_in(key, 1), cfg),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+
+    def apply(params, batch):
+        x = _embed_inputs(cfg, params, batch, dtype)
+        positions = jnp.arange(x.shape[1])
+        x, aux = T.apply_stack(cfg, params["stack"], x, positions,
+                               use_ragged_moe=use_ragged_moe)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.unembed(cfg, params["embedding"], x)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            logits = logits[:, batch["patch_embeds"].shape[1]:]  # text positions
+        return logits, aux
+
+    def loss_fn(params, batch):
+        logits, aux = apply(params, batch)
+        labels = batch.get("labels", batch["tokens"])
+        mask = batch.get("loss_mask")
+        ce = L.cross_entropy(logits, labels, mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def init_cache(batch_size, max_len):
+        return T.init_stack_cache(cfg, batch_size, max_len, dtype)
+
+    def prefill(params, batch, max_len):
+        x = _embed_inputs(cfg, params, batch, dtype)
+        positions = jnp.arange(x.shape[1])
+        x, cache = T.prefill_stack(cfg, params["stack"], x, positions, max_len, dtype)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return L.unembed(cfg, params["embedding"], x[:, -1:]), cache
+
+    def decode_step(params, cache, tokens, pos):
+        emb = params["embedding"]
+        x = L.embed_tokens(cfg, emb, tokens, dtype)
+        if cfg.pos_emb == "learned":
+            x = x + jax.lax.dynamic_slice_in_dim(emb["pos_embed"], pos, 1, 0).astype(
+                dtype)[None]
+        x, cache = T.decode_stack(cfg, params["stack"], x, cache, pos)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return L.unembed(cfg, emb, x), cache
+
+    return Model(cfg, init, apply, loss_fn, init_cache, prefill, decode_step)
+
+
+def _build_encdec(cfg) -> Model:
+    dtype = _dtype(cfg)
+
+    def init(key):
+        return E.init_encdec(key, cfg)
+
+    def apply(params, batch):
+        return E.apply_encdec(cfg, params, batch), jnp.zeros((), jnp.float32)
+
+    def loss_fn(params, batch):
+        logits, _ = apply(params, batch)
+        labels = batch.get("labels", batch["tokens"])
+        ce = L.cross_entropy(logits, labels, batch.get("loss_mask"))
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def init_cache(batch_size, max_len):
+        return E.init_encdec_cache(cfg, batch_size, max_len, dtype)
+
+    def prefill(params, batch, max_len):
+        logits, cache = E.prefill_encdec(cfg, params, batch, max_len, dtype)
+        return logits[:, -1:], cache
+
+    def decode_step(params, cache, tokens, pos):
+        return E.decode_step_encdec(cfg, params, cache, tokens, pos)
+
+    return Model(cfg, init, apply, loss_fn, init_cache, prefill, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful dense-feature MLP binary classifier (configs/mlp.py)
+# ---------------------------------------------------------------------------
+def build_mlp_classifier(cfg) -> Model:
+    """Binary classifier on dense features — the paper's actual model class."""
+    act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[cfg.activation]
+
+    def init(key):
+        dims = (cfg.num_features,) + tuple(cfg.hidden_dims) + (1,)
+        params = {}
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            k = jax.random.fold_in(key, i)
+            params[f"dense_{i}"] = {
+                "w": jax.random.normal(k, (din, dout), jnp.float32) * (din ** -0.5),
+                "b": jnp.zeros((dout,), jnp.float32),
+            }
+        return params
+
+    def apply(params, batch):
+        x = batch["features"].astype(jnp.float32)
+        n = len(params)
+        for i in range(n):
+            p = params[f"dense_{i}"]
+            x = x @ p["w"] + p["b"]
+            if i < n - 1:
+                x = act(x)
+        return x[..., 0], jnp.zeros((), jnp.float32)  # logit
+
+    def loss_fn(params, batch):
+        logit, _ = apply(params, batch)
+        y = batch["label"].astype(jnp.float32)
+        # numerically-stable sigmoid BCE
+        loss = jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        w = batch.get("weight")
+        loss = jnp.mean(loss * w) / jnp.maximum(jnp.mean(w), 1e-9) if w is not None \
+            else jnp.mean(loss)
+        acc = jnp.mean((logit > 0) == (y > 0.5))
+        return loss, {"bce": loss, "accuracy": acc}
+
+    def _no_decode(*a, **k):
+        raise NotImplementedError("classifier has no decode path")
+
+    return Model(cfg, init, apply, loss_fn, _no_decode, _no_decode, _no_decode)

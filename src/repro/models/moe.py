@@ -1,0 +1,195 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k, capacity dispatch.
+
+Default dispatch is the GShard/Switch one-hot capacity pattern — it shards
+cleanly under GSPMD with experts on the `model` axis (expert parallelism) and
+has a well-understood collective footprint (all-to-all over the dispatched
+tokens).  A sort-based ``ragged_dot`` path is available as a beyond-paper
+optimization (``use_ragged=True``) and is cross-checked against the one-hot
+path in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, init_mlp
+
+
+def init_moe(key, cfg):
+    d, e = cfg.d_model, cfg.num_experts
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    # stacked expert FFNs: leading expert dim (sharded on `model`)
+    expert_keys = jax.random.split(k_experts, e)
+    experts = jax.vmap(lambda k: init_mlp(k, cfg, cfg.moe_d_ff))(expert_keys)
+    p = {
+        "router": jax.random.normal(k_router, (d, e), jnp.float32) / math.sqrt(d),
+        "experts": experts,
+    }
+    if cfg.num_shared_experts > 0:
+        shared_keys = jax.random.split(k_shared, cfg.num_shared_experts)
+        p["shared"] = jax.vmap(lambda k: init_mlp(k, cfg, cfg.moe_d_ff))(shared_keys)
+    return p
+
+
+def _expert_ffn(cfg, ep, x):
+    """Apply one expert's FFN params (un-stacked leaves) to x (..., d)."""
+    return apply_mlp(cfg, ep, x)
+
+
+def route(cfg, p, x_flat) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (gates (T,k), expert_idx (T,k), aux_loss scalar)."""
+    logits = (x_flat @ p["router"].astype(x_flat.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e fraction_e * prob_e
+    T, E = probs.shape
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (T, k, E)
+    frac = onehot.sum((0, 1)) / (T * cfg.experts_per_token)
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return gates.astype(x_flat.dtype), idx, aux
+
+
+def apply_moe(cfg, p, x, *, use_ragged: bool = None):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    dispatch = getattr(cfg, "moe_dispatch", "onehot")
+    if use_ragged is None:
+        use_ragged = getattr(cfg, "moe_ragged", False)
+    if use_ragged:
+        dispatch = "ragged"
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    gates, idx, aux = route(cfg, p, x_flat)
+
+    if dispatch == "ragged":
+        y = _ragged_dispatch(cfg, p, x_flat, gates, idx)
+    elif dispatch == "gather":
+        y = _gather_dispatch(cfg, p, x_flat, gates, idx)
+    else:
+        y = _capacity_dispatch(cfg, p, x_flat, gates, idx)
+
+    if cfg.num_shared_experts > 0:
+        def shared_one(ep):
+            return _expert_ffn(cfg, ep, x_flat)
+        y = y + jax.vmap(shared_one)(p["shared"]).sum(0)
+
+    return y.reshape(B, S, d), aux * cfg.router_aux_weight
+
+
+def _capacity_dispatch(cfg, p, x_flat, gates, idx):
+    """GShard one-hot capacity dispatch (default; GSPMD-friendly)."""
+    T, d = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = max(int(math.ceil(k * T / E * cfg.capacity_factor)), 1)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (T, k, E)
+    flat_oh = onehot.reshape(T * k, E)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=0) - flat_oh).reshape(T, k, E)
+    pos_in_expert = (pos_in_expert * onehot).sum(-1)  # (T, k)
+    keep = pos_in_expert < C  # drop overflow tokens
+
+    dt = x_flat.dtype
+    # dispatch tensor (T, k, E, C) as product of two one-hots, contracted on
+    # the fly: x_dispatch[e, c, d] = sum_{t,s} 1[idx=e] 1[pos=c] x[t, d]
+    oh_e = jax.nn.one_hot(idx, E, dtype=dt) * keep[..., None].astype(dt)  # (T,k,E)
+    oh_c = jax.nn.one_hot(pos_in_expert, C, dtype=dt)  # (T,k,C)
+    x_dispatch = jnp.einsum("tke,tkc,td->ecd", oh_e, oh_c, x_flat)
+
+    # per-expert FFN over its capacity buffer (experts stacked on axis 0)
+    y_experts = jax.vmap(lambda ep, xe: _expert_ffn(cfg, ep, xe))(p["experts"], x_dispatch)
+
+    combine = jnp.einsum("tke,tkc,tk->tkec", oh_e, oh_c, gates)
+    return jnp.einsum("tkec,ecd->td", combine, y_experts)
+
+
+def _positions_and_keep(T, E, k, C, idx, *, sorted_positions: bool = True):
+    """Position of each (token, slot) pair within its expert's buffer.
+
+    sorted_positions (default): argsort by expert id, position = rank within
+    the expert's contiguous run — O(n log n) comparisons, no big cumsum.
+    The one-hot cumsum alternative builds a (T*k, E) running count whose
+    reduce-window lowering costs O((T*k)^2 * E) "flops" — it dominated the
+    whole MoE prefill roofline before this change (see EXPERIMENTS.md §Perf).
+    """
+    if sorted_positions:
+        flat_idx = idx.reshape(-1)  # (T*k,)
+        order = jnp.argsort(flat_idx)  # stable: preserves token order
+        counts = jnp.bincount(flat_idx, length=E)
+        starts = jnp.cumsum(counts) - counts  # (E,) exclusive prefix
+        pos_sorted = jnp.arange(T * k) - starts[flat_idx[order]]
+        pos_in_expert = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32)).reshape(T, k)
+    else:
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (T, k, E)
+        flat_oh = onehot.reshape(T * k, E)
+        pos_in_expert = (jnp.cumsum(flat_oh, axis=0) - flat_oh).reshape(T, k, E)
+        pos_in_expert = (pos_in_expert * onehot).sum(-1)  # (T, k)
+    keep = pos_in_expert < C
+    return pos_in_expert, keep
+
+
+def _gather_dispatch(cfg, p, x_flat, gates, idx):
+    """Gather/scatter capacity dispatch — zero dispatch FLOPs, no (T,E,C)
+    one-hot tensors (beyond-paper optimization; the TPU-native answer once
+    the GShard einsum's O(T*E*C*d) contraction dominates the roofline).
+
+    Addresses: slot(e, c) = e*C + c; a scatter writes each kept (token, k)
+    pair's token id into its slot, a gather pulls the tokens into (E, C, d)
+    expert buffers, and a second gather + weighted sum combines the outputs.
+    """
+    T, d = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = max(int(math.ceil(k * T / E * cfg.capacity_factor)), 1)
+    pos_in_expert, keep = _positions_and_keep(T, E, k, C, idx)
+
+    slot = idx * C + pos_in_expert  # (T, k) flat slot address
+    slot = jnp.where(keep, slot, E * C)  # dropped pairs park in a trash slot
+    token_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    # token id occupying each slot (T for empty slots -> zero row via pad)
+    token_for_slot = jnp.full((E * C + 1,), T, jnp.int32).at[
+        slot.reshape(-1)].set(token_ids.reshape(-1), mode="drop")[:-1]
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], 0)
+    x_dispatch = x_pad[token_for_slot].reshape(E, C, d)
+
+    y_experts = jax.vmap(lambda ep, xe: _expert_ffn(cfg, ep, xe))(
+        p["experts"], x_dispatch)  # (E, C, d)
+
+    # combine: pull each (token, k) pair's expert output back and gate it
+    y_flat = y_experts.reshape(E * C, d)
+    y_pairs = jnp.where(keep[..., None], y_flat[jnp.where(keep, slot, 0)], 0.0)
+    return jnp.einsum("tkd,tk->td", y_pairs, gates)
+
+
+def _ragged_dispatch(cfg, p, x_flat, gates, idx):
+    """Sort-based grouped-matmul dispatch via jax.lax.ragged_dot (no capacity
+    drops, no one-hot memory) — beyond-paper optimization."""
+    T, d = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    flat_idx = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_idx)
+    inv = jnp.argsort(order)
+    token_of = order // k
+    xs = x_flat[token_of]  # (T*k, d) grouped by expert
+    group_sizes = jnp.bincount(flat_idx, length=E).astype(jnp.int32)
+
+    def gmm(lhs, rhs):
+        return jax.lax.ragged_dot(lhs, rhs, group_sizes)
+
+    ep = p["experts"]
+    dt = x_flat.dtype
+    h = gmm(xs, ep["w_in"].astype(dt))
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(gmm(xs, ep["w_gate"].astype(dt))) * h
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    ys = gmm(h, ep["w_out"].astype(dt))  # (T*k, d)
+    ys = ys[inv].reshape(T, k, d)
+    return jnp.einsum("tkd,tk->td", ys, gates)

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrent block: two branches over the normed input —
+  gate branch:  gelu(x @ W_gate)
+  rec branch :  RG_LRU(causal_conv(x @ W_branch))
+merged multiplicatively and projected out.  The RG-LRU is a diagonal linear
+recurrence, so prefill uses ``lax.associative_scan`` (log-depth) and decode
+carries a (B, width) hidden state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0  # RG-LRU gate sharpness constant from the paper
+
+
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    r = cfg.rglru_width or d
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(Lambda)^c spreads over [0.9, 0.999]
+    u = jax.random.uniform(k6, (r,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_gate": jax.random.normal(k1, (d, r), jnp.float32) / math.sqrt(d),
+        "w_branch": jax.random.normal(k2, (d, r), jnp.float32) / math.sqrt(d),
+        "conv_w": jax.random.normal(k3, (cfg.rglru_conv_width, r), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": jax.random.normal(k4, (r, r), jnp.float32) / math.sqrt(r),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "w_x": jax.random.normal(k5, (r, r), jnp.float32) / math.sqrt(r),
+        "b_x": jnp.zeros((r,), jnp.float32),
+        "lambda": lam,
+        "w_out": jax.random.normal(jax.random.fold_in(key, 7), (r, d), jnp.float32)
+        / math.sqrt(r),
+    }
+
+
+def _gates(p, u):
+    """u: (..., r) branch input -> (log_a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    i_gate = jax.nn.sigmoid(uf @ p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r_gate  # (<= 0)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) normalization keeps the state scale bounded
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i_gate * uf)
+    return a, gated
+
+
+def rg_lru_scan(p, u):
+    """Full-sequence RG-LRU via associative scan.  u: (B, S, r)."""
+    a, b = _gates(p, u)  # (B,S,r) f32
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rg_lru_step(p, u, h_prev):
+    """Single decode step.  u: (B, r); h_prev: (B, r) f32."""
+    a, b = _gates(p, u)
+    h = a * h_prev + b
+    return h.astype(u.dtype), h
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def apply_rglru_block(cfg, p, x, *, return_cache: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, decode cache]."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    u_raw = x @ p["w_branch"].astype(dt)
+    u = _causal_conv(u_raw, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    h = rg_lru_scan(p, u)
+    out = (gate * h) @ p["w_out"].astype(dt)
+    if return_cache:
+        K = cfg.rglru_conv_width
+        h_final = h[:, -1].astype(jnp.float32)  # carried decode state
+        return out, {"h": h_final, "conv": u_raw[:, -(K - 1):, :]}
+    return out
+
+
+def init_rglru_cache(cfg, batch_size: int, dtype=jnp.float32):
+    r = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch_size, r), jnp.float32),
+        "conv": jnp.zeros((batch_size, cfg.rglru_conv_width - 1, r), dtype),
+    }
+
+
+def decode_rglru_block(cfg, p, x, cache):
+    """x: (B, 1, d) -> (y (B,1,d), new_cache)."""
+    dt = x.dtype
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_gate"].astype(dt))
+    u = xt @ p["w_branch"].astype(dt)  # (B, r)
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B, K, r)
+    w = p["conv_w"].astype(dt)
+    u = jnp.einsum("bkr,kr->br", hist, w) + p["conv_b"].astype(dt)
+    h_out, h_state = rg_lru_step(p, u, cache["h"])
+    y = (gate * h_out) @ p["w_out"].astype(dt)
+    return y[:, None], {"h": h_state, "conv": hist[:, 1:]}

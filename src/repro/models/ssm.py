@@ -1,0 +1,180 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm.
+
+Follows arXiv:2405.21060 §6: intra-chunk outputs via the masked-attention
+dual form, inter-chunk state passing via a scan over chunk states.
+Decode keeps a constant-size (heads, head_dim, state) recurrent state plus a
+(conv_width-1)-deep convolution buffer — hence ``long_500k`` is natural.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm_gated
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, ds, nh = cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads
+    conv_ch = di + 2 * g * ds
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * g * ds + nh  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(k1, (d, proj_out), jnp.float32) / math.sqrt(d),
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.log(jnp.exp(jnp.linspace(0.001, 0.1, nh)) - 1.0),  # softplus^-1
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(k3, (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, ds, nh = cfg.d_inner, cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * g * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K: xBC (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """SSD forward.  Shapes:
+      x: (b, S, nh, hd)   dt: (b, S, nh)   A: (nh,) (negative)
+      B, C: (b, S, g, ds) with g == 1 (grouped state dims)
+    Returns y: (b, S, nh, hd) and final state (b, nh, hd, ds).
+    """
+    b, S, nh, hd = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    assert g == 1, "ssm_num_groups > 1 not supported"
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    n = S // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(b, n, Q, nh, hd).astype(f32)
+    dtc = dt.reshape(b, n, Q, nh).astype(f32)
+    Bc = B.reshape(b, n, Q, ds).astype(f32)  # g==1 squeezed
+    Cc = C.reshape(b, n, Q, ds).astype(f32)
+
+    dA = dtc * A  # (b,n,Q,nh) negative increments
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # --- intra-chunk (dual / attention-like form) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,n,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc)  # (b,n,Q,K)
+    M = cb[..., None] * L  # (b,n,Q,K,nh)
+    y_diag = jnp.einsum("bnqkh,bnkh,bnkhp->bnqhp", M, dtc, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,n,Q,nh)
+    states = jnp.einsum("bnkh,bnkh,bnkhp,bnks->bnhps", decay_to_end, dtc, xc, Bc)
+
+    # --- inter-chunk recurrence over n ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,n,nh) total decay per chunk
+
+    def step(carry, inp):
+        s_prev = carry  # (b, nh, hd, ds)
+        dec, s_chunk = inp  # (b,nh), (b,nh,hd,ds)
+        s_new = dec[..., None, None] * s_prev + s_chunk
+        return s_new, s_prev
+
+    init = jnp.zeros((b, nh, hd, ds), f32)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)),
+        unroll=n if unroll else 1,
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (b,n,nh,hd,ds) state entering chunk
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)  # (b,n,Q,nh) decay from chunk start to position
+    y_off = jnp.einsum("bnqs,bnqh,bnhps->bnqhp", Cc, in_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, S, nh, hd)
+    return y.astype(x.dtype), final_state
+
+
+def apply_mamba2(cfg, p, x, *, return_cache: bool = False):
+    """Full-sequence forward.  x: (B, S, d) -> (B, S, d) [, decode cache]."""
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xBC_raw, dtv = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    di, g, ds = cfg.d_inner, cfg.ssm_num_groups, cfg.ssm_state_dim
+    xs = xBC[..., :di]
+    Bm = xBC[..., di:di + g * ds].reshape(*x.shape[:2], g, ds)
+    Cm = xBC[..., di + g * ds:].reshape(*x.shape[:2], g, ds)
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    xh = xs.reshape(*x.shape[:2], nh, hd)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(xh, dtv, A, Bm, Cm, cfg.ssm_chunk,
+                                 unroll=getattr(cfg, "scan_unroll", False))
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm_gated(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(dt_)
+    if return_cache:
+        K = cfg.ssm_conv_width
+        tail = xBC_raw[:, -(K - 1):, :]  # raw conv inputs for the next steps
+        return out, {"conv": tail, "ssm": final_state}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, constant state)
+# ---------------------------------------------------------------------------
+def init_mamba2_cache(cfg, batch_size: int, dtype=jnp.float32):
+    di, g, ds = cfg.d_inner, cfg.ssm_num_groups, cfg.ssm_state_dim
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * g * ds
+    return {
+        "conv": jnp.zeros((batch_size, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch_size, nh, hd, ds), jnp.float32),
+    }
+
+
+def decode_mamba2(cfg, p, x, cache):
+    """x: (B, 1, d) -> (y (B,1,d), new_cache)."""
+    dt_ = x.dtype
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dt_)  # (B, proj)
+    z, xBC, dtv = _split_proj(cfg, zxbcdt)
+    # conv buffer update
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # (B, K, C)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(dt_))
+    new_conv = hist[:, 1:]
+
+    di, g, ds = cfg.d_inner, cfg.ssm_num_groups, cfg.ssm_state_dim
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    xs = conv_out[..., :di].reshape(-1, nh, hd).astype(jnp.float32)
+    Bm = conv_out[..., di:di + g * ds].astype(jnp.float32)  # (B, ds) g==1
+    Cm = conv_out[..., di + g * ds:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A)  # (B, nh)
+    state = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bs->bhps", dtv, xs, Bm)
+    y = jnp.einsum("bhps,bs->bhp", state, Cm) + xs * p["D"][None, :, None]
+    y = y.reshape(-1, di).astype(dt_)
+    y = rmsnorm_gated(y, z, p["norm_scale"])
+    y = y @ p["out_proj"].astype(dt_)
+    return y[:, None], {"conv": new_conv, "ssm": state}

@@ -1,0 +1,271 @@
+"""Decoder stacks: block init/apply/decode + scan-over-layers plumbing.
+
+Homogeneous stacks (dense / moe / ssm / vlm) are scanned over stacked layer
+params to keep HLO size and compile time flat in depth; heterogeneous stacks
+(hybrid block patterns) and shallow stacks are unrolled python loops.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+def init_block(key, cfg, kind: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "local_attn"):
+        return {
+            "norm1": L.init_norm(cfg, d),
+            "attn": L.init_attention(k1, cfg),
+            "norm2": L.init_norm(cfg, d),
+            "mlp": L.init_mlp(k2, cfg, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "norm1": L.init_norm(cfg, d),
+            "attn": L.init_attention(k1, cfg),
+            "norm2": L.init_norm(cfg, d),
+            "moe": M.init_moe(k2, cfg),
+        }
+    if kind == "ssm":
+        return {
+            "norm1": L.init_norm(cfg, d),
+            "mamba": S.init_mamba2(k1, cfg),
+        }
+    if kind == "rglru":
+        return {
+            "norm1": L.init_norm(cfg, d),
+            "rec": R.init_rglru_block(k1, cfg),
+            "norm2": L.init_norm(cfg, d),
+            "mlp": L.init_mlp(k2, cfg, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def apply_block(cfg, p, x, positions, kind: str, *, use_ragged_moe=None):
+    """(B,S,d) -> ((B,S,d), aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        window = cfg.attention_window if (kind == "local_attn" or cfg.attention_window) else None
+        h = L.attention(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x), positions,
+                        window=window)
+        x = x + h
+        x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    elif kind == "moe":
+        h = L.attention(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x), positions,
+                        window=cfg.attention_window)
+        x = x + h
+        y, aux = M.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x),
+                             use_ragged=use_ragged_moe)
+        x = x + y
+    elif kind == "ssm":
+        x = x + S.apply_mamba2(cfg, p["mamba"], L.apply_norm(cfg, p["norm1"], x))
+    elif kind == "rglru":
+        x = x + R.apply_rglru_block(cfg, p["rec"], L.apply_norm(cfg, p["norm1"], x))
+        x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def init_block_cache(cfg, kind: str, batch_size: int, max_len: int, dtype):
+    if kind in ("attn", "local_attn", "moe"):
+        c = L.init_kv_cache(cfg, batch_size, max_len, dtype)
+        if kind == "local_attn" and cfg.attention_window is not None:
+            pass  # init_kv_cache already windows via cfg.attention_window
+        return c
+    if kind == "ssm":
+        return S.init_mamba2_cache(cfg, batch_size, dtype)
+    if kind == "rglru":
+        return R.init_rglru_cache(cfg, batch_size, dtype)
+    raise ValueError(kind)
+
+
+def decode_block(cfg, p, x, cache, pos, kind: str):
+    """x: (B,1,d) -> ((B,1,d), new_cache)."""
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.attention_window if (kind == "local_attn" or cfg.attention_window) else None
+        h, cache = L.attention_decode(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x),
+                                      cache, pos, window=window)
+        x = x + h
+        if kind == "moe":
+            y, _ = M.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x))
+            x = x + y
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    elif kind == "ssm":
+        y, cache = S.decode_mamba2(cfg, p["mamba"], L.apply_norm(cfg, p["norm1"], x), cache)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = R.decode_rglru_block(cfg, p["rec"], L.apply_norm(cfg, p["norm1"], x), cache)
+        x = x + y
+        x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def _stack_plan(cfg) -> Tuple[Tuple[int, str], ...]:
+    """Returns ((num_unrolled, kind)...) — scanned iff homogeneous tail."""
+    kinds = cfg.layer_kinds
+    return kinds
+
+
+def _is_scannable(cfg) -> bool:
+    kinds = cfg.layer_kinds
+    tail = kinds[cfg.first_k_dense:]
+    return cfg.block_pattern is None and len(set(tail)) == 1 and len(tail) > 1
+
+
+def init_stack(key, cfg) -> Dict:
+    kinds = cfg.layer_kinds
+    p: Dict = {}
+    if _is_scannable(cfg):
+        n_head = cfg.first_k_dense
+        for i in range(n_head):
+            p[f"layer_{i}"] = init_block(jax.random.fold_in(key, i), cfg, kinds[i])
+        tail_kind = kinds[-1]
+        n_tail = cfg.num_layers - n_head
+        tail_keys = jax.random.split(jax.random.fold_in(key, 10_000), n_tail)
+        p["scan"] = jax.vmap(lambda k: init_block(k, cfg, tail_kind))(tail_keys)
+    else:
+        for i, kind in enumerate(kinds):
+            p[f"layer_{i}"] = init_block(jax.random.fold_in(key, i), cfg, kind)
+    return p
+
+
+def apply_stack(cfg, p, x, positions, *, use_ragged_moe: bool = False):
+    kinds = cfg.layer_kinds
+    aux_total = jnp.zeros((), jnp.float32)
+    if _is_scannable(cfg):
+        for i in range(cfg.first_k_dense):
+            x, aux = apply_block(cfg, p[f"layer_{i}"], x, positions, kinds[i])
+            aux_total += aux
+        tail_kind = kinds[-1]
+
+        def body(carry, layer_p):
+            h, aux_acc = carry
+            h, aux = apply_block(cfg, layer_p, h, positions, tail_kind,
+                                 use_ragged_moe=use_ragged_moe)
+            return (h, aux_acc + aux), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        n_tail = cfg.num_layers - cfg.first_k_dense
+        (x, aux_total), _ = jax.lax.scan(
+            body_fn, (x, aux_total), p["scan"],
+            unroll=n_tail if cfg.scan_unroll else 1)
+    else:
+        for i, kind in enumerate(kinds):
+            blk = lambda h: apply_block(cfg, p[f"layer_{i}"], h, positions, kind,
+                                        use_ragged_moe=use_ragged_moe)
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x, aux = blk(x)
+            aux_total += aux
+    return x, aux_total
+
+
+def prefill_block(cfg, p, x, positions, kind: str, batch_size: int, max_len: int, dtype):
+    """apply_block that also produces a filled decode cache."""
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.attention_window if (kind == "local_attn" or cfg.attention_window) else None
+        h, (k, v) = L.attention(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x), positions,
+                                window=window, return_kv=True)
+        x = x + h
+        cache = L.init_kv_cache(cfg, batch_size, max_len, dtype)
+        cache = L.fill_kv_cache(cfg, cache, k, v, positions)
+        if kind == "moe":
+            y, _ = M.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x))
+            x = x + y
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    elif kind == "ssm":
+        y, cache = S.apply_mamba2(cfg, p["mamba"], L.apply_norm(cfg, p["norm1"], x),
+                                  return_cache=True)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = R.apply_rglru_block(cfg, p["rec"], L.apply_norm(cfg, p["norm1"], x),
+                                       return_cache=True)
+        x = x + y
+        x = x + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def prefill_stack(cfg, p, x, positions, max_len: int, dtype=jnp.float32):
+    """Run the stack over a prompt, returning (x, cache) for decode."""
+    kinds = cfg.layer_kinds
+    B = x.shape[0]
+    cache: Dict = {}
+    if _is_scannable(cfg):
+        for i in range(cfg.first_k_dense):
+            x, cache[f"layer_{i}"] = prefill_block(
+                cfg, p[f"layer_{i}"], x, positions, kinds[i], B, max_len, dtype)
+        tail_kind = kinds[-1]
+
+        def body(h, layer_p):
+            h, c = prefill_block(cfg, layer_p, h, positions, tail_kind, B, max_len, dtype)
+            return h, c
+
+        n_tail = cfg.num_layers - cfg.first_k_dense
+        x, cache["scan"] = jax.lax.scan(body, x, p["scan"],
+                                        unroll=n_tail if cfg.scan_unroll else 1)
+    else:
+        for i, kind in enumerate(kinds):
+            x, cache[f"layer_{i}"] = prefill_block(
+                cfg, p[f"layer_{i}"], x, positions, kind, B, max_len, dtype)
+    return x, cache
+
+
+def init_stack_cache(cfg, batch_size: int, max_len: int, dtype=jnp.float32) -> Dict:
+    kinds = cfg.layer_kinds
+    c: Dict = {}
+    if _is_scannable(cfg):
+        for i in range(cfg.first_k_dense):
+            c[f"layer_{i}"] = init_block_cache(cfg, kinds[i], batch_size, max_len, dtype)
+        tail_kind = kinds[-1]
+        n_tail = cfg.num_layers - cfg.first_k_dense
+        one = init_block_cache(cfg, tail_kind, batch_size, max_len, dtype)
+        c["scan"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape).copy(), one)
+    else:
+        for i, kind in enumerate(kinds):
+            c[f"layer_{i}"] = init_block_cache(cfg, kind, batch_size, max_len, dtype)
+    return c
+
+
+def decode_stack(cfg, p, x, cache, pos):
+    kinds = cfg.layer_kinds
+    new_cache: Dict = {}
+    if _is_scannable(cfg):
+        for i in range(cfg.first_k_dense):
+            x, new_cache[f"layer_{i}"] = decode_block(
+                cfg, p[f"layer_{i}"], x, cache[f"layer_{i}"], pos, kinds[i])
+        tail_kind = kinds[-1]
+
+        def body(h, xs):
+            layer_p, layer_c = xs
+            h, c2 = decode_block(cfg, layer_p, h, layer_c, pos, tail_kind)
+            return h, c2
+
+        n_tail = cfg.num_layers - cfg.first_k_dense
+        x, new_cache["scan"] = jax.lax.scan(body, x, (p["scan"], cache["scan"]),
+                                            unroll=n_tail if cfg.scan_unroll else 1)
+    else:
+        for i, kind in enumerate(kinds):
+            x, new_cache[f"layer_{i}"] = decode_block(
+                cfg, p[f"layer_{i}"], x, cache[f"layer_{i}"], pos, kind)
+    return x, new_cache

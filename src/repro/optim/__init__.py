@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, apply_updates, build_optimizer, sgd, sgd_momentum,
+)

@@ -1,0 +1,90 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Used for server-side baselines (the paper's centralized comparison) and as
+client local optimizers.  All states are f32 pytrees mirroring params, so
+they shard with the same rules as the model.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _zeros(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params):
+        upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _zeros(params)}
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        upd = jax.tree.map(lambda m_: -lr * m_, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay)
+
+
+def _adam_impl(lr, b1, b2, eps, weight_decay) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _zeros(params), "v": _zeros(params)}
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+
+        def upd_leaf(m_, v_, p):
+            mh = m_ / (1 - b1 ** tf)
+            vh = v_ / (1 - b2 ** tf)
+            u = -lr * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        upd = jax.tree.map(upd_leaf, m, v, params)
+        return upd, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "sgd_momentum": sgd_momentum, "adam": adam,
+            "adamw": adamw}[name](lr, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)

@@ -1,0 +1,185 @@
+"""Orchestrator, signal transformer, joiner, feature store, funnel logging."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device_sim import DevicePopulation
+from repro.core.funnel_logging import FunnelLogger, new_session_id
+from repro.core.joiner import FeatureRow, Joiner, LabelEvent
+from repro.core.orchestrator import (
+    FUNNEL_PHASES, EligibilityCriteria, MetadataStore, Orchestrator,
+)
+from repro.core.signal_transformer import (
+    SignalTransformer, TransformSpec, spec_with_normalization, validate_spec,
+)
+from repro.data.feature_store import DeviceFeatureStore
+
+
+# --- orchestrator ------------------------------------------------------------
+def test_eligibility_heuristics():
+    pop = DevicePopulation(200, seed=1)
+    orch = Orchestrator(pop, MetadataStore(), seed=1)
+    d = pop.devices[0]
+    d.alive, d.battery, d.charging, d.on_wifi = True, 0.9, True, True
+    d.storage_free_mb, d.app_version = 1000.0, 10
+    d.last_participation_round = -100
+    ok, reason = orch.check_eligibility(d)
+    assert ok, reason
+    d.battery = 0.1
+    assert orch.check_eligibility(d) == (False, "battery")
+    d.battery, d.on_wifi = 0.9, False
+    assert orch.check_eligibility(d) == (False, "no_wifi")
+    d.on_wifi = True
+    d.last_participation_round = orch.round_idx
+    assert orch.check_eligibility(d) == (False, "cooldown")
+
+
+def test_cohort_selection_and_cooldown():
+    pop = DevicePopulation(2000, seed=2)
+    orch = Orchestrator(pop, MetadataStore(), seed=2)
+    cohort = orch.select_cohort(32)
+    assert 0 < len(cohort) <= 32
+    for d in cohort:
+        ok, _ = orch.check_eligibility(d)
+        assert ok
+    orch.finish_round(cohort)
+    # the same devices are rate-limited next round
+    for d in cohort:
+        assert orch.check_eligibility(d) == (False, "cooldown")
+
+
+def test_submission_policy_uses_fa_estimate():
+    pop = DevicePopulation(50, seed=3)
+    meta = MetadataStore()
+    orch = Orchestrator(pop, meta, seed=3)
+    pol = orch.submission_policy()
+    assert pol.keep_pos == pol.keep_neg == 1.0  # no FA estimate yet
+    meta.put("label_pos_ratio", 0.05)
+    pol = orch.submission_policy(target_pos_ratio=0.5)
+    assert pol.keep_pos == 1.0
+    assert pol.keep_neg == pytest.approx(0.05 / 0.95, rel=1e-6)
+    keeps = [orch.control_submission(0, pol) for _ in range(5000)]
+    assert np.mean(keeps) == pytest.approx(pol.keep_neg, abs=0.02)
+
+
+def test_transform_spec_push_versioning():
+    pop = DevicePopulation(10, seed=4)
+    orch = Orchestrator(pop, MetadataStore(), seed=4)
+    orch.push_transform_spec(TransformSpec(1, [{"op": "log1p", "field": "x"}]))
+    with pytest.raises(ValueError):
+        orch.push_transform_spec(TransformSpec(1, []))  # non-increasing
+    orch.push_transform_spec(TransformSpec(2, []))
+
+
+# --- signal transformer --------------------------------------------------------
+def test_signal_transformer_pipeline():
+    spec = TransformSpec(1, [
+        {"op": "log1p", "field": "time_spent"},
+        {"op": "clip", "field": "scroll_speed", "lo": 0.0, "hi": 10.0},
+        {"op": "zscore", "field": "scroll_speed", "mean": 5.0, "std": 2.0},
+        {"op": "inject_server", "field": "hist_ctr", "default": 0.1},
+        {"op": "override_with_local", "field": "pause_freq",
+         "local_field": "pause_freq_local", "default": 0.0},
+    ])
+    st = SignalTransformer(spec)
+    out = st.apply({"time_spent": jnp.asarray(99.0),
+                    "scroll_speed": jnp.asarray(25.0),
+                    "pause_freq_local": jnp.asarray(0.7)},
+                   server_features={"hist_ctr": 0.33, "pause_freq": 0.2})
+    assert float(out["time_spent"]) == pytest.approx(np.log1p(99.0))
+    assert float(out["scroll_speed"]) == pytest.approx((10.0 - 5.0) / 2.0)
+    assert float(out["hist_ctr"]) == pytest.approx(0.33)
+    # feature origin (3): the device value wins over the server value
+    assert float(out["pause_freq"]) == pytest.approx(0.7)
+
+
+def test_spec_json_roundtrip_and_validation():
+    spec = TransformSpec(3, [{"op": "abs", "field": "x"}], min_app_version=2)
+    back = TransformSpec.from_json(spec.to_json())
+    assert back == spec
+    with pytest.raises(ValueError):
+        validate_spec(TransformSpec(1, [{"op": "exec", "field": "x"}]))
+
+
+def test_spec_with_normalization_bakes_factors():
+    from repro.core.analytics.normalization import NormalizationFactors
+    spec = TransformSpec(1, [{"op": "log1p", "field": "a"}])
+    f = NormalizationFactors("zscore", np.asarray([1.0]), np.asarray([2.0]))
+    spec2 = spec_with_normalization(spec, f, ["a"], new_version=2)
+    assert spec2.version == 2
+    st = SignalTransformer(spec2)
+    out = st.apply({"a": jnp.asarray(np.expm1(5.0))})
+    assert float(out["a"]) == pytest.approx((5.0 - 1.0) / 2.0)
+
+
+# --- joiner --------------------------------------------------------------------
+def test_joiner_attribution_window():
+    j = Joiner(attribution_window=100.0)
+    rows = [FeatureRow("k1", 0.0, {"f": 1.0}), FeatureRow("k2", 0.0, {"f": 2.0}),
+            FeatureRow("k3", 0.0, {"f": 3.0})]
+    events = [LabelEvent("k1", 50.0, 1), LabelEvent("k2", 500.0, 1),
+              LabelEvent("k1", 80.0, 0)]
+    out = {e.key: e for e in j.join(rows, events)}
+    assert out["k1"].label == 1 and out["k1"].label_source == "server"
+    assert out["k2"].label == 0 and out["k2"].label_source == "negative_fill"
+    assert out["k3"].label == 0
+    # device-side label override (paper: update label prior to training)
+    upd = Joiner.device_side_update(out["k1"], device_label=0)
+    assert upd.label == 0 and upd.label_source == "device"
+
+
+# --- feature store ---------------------------------------------------------------
+def test_feature_store_encryption_purpose_ttl():
+    clock = [0.0]
+    store = DeviceFeatureStore(b"secret", default_ttl=10.0,
+                               clock=lambda: clock[0])
+    store.put("fl", "feats", {"x": [1.0, 2.0]}, purpose="fl-training")
+    assert store.get("fl", "feats", "fl-training") == {"x": [1.0, 2.0]}
+    with pytest.raises(PermissionError):
+        store.get("fl", "feats", "ads")  # purpose binding
+    # raw blob is not plaintext
+    entry = next(iter(store._data.values()))
+    assert b"1.0" not in entry.blob
+    clock[0] = 11.0
+    with pytest.raises(KeyError):
+        store.get("fl", "feats", "fl-training")  # TTL expired
+
+
+# --- funnel logging ----------------------------------------------------------------
+def test_funnel_conservation_and_privacy():
+    log = FunnelLogger(FUNNEL_PHASES)
+    sids = [new_session_id() for _ in range(10)]
+    for s in sids:
+        log.log(s, "scheduled", "selected", True)
+    for s in sids[:8]:
+        log.log(s, "eligibility", "ok", True)
+    for s in sids[8:]:
+        log.log(s, "eligibility", "battery", False)
+    for s in sids[:8]:
+        log.log(s, "data_init", "metadata_fetch", True)
+    assert log.check_conservation() == []
+    report = dict((p, (e, ok)) for p, e, ok, _ in log.dropoff_report())
+    assert report["scheduled"] == (10, 10)
+    assert report["eligibility"] == (10, 8)
+    # logging identifying info is rejected
+    with pytest.raises(ValueError):
+        log.log(sids[0], "training", "step", True, detail="device_id=42")
+    # dedup by (session, phase, step)
+    n = len(log.events)
+    log.log(sids[0], "scheduled", "selected", True)
+    assert len(log.events) == n
+
+
+def test_funnel_conservation_detects_leak():
+    log = FunnelLogger(FUNNEL_PHASES)
+    log.log("s1", "scheduled", "selected", True)
+    log.log("s2", "eligibility", "ok", True)  # never scheduled: leak
+    log.log("s3", "eligibility", "ok", True)
+    assert log.check_conservation()
+
+
+def test_session_ids_unlinkable():
+    ids = {new_session_id() for _ in range(1000)}
+    assert len(ids) == 1000  # no collisions, no device linkage

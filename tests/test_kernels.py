@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bitagg as kbit
+from repro.kernels import dp_clip as kclip
+from repro.kernels import flash_decode as kflash
+from repro.kernels import ref
+from repro.kernels import secure_agg as ksa
+
+
+@pytest.mark.parametrize("C,D", [(4, 512), (8, 1024), (16, 4096), (32, 512),
+                                 (8, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sq_norms_sweep(C, D, dtype):
+    key = jax.random.PRNGKey(C * D)
+    x = jax.random.normal(key, (C, D)).astype(dtype)
+    got = kclip.sq_norms(x, interpret=True)
+    want = ref.sq_norms(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2
+                               if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("C,D", [(4, 512), (16, 4096), (8, 1536)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scale_accum_sweep(C, D, dtype):
+    key = jax.random.PRNGKey(C + D)
+    x = jax.random.normal(key, (C, D)).astype(dtype)
+    s = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    got = kclip.scale_accum(x, s, interpret=True)
+    want = ref.clip_scale_accumulate(x, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("C,D,clip", [(8, 1024, 0.5), (16, 512, 2.0),
+                                      (4, 4096, 0.1)])
+def test_dp_clip_reduce_fused(C, D, clip):
+    key = jax.random.PRNGKey(int(clip * 100))
+    x = jax.random.normal(key, (C, D)) * 0.5
+    got = kclip.dp_clip_reduce(x, clip, interpret=True)
+    want = ref.dp_clip_reduce(x, clip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("D", [4096, 8192, 1024])
+@pytest.mark.parametrize("bits_scale", [(1 << 20, 4.0), (1000.0, 1.0)])
+def test_secure_agg_encode_sweep(D, bits_scale):
+    scale, vr = bits_scale
+    key = jax.random.PRNGKey(D)
+    x = jax.random.normal(key, (D,)) * vr
+    mask = jax.random.randint(jax.random.fold_in(key, 1), (D,),
+                              -2 ** 31, 2 ** 31 - 1, jnp.int32)
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (D,))
+    got = ksa.quantize_mask(x, mask, u, scale, vr, interpret=True)
+    want = ref.quantize_mask(x, mask, scale, u, value_range=vr)
+    assert bool(jnp.all(got == want))  # integer path: bit-exact
+    back = ksa.dequantize(got - mask, scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(back),
+                               np.asarray(jnp.clip(x, -vr, vr)),
+                               atol=1.5 / scale)
+
+
+@pytest.mark.parametrize("N,F,T", [(128, 8, 16), (256, 16, 8), (512, 8, 4)])
+@pytest.mark.parametrize("flip", [0.0, 0.25])
+def test_bitagg_sweep(N, F, T, flip):
+    key = jax.random.PRNGKey(N + F + T)
+    vals = jax.random.normal(key, (N, F))
+    thr = jnp.linspace(-2, 2, T)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (N, F, T))
+    got = kbit.bit_counts(vals, thr, u, flip, interpret=True)
+    want = ref.bit_counts(vals, thr, u, flip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,W", [(2, 8, 2, 64, 512), (1, 4, 4, 128, 256),
+                                         (2, 16, 8, 64, 1024), (1, 10, 1, 256, 512)])
+@pytest.mark.parametrize("window", [0, 128])
+@pytest.mark.parametrize("fill", [0.4, 1.0])
+def test_flash_decode_sweep(B, H, KV, hd, W, window, fill):
+    key = jax.random.PRNGKey(B * H + W + window)
+    q = jax.random.normal(key, (B, H, hd)) * (hd ** -0.5)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, W, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, W, KV, hd))
+    n_valid = int(W * fill)
+    slot = jnp.where(jnp.arange(W) < n_valid, jnp.arange(W), -1)
+    pos = jnp.int32(n_valid - 1)
+    got = kflash.flash_decode(q, k, v, slot, pos,
+                              window=window, interpret=True)
+    want = jnp.stack([
+        ref.flash_decode(q[b], k[b], v[b], slot, pos,
+                         window if window else None) for b in range(B)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_bf16():
+    key = jax.random.PRNGKey(9)
+    B, H, KV, hd, W = 2, 4, 2, 128, 512
+    q = (jax.random.normal(key, (B, H, hd)) * (hd ** -0.5)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, W, KV, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, W, KV, hd)).astype(jnp.bfloat16)
+    slot = jnp.arange(W)
+    got = kflash.flash_decode(q, k, v, slot, jnp.int32(W - 1), interpret=True)
+    want = jnp.stack([ref.flash_decode(q[b], k[b], v[b], slot,
+                                       jnp.int32(W - 1), None) for b in range(B)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.03)

@@ -1,0 +1,73 @@
+"""Optimizers, data pipeline, DP metrics, serve quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fl import metrics as fl_metrics
+from repro.data.synthetic import ClassifierTask, dirichlet_client_tokens
+from repro.optim import adam, adamw, apply_updates, sgd, sgd_momentum
+
+
+@pytest.mark.parametrize("opt_fn,lr", [(sgd, 0.1), (sgd_momentum, 0.05),
+                                       (adam, 0.2), (adamw, 0.2)])
+def test_optimizers_minimize_quadratic(opt_fn, lr):
+    opt = opt_fn(lr)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(120):
+        g = jax.grad(lambda p: jnp.sum(jnp.square(p["x"])))(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_classifier_task_properties():
+    task = ClassifierTask(num_features=16, pos_ratio=0.05, seed=3)
+    d = task.sample_devices(20_000, rng_seed=1)
+    assert d["label"].mean() == pytest.approx(0.05, abs=0.01)
+    # raw features have wildly heterogeneous scales (normalization matters)
+    stds = d["features_raw"].std(axis=0)
+    assert stds.max() / stds.min() > 30
+
+
+def test_dirichlet_clients_are_non_iid():
+    toks = dirichlet_client_tokens(8, 1, 512, 1024, alpha=0.1, seed=0)
+    # clients concentrate on different vocab slices
+    slice_of = toks[:, 0, :] // (1024 // 8)
+    modes = [np.bincount(s, minlength=8).argmax() for s in slice_of]
+    assert len(set(modes)) > 2
+
+
+def test_dp_metrics_auc_sane():
+    key = jax.random.PRNGKey(0)
+    n = 2000
+    y = (jax.random.uniform(key, (n,)) < 0.5).astype(jnp.int32)
+    # strongly separable logits + noise
+    logit = 4.0 * (y.astype(jnp.float32) - 0.5) + jax.random.normal(key, (n,))
+    per_dev = jax.vmap(fl_metrics.local_eval_stats)(logit[:, None], y[:, None])
+    agg = fl_metrics.aggregate_stats(per_dev, key, noise_multiplier=1.0)
+    d = fl_metrics.derive_metrics(agg)
+    assert float(d["roc_auc"]) > 0.9
+    assert 0.8 < float(d["accuracy"]) <= 1.0
+
+
+def test_score_skew_diagnostic():
+    peaked = jnp.zeros((32,)).at[0].set(500.0).at[-1].set(500.0)
+    spread = jnp.ones((32,)) * 31.25
+    assert float(fl_metrics.score_distribution_skew(peaked)) > 0.9
+    assert float(fl_metrics.score_distribution_skew(spread)) < 0.3
+
+
+def test_int8_weight_quantization_roundtrip():
+    from repro.launch.serve import dequantize_int8, quantize_int8
+    key = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(key, (64, 64)),
+              "norm": {"scale": jnp.ones((64,))}}
+    qp = quantize_int8(params)
+    back = dequantize_int8(qp)
+    err = float(jnp.abs(back["w"] - params["w"]).max())
+    scale = float(jnp.abs(params["w"]).max()) / 127.0
+    assert err <= scale * 0.5 + 1e-6
+    np.testing.assert_array_equal(np.asarray(back["norm"]["scale"]),
+                                  np.ones((64,)))

@@ -1,0 +1,82 @@
+"""Secure aggregation: mask cancellation is EXACT; quantization is bounded."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fl import secure_agg as sa
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
+def test_pairwise_masks_cancel_exactly(n_clients, seed):
+    shape = (33,)
+    peer_ids = list(range(n_clients))
+    total = jnp.zeros(shape, jnp.int32)
+    for c in peer_ids:
+        total = total + sa.pairwise_mask(shape, c, peer_ids, seed)
+    assert bool(jnp.all(total == 0))
+
+
+def test_masked_sum_equals_plain_sum():
+    """The server learns the sum and nothing else changes it."""
+    key = jax.random.PRNGKey(0)
+    n, d = 6, 257
+    updates = [0.5 * jax.random.normal(jax.random.fold_in(key, i), (d,))
+               for i in range(n)]
+    qs = [sa.quantize(u, 32, 4.0) for u in updates]
+    plain = qs[0]
+    for q in qs[1:]:
+        plain = plain + q
+    masked = [sa.mask_update(q, c, list(range(n)), seed=7)
+              for c, q in enumerate(qs)]
+    agg = sa.aggregate_masked(masked)
+    assert bool(jnp.all(agg == plain))  # bit-exact
+    # an individual masked update looks nothing like its plaintext
+    assert float(jnp.mean((masked[0] == qs[0]).astype(jnp.float32))) < 0.01
+
+
+def test_full_protocol_accuracy():
+    key = jax.random.PRNGKey(1)
+    n, d = 8, 1024
+    updates = [0.3 * jax.random.normal(jax.random.fold_in(key, i), (d,))
+               for i in range(n)]
+    mean = sa.secure_aggregate(updates, bits=32, value_range=4.0, seed=3)
+    want = sum(updates) / n
+    assert float(jnp.abs(mean - want).max()) < 1e-5
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(8, 24), st.floats(0.5, 16.0), st.integers(0, 2 ** 31 - 1))
+def test_quantization_error_bound(bits, value_range, seed):
+    """|dequant(quant(x)) - x| <= range/levels (round-to-nearest: half that).
+
+    bits capped at 24: beyond the f32 mantissa the scale multiply itself
+    dominates the quantization step and the bound is float-precision-limited.
+    """
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (500,), minval=-value_range, maxval=value_range)
+    q = sa.quantize(x, bits, value_range)
+    back = sa.dequantize(q, bits, value_range)
+    lsb = value_range / (2 ** (bits - 1) - 1)
+    assert float(jnp.abs(back - x).max()) <= lsb * 0.5 + value_range * 1e-6
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(2)
+    x = jnp.full((20_000,), 0.1234567)
+    q = sa.quantize(x, 8, 1.0, rng=key)  # coarse: 127 levels
+    back = sa.dequantize(q, 8, 1.0)
+    assert float(back.mean()) == pytest.approx(0.1234567, abs=2e-4)
+
+
+def test_round_step_scale_guards_overflow():
+    """Fixed-point scale leaves headroom for a cohort-sized sum."""
+    from repro.configs.base import FLConfig
+    from repro.core.fl.round import _sa_scale
+    fl = FLConfig(secure_agg_bits=32, secure_agg_range=4.0)
+    for cohort in (1, 64, 4096):
+        scale = _sa_scale(fl, cohort)
+        per_client_max = 4.0 * scale + 1  # + stochastic-round bit
+        assert per_client_max * cohort <= 2 ** 31 - 1
