@@ -1,0 +1,210 @@
+"""The unified jitted aggregation engine — one code path for sync and async.
+
+Every aggregate this system produces (a synchronous DP-FL round over a
+cohort, or a buffered-asynchronous FedBuff apply over a staleness-tagged
+buffer) is the same pointwise pipeline:
+
+  1. per-contribution L2 clip (DP-SGD sensitivity bound);
+  2. in ``device`` noise placement, per-contribution Gaussian noise;
+  3. contribution weighting (data weight for sync, staleness discount for
+     async) — applied *before* fixed-point encoding so the weighted sum is
+     what travels through the secure-aggregation field;
+  4. fixed-point int32 encode with stochastic rounding + wraparound sum —
+     bit-identical to the pairwise-masked secure-agg sum (masks cancel; see
+     core/fl/secure_agg.py for the full protocol);
+  5. decode, divide by the total weight, and in ``tee`` placement add one
+     Gaussian draw to the aggregate inside the trusted boundary.
+
+``AggregationSpec`` captures the static parameters of that pipeline so both
+engines share the exact arithmetic; the tree-shaped helpers serve the sync
+round's chunked scan (core/fl/round.py) and the flat ``aggregate_buffer``
+serves the async engine's stacked (B, D) device buffer (core/fl/async_fl.py),
+optionally through the fused Pallas kernels in repro/kernels.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fl import dp
+
+
+class AggregationSpec(NamedTuple):
+    """Static description of one aggregation — hashable, safe as a jit static.
+
+    ``num_contributors`` is the design size of the aggregate (cohort size for
+    sync rounds, buffer size for async): it bounds the fixed-point sum so a
+    full aggregate cannot wrap int32, and scales the TEE noise draw.
+    """
+
+    num_contributors: int
+    clip_norm: float
+    use_secure_agg: bool
+    sa_scale: float  # fixed-point scale (1.0 when secure agg is off)
+    dev_noise: float  # per-contribution Gaussian std ("device" placement)
+    tee_noise: float  # aggregate-mean Gaussian std ("tee" placement)
+
+
+def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
+    """Fixed-point scale such that a full-aggregate sum cannot wrap int32.
+
+    Effective per-contribution levels = (2^(bits-1)-1)/n - 1 — the field must
+    hold the sum including the stochastic-rounding carry bit, exactly as in
+    deployed secure aggregation.
+    """
+    levels = (2 ** (fl_cfg.secure_agg_bits - 1) - 1) / num_contributors - 1.0
+    return max(levels, 1.0) / fl_cfg.secure_agg_range
+
+
+def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
+    use_sa = fl_cfg.secure_agg_bits > 0
+    return AggregationSpec(
+        num_contributors=num_contributors,
+        clip_norm=fl_cfg.clip_norm,
+        use_secure_agg=use_sa,
+        sa_scale=fixed_point_scale(fl_cfg, num_contributors) if use_sa else 1.0,
+        dev_noise=dp.noise_stddev(fl_cfg, num_contributors, "device")
+        if fl_cfg.noise_placement == "device" else 0.0,
+        tee_noise=dp.noise_stddev(fl_cfg, num_contributors, "tee")
+        if fl_cfg.noise_placement == "tee" else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point secure-aggregation encode / decode (tree- and array-shaped)
+# ---------------------------------------------------------------------------
+def encode_array(x: jnp.ndarray, scale: float, rng) -> jnp.ndarray:
+    """Stochastic-rounding fixed-point encode of one array to int32."""
+    xf = x.astype(jnp.float32) * scale
+    floor = jnp.floor(xf)
+    frac = xf - floor
+    bit = (jax.random.uniform(rng, x.shape) < frac).astype(jnp.float32)
+    return (floor + bit).astype(jnp.int32)
+
+
+def encode_tree(tree, scale: float, rng):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [encode_array(x, scale, k) for x, k in zip(leaves, keys)])
+
+
+def decode_tree(tree, scale: float):
+    return jax.tree.map(lambda q: q.astype(jnp.float32) / scale, tree)
+
+
+# ---------------------------------------------------------------------------
+# Per-contribution privatization (shared by the sync chunk scan and async)
+# ---------------------------------------------------------------------------
+def privatize_contribution(delta, spec: AggregationSpec, rng) -> Tuple:
+    """Clip one contribution (+ local noise under ``device`` placement).
+
+    Returns (delta, pre_clip_norm, was_clipped).
+    """
+    delta, nrm, was_clipped = dp.clip_update(delta, spec.clip_norm)
+    if spec.dev_noise > 0.0:
+        delta = dp.add_noise(delta, jax.random.fold_in(rng, 1), spec.dev_noise)
+    return delta, nrm, was_clipped
+
+
+def accumulator_dtype(spec: AggregationSpec):
+    return jnp.int32 if spec.use_secure_agg else jnp.float32
+
+
+def zero_accumulator(params, spec: AggregationSpec, leading: Tuple[int, ...] = ()):
+    """A zeroed aggregation accumulator shaped like ``params`` (+ leading)."""
+    dt = accumulator_dtype(spec)
+    return jax.tree.map(lambda x: jnp.zeros(leading + x.shape, dt), params)
+
+
+def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
+    """Decode the summed accumulator into the noised mean delta.
+
+    ``rng`` is consumed only under ``tee`` placement: one Gaussian draw on the
+    aggregate inside the trusted boundary (central DP). The TEE std is defined
+    on a ``num_contributors``-sized sum, so it is rescaled by n/total_weight
+    when dropout/weighting shrinks the effective aggregate.
+    """
+    w = jnp.maximum(total_weight, 1e-9)
+    agg = decode_tree(acc, spec.sa_scale) if spec.use_secure_agg else acc
+    mean = jax.tree.map(lambda a: a / w, agg)
+    if spec.tee_noise > 0.0:
+        mean = dp.add_noise(mean, rng, spec.tee_noise * spec.num_contributors / w)
+    return mean
+
+
+# ---------------------------------------------------------------------------
+# Flat batched aggregation — the buffered-async hot path
+# ---------------------------------------------------------------------------
+def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
+                     spec: AggregationSpec, rng, *,
+                     use_pallas: bool = False):
+    """One batched on-device aggregation of a stacked contribution buffer.
+
+    buf:     (B, D) f32 — raw (unclipped) flattened contributions.
+    weights: (B,) f32 — per-contribution weight (staleness discount x validity
+             mask); zero rows are excluded from the aggregate.
+
+    Returns (mean_delta_flat (D,), stats dict). The whole computation is
+    traceable: clip scales from per-row squared norms, weighting, stochastic
+    fixed-point encode, wraparound int32 sum, decode, weight-normalized mean,
+    TEE noise — with an optional fused Pallas path (sq-norms kernel + fused
+    weight/quantize/accumulate kernel) that never materializes the encoded
+    per-contribution ints in HBM.
+    """
+    B, D = buf.shape
+    interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        from repro.kernels import dp_clip as _kclip
+        pb, pd = (-B) % 8, (-D) % 512  # pad up to kernel tile multiples
+        pbuf = jnp.pad(buf.astype(jnp.float32), ((0, pb), (0, pd)))
+        sq = _kclip.sq_norms(pbuf, interpret=interpret)[:B]
+    else:
+        sq = jnp.sum(buf.astype(jnp.float32) * buf.astype(jnp.float32), axis=1)
+    nrm = jnp.sqrt(sq)
+    clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
+    was_clipped = (clip_scale < 1.0).astype(jnp.float32)
+
+    # weighted, clipped contributions; "device" noise rides the same weights
+    row_w = weights * clip_scale  # (B,)
+    if spec.dev_noise > 0.0:
+        noise = jax.random.normal(jax.random.fold_in(rng, 1), (B, D), jnp.float32)
+        noise = noise * (spec.dev_noise * weights)[:, None]
+    else:
+        noise = None
+
+    if spec.use_secure_agg:
+        uniforms = jax.random.uniform(jax.random.fold_in(rng, 2), (B, D))
+        if noise is None:
+            qx, qw = buf.astype(jnp.float32), row_w
+        else:  # noise folded in pre-quantization; weights already applied
+            qx = buf.astype(jnp.float32) * row_w[:, None] + noise
+            qw = jnp.ones((B,), jnp.float32)
+        if use_pallas:
+            from repro.kernels import secure_agg as _ksa
+            pb, pd = (-B) % 8, (-D) % 512
+            acc = _ksa.weighted_quantize_accum(
+                jnp.pad(qx, ((0, pb), (0, pd))), jnp.pad(qw, (0, pb)),
+                jnp.pad(uniforms, ((0, pb), (0, pd))), spec.sa_scale,
+                interpret=interpret)[:D]
+        else:
+            xf = qx * qw[:, None] * spec.sa_scale
+            floor = jnp.floor(xf)
+            bit = (uniforms < (xf - floor)).astype(jnp.float32)
+            acc = (floor + bit).astype(jnp.int32).sum(0)  # wraps mod 2^32
+    else:
+        x = buf.astype(jnp.float32) * row_w[:, None]
+        if noise is not None:
+            x = x + noise
+        acc = x.sum(0)
+
+    w_total = weights.sum()
+    mean = finalize_aggregate(acc, w_total, spec, jax.random.fold_in(rng, 0xDEE))
+    stats = {
+        "update_norm": (nrm * weights).sum() / jnp.maximum(w_total, 1e-9),
+        "clip_fraction": (was_clipped * weights).sum() / jnp.maximum(w_total, 1e-9),
+        "weight_total": w_total,
+    }
+    return mean, stats

@@ -1,75 +1,166 @@
-"""Asynchronous FL (FedBuff / Papaya, the paper's ref [5]).
+"""Asynchronous FL (FedBuff / Papaya, the paper's ref [5]) — jitted engine.
 
 The paper cites async FL as the optimization that cuts training time ~5x and
 network overhead ~8x versus synchronous rounds.  This module provides:
 
-  1. ``AsyncServer`` — a buffered-async aggregator: clients pull whatever
-     model version is current, train locally, and push staleness-weighted
-     updates; the server applies the buffer every ``buffer_size`` arrivals.
-  2. ``simulate`` — an event-driven simulator over a heterogeneous device
-     population (lognormal round times, dropouts) that measures wall-clock
-     and bytes for sync vs async regimes — the harness behind
-     benchmarks/bench_async.py.
+  1. ``build_async_buffer_step`` — the jitted buffered-async aggregation
+     step, built on the same unified engine (core/fl/aggregation.py) as the
+     synchronous round: a stacked (buffer_size, D) device buffer of client
+     deltas with their staleness values is staleness-weighted, DP-clipped,
+     fixed-point secure-agg encoded, wraparound-summed, decoded and applied
+     through the shared server optimizer in ONE batched on-device
+     computation — no per-update host transfers.
+  2. ``AsyncServer`` — the host facade: clients pull whatever model version
+     is current and push deltas; pushes are written straight into a
+     preallocated device buffer (one jitted dynamic-slot write, no float()
+     round-trips), and the jitted step fires every ``buffer_size`` arrivals.
+  3. ``simulate`` — the event-driven fleet simulator (lognormal device
+     times, dropouts) over a *numpy bytes model* for wall-clock/network
+     accounting, and ``simulate_training`` — the same event loop driving the
+     REAL jitted engines (sync ``round_step`` vs async buffer) end-to-end.
 """
 from __future__ import annotations
 
 import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
-from repro.core.fl import dp
+from repro.core.fl import aggregation as agg
+from repro.core.fl.server_opt import build_server_opt
 
 
 def staleness_weight(staleness, mode: str = "polynomial", a: float = 0.5):
-    """FedBuff staleness discounting: w = 1/(1+s)^a."""
+    """FedBuff staleness discounting: w = 1/(1+s)^a.
+
+    Staleness is clamped at 0: a buggy/malicious client claiming a *future*
+    model version must not inject NaN weights into the aggregate.
+    """
+    s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
     if mode == "constant":
-        return jnp.ones_like(jnp.asarray(staleness, jnp.float32))
-    return (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-a)
+        return jnp.ones_like(s)
+    return (1.0 + s) ** (-a)
+
+
+# ---------------------------------------------------------------------------
+# The jitted buffered-async step
+# ---------------------------------------------------------------------------
+def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
+                            staleness_mode: str = "polynomial",
+                            staleness_exponent: float = 0.5,
+                            use_pallas: Optional[bool] = None) -> Callable:
+    """Returns jitted ``step(params, opt_state, buf, staleness, valid, rng)``.
+
+    buf:       (buffer_size, D) f32 — raw flattened client deltas (D is the
+               flattened parameter size of ``params``).
+    staleness: (buffer_size,) f32 — server_version - pulled_version per slot.
+    valid:     (buffer_size,) f32 — 1.0 for filled slots (partial flushes).
+
+    The step shares clip / noise-placement / fixed-point encode / decode /
+    server-optimizer semantics with the sync round via AggregationSpec: at
+    staleness 0 with constant weighting it computes exactly the sync round's
+    mean delta (up to fixed-point stochastic rounding).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    spec = agg.make_spec(fl_cfg, buffer_size)
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+
+    def step(params, opt_state, buf, staleness, valid, rng):
+        w = staleness_weight(staleness, staleness_mode, staleness_exponent)
+        w = w * valid  # empty slots contribute nothing
+        mean_flat, stats = agg.aggregate_buffer(buf, w, spec, rng,
+                                                use_pallas=use_pallas)
+        mean_delta = unravel(mean_flat)
+        new_params, new_opt = server.apply(params, opt_state, mean_delta)
+        metrics = {
+            "update_norm": stats["update_norm"],
+            "clip_fraction": stats["clip_fraction"],
+            "weight_total": stats["weight_total"],
+            "staleness_mean": (staleness * valid).sum()
+            / jnp.maximum(valid.sum(), 1.0),
+        }
+        return new_params, new_opt, metrics
+
+    return jax.jit(step)
 
 
 class AsyncServer:
-    """Buffered asynchronous aggregation with staleness weighting + DP."""
+    """Buffered asynchronous aggregation with staleness weighting + DP.
+
+    The facade keeps only host metadata (version counter, fill pointer) in
+    Python; every push is a single jitted write of the flattened delta into a
+    preallocated (buffer_size, D) device buffer, and every apply is one
+    invocation of the jitted buffer step.  No per-push host-device transfer
+    of update payloads, no ``float()`` round-trips.
+    """
 
     def __init__(self, params, fl_cfg, buffer_size: int = 10,
-                 staleness_exponent: float = 0.5):
+                 staleness_exponent: float = 0.5,
+                 staleness_mode: str = "polynomial",
+                 use_pallas: Optional[bool] = None):
         self.params = params
         self.fl_cfg = fl_cfg
         self.buffer_size = buffer_size
         self.staleness_exponent = staleness_exponent
+        self.staleness_mode = staleness_mode
         self.version = 0
-        self._buffer: List[Tuple[Any, float]] = []
+        self.last_metrics: Optional[dict] = None
         self._applied_updates = 0
+        self._fill = 0
 
+        flat, _ = ravel_pytree(params)
+        D = flat.shape[0]
+        self._opt_state = build_server_opt(fl_cfg).init(params)
+        self._buf = jnp.zeros((buffer_size, D), jnp.float32)
+        self._stal = jnp.zeros((buffer_size,), jnp.float32)
+        self._valid = jnp.zeros((buffer_size,), jnp.float32)
+        self._step = build_async_buffer_step(
+            params, fl_cfg, buffer_size=buffer_size,
+            staleness_mode=staleness_mode,
+            staleness_exponent=staleness_exponent, use_pallas=use_pallas)
+
+        @jax.jit
+        def _write(buf, stal, valid, slot, delta, s):
+            flat_d, _ = ravel_pytree(delta)
+            return (buf.at[slot].set(flat_d.astype(jnp.float32)),
+                    stal.at[slot].set(jnp.asarray(s, jnp.float32)),
+                    valid.at[slot].set(1.0))
+
+        self._write = _write
+
+    # -- client protocol ----------------------------------------------------
     def pull(self) -> Tuple[Any, int]:
         return self.params, self.version
 
     def push(self, delta, client_version: int, rng=None) -> None:
-        staleness = self.version - client_version
-        w = float(staleness_weight(staleness, a=self.staleness_exponent))
-        delta, _, _ = dp.clip_update(delta, self.fl_cfg.clip_norm)
-        self._buffer.append((delta, w))
-        if len(self._buffer) >= self.buffer_size:
+        staleness = self.version - client_version  # host-int metadata only
+        self._buf, self._stal, self._valid = self._write(
+            self._buf, self._stal, self._valid, self._fill, delta, staleness)
+        self._fill += 1
+        if self._fill >= self.buffer_size:
             self._apply(rng)
 
+    def flush(self, rng=None) -> None:
+        """Apply a partially-filled buffer (end of run / deadline)."""
+        if self._fill > 0:
+            self._apply(rng)
+
+    # -- server step --------------------------------------------------------
     def _apply(self, rng=None) -> None:
-        total_w = sum(w for _, w in self._buffer)
-        agg = jax.tree.map(lambda *xs: sum(xs),
-                           *[jax.tree.map(lambda d: d * w, d_) for d_, w in self._buffer])
-        mean = jax.tree.map(lambda a: a / total_w, agg)
-        if self.fl_cfg.noise_multiplier > 0 and rng is not None:
-            std = self.fl_cfg.noise_multiplier * self.fl_cfg.clip_norm / self.buffer_size
-            mean = dp.add_noise(mean, rng, std)
-        self.params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32)
-                          + self.fl_cfg.server_lr * d).astype(p.dtype),
-            self.params, mean)
+        if rng is None:  # deterministic per-version stream for rounding/noise
+            rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
+        self.params, self._opt_state, self.last_metrics = self._step(
+            self.params, self._opt_state, self._buf, self._stal, self._valid,
+            rng)
         self.version += 1
-        self._applied_updates += len(self._buffer)
-        self._buffer = []
+        self._applied_updates += self._fill
+        self._fill = 0
+        self._valid = jnp.zeros_like(self._valid)
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +225,7 @@ def simulate(mode: str, *, population: int, cohort: int, target_updates: int,
         active = rs.choice(population, size=cohort, replace=False)
         for d in active:
             heapq.heappush(heap, (float(times[d]), int(d)))
-        t, up, down, applied, steps = 0.0, cohort * model_bytes, 0.0, 0, 0
+        t, applied, steps = 0.0, 0, 0
         down = cohort * model_bytes
         up = 0.0
         buf = 0
@@ -153,5 +244,113 @@ def simulate(mode: str, *, population: int, cohort: int, target_updates: int,
             down += model_bytes
             heapq.heappush(heap, (t + float(times[nxt]), nxt))
         return SimResult(t, up, down, applied, steps)
+
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulation over the REAL jitted engines
+# ---------------------------------------------------------------------------
+@dataclass
+class TrainingSimResult:
+    sim: SimResult
+    losses: List[float]  # per-applied-update client loss trace
+    host_seconds: float  # real wall-clock spent in the jitted engines
+
+    @property
+    def final_loss(self) -> float:
+        import numpy as np
+        k = max(1, len(self.losses) // 10)
+        return float(np.mean(self.losses[-k:]))
+
+
+def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
+                      make_client_batch: Callable, target_updates: int,
+                      cohort: int, population: int = 1024,
+                      buffer_size: int = 10, model_bytes: float = 4e6,
+                      seed: int = 0, dropout: float = 0.0,
+                      staleness_exponent: float = 0.5,
+                      round_overhead: float = 30.0) -> TrainingSimResult:
+    """The event-driven fleet simulation driving the real jitted engines.
+
+    mode="sync": the shared jitted ``round_step`` over cohort-sized rounds
+    (wall-clock = straggler of each round + coordination overhead).
+    mode="async": the heterogeneous-fleet event loop feeding the jitted
+    ``async_buffer_step`` through ``AsyncServer`` — each completing device
+    trained against the (stale) version it pulled.
+
+    ``make_client_batch(client_seed, n_clients)`` must return a batch pytree
+    with leading axis ``n_clients``.  Simulated wall-clock uses the same
+    lognormal device-time model as ``simulate``; ``host_seconds`` measures
+    the actual jitted compute.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.fl.round import build_client_update, build_round_step, \
+        init_fl_state
+
+    times = _device_times(population, seed)
+    rs = np.random.RandomState(seed + 1)
+    key = jax.random.PRNGKey(seed)
+    losses: List[float] = []
+
+    if mode == "sync":
+        step = build_round_step(loss_fn, fl_cfg, cohort_size=cohort)
+        state = init_fl_state(params, fl_cfg)
+        t, up, down, applied, steps = 0.0, 0.0, 0.0, 0, 0
+        host0 = _time.perf_counter()
+        while applied < target_updates:
+            sel = rs.choice(population, size=cohort, replace=False)
+            batch = make_client_batch(steps, cohort)
+            state, metrics = step(state, batch, jax.random.fold_in(key, steps))
+            losses.append(float(metrics["loss"]))
+            t += float(np.max(times[sel])) + round_overhead
+            down += cohort * model_bytes
+            up += cohort * model_bytes
+            applied += cohort
+            steps += 1
+        host = _time.perf_counter() - host0
+        return TrainingSimResult(
+            SimResult(t, up, down, applied, steps), losses, host)
+
+    if mode == "async":
+        client_update = jax.jit(build_client_update(loss_fn, fl_cfg))
+        srv = AsyncServer(params, fl_cfg, buffer_size=buffer_size,
+                          staleness_exponent=staleness_exponent)
+        # in-flight: (finish_time, device, client_seed, (version, params) at
+        # PULL time — the device really trains against its stale snapshot
+        # (cseed is unique, so heap comparison never reaches the pytree)
+        heap: List[Tuple[float, int, int, Tuple[int, Any]]] = []
+        for i, d in enumerate(rs.choice(population, size=cohort,
+                                        replace=False)):
+            params_now, ver_now = srv.pull()
+            heapq.heappush(heap, (float(times[d]), int(d), i,
+                                  (ver_now, params_now)))
+        t, applied, n_started = 0.0, 0, cohort
+        down, up = cohort * model_bytes, 0.0
+        host0 = _time.perf_counter()
+        while applied < target_updates:
+            t, d, cseed, (pulled_version, pulled_params) = heapq.heappop(heap)
+            if rs.uniform() >= dropout:
+                batch = make_client_batch(cseed, 1)
+                cbatch = jax.tree.map(lambda x: x[0], batch)
+                delta, loss = client_update(
+                    pulled_params, cbatch, jax.random.fold_in(key, cseed))
+                srv.push(delta, pulled_version,
+                         rng=jax.random.fold_in(key, 0x5000 + applied))
+                losses.append(float(loss))
+                up += model_bytes
+                applied += 1
+            nxt = int(rs.randint(population))
+            params_now, ver_now = srv.pull()
+            heapq.heappush(heap, (t + float(times[nxt]), nxt, n_started,
+                                  (ver_now, params_now)))
+            n_started += 1
+            down += model_bytes
+        host = _time.perf_counter() - host0
+        return TrainingSimResult(
+            SimResult(t, up, down, applied, srv.version), losses, host)
 
     raise ValueError(mode)

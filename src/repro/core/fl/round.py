@@ -23,13 +23,12 @@ Two execution strategies over the cohort:
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fl import dp
+from repro.core.fl import aggregation as agg
 from repro.core.fl.server_opt import build_server_opt
 
 
@@ -68,36 +67,13 @@ def build_client_update(loss_fn: Callable, fl_cfg) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Fixed-point secure-aggregation encoding inside the round step
+# Fixed-point secure-aggregation encoding now lives in the shared engine
+# (core/fl/aggregation.py); these aliases keep the historical names working.
 # ---------------------------------------------------------------------------
-def _sa_scale(fl_cfg, cohort_size: int) -> float:
-    """Fixed-point scale such that a cohort-sized sum cannot wrap int32.
-
-    Effective per-client levels = (2^(bits-1)-1)/cohort - 1 — the field must
-    hold the sum including the stochastic-rounding carry bit, exactly as in
-    deployed secure aggregation.
-    """
-    levels = (2 ** (fl_cfg.secure_agg_bits - 1) - 1) / cohort_size - 1.0
-    return max(levels, 1.0) / fl_cfg.secure_agg_range
-
-
-def _sa_encode(x: jnp.ndarray, scale: float, rng) -> jnp.ndarray:
-    xf = x.astype(jnp.float32) * scale
-    floor = jnp.floor(xf)
-    frac = xf - floor
-    bit = (jax.random.uniform(rng, x.shape) < frac).astype(jnp.float32)
-    return (floor + bit).astype(jnp.int32)
-
-
-def _sa_encode_tree(tree, scale: float, rng):
-    leaves, treedef = jax.tree.flatten(tree)
-    keys = jax.random.split(rng, len(leaves))
-    return jax.tree.unflatten(
-        treedef, [_sa_encode(x, scale, k) for x, k in zip(leaves, keys)])
-
-
-def _sa_decode_tree(tree, scale: float):
-    return jax.tree.map(lambda q: q.astype(jnp.float32) / scale, tree)
+_sa_scale = agg.fixed_point_scale
+_sa_encode = agg.encode_array
+_sa_encode_tree = agg.encode_tree
+_sa_decode_tree = agg.decode_tree
 
 
 # ---------------------------------------------------------------------------
@@ -112,12 +88,9 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
     """
     client_update = build_client_update(loss_fn, fl_cfg)
     server = build_server_opt(fl_cfg)
-    use_secure_agg = fl_cfg.secure_agg_bits > 0
-    sa_scale = _sa_scale(fl_cfg, cohort_size) if use_secure_agg else 1.0
-    dev_noise = dp.noise_stddev(fl_cfg, cohort_size, "device") \
-        if fl_cfg.noise_placement == "device" else 0.0
-    tee_noise = dp.noise_stddev(fl_cfg, cohort_size, "tee") \
-        if fl_cfg.noise_placement == "tee" else 0.0
+    spec = agg.make_spec(fl_cfg, cohort_size)
+    use_secure_agg = spec.use_secure_agg
+    sa_scale = spec.sa_scale
 
     if clients_per_chunk <= 0:
         clients_per_chunk = cohort_size if client_parallel else 1
@@ -127,9 +100,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
 
     def one_client(params, cbatch, rng):
         delta, loss = client_update(params, cbatch, rng)
-        delta, nrm, was_clipped = dp.clip_update(delta, fl_cfg.clip_norm)
-        if dev_noise > 0.0:
-            delta = dp.add_noise(delta, jax.random.fold_in(rng, 1), dev_noise)
+        delta, nrm, was_clipped = agg.privatize_contribution(delta, spec, rng)
         return delta, loss, nrm, was_clipped
 
     def round_step(state: FLState, batch, rng):
@@ -146,16 +117,14 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         wchunks = weights.reshape(m, n_chunks).swapaxes(0, 1)
         rngs = jax.random.split(rng, n_chunks * m).reshape(n_chunks, m, 2)
 
-        acc_dtype = jnp.int32 if use_secure_agg else jnp.float32
         deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
         if deferred:
             # per-client-slot partial accumulators: slot axis shards like the
             # client axis, so the chunk-scan accumulation is collective-free
             # and the cross-device reduction happens ONCE after the scan.
-            acc0 = jax.tree.map(
-                lambda x: jnp.zeros((m,) + x.shape, acc_dtype), params)
+            acc0 = agg.zero_accumulator(params, spec, leading=(m,))
         else:
-            acc0 = jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dtype), params)
+            acc0 = agg.zero_accumulator(params, spec)
         stats0 = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
 
         def chunk_body(carry, xs):
@@ -202,16 +171,9 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         w_total = jnp.maximum(w_s, 1e-9)
         if deferred:
             acc = jax.tree.map(lambda a: a.sum(0), acc)  # one reduction/round
-        if use_secure_agg:
-            agg = _sa_decode_tree(acc, sa_scale)
-        else:
-            agg = acc
-        mean_delta = jax.tree.map(lambda a: a / w_total, agg)
-
-        if tee_noise > 0.0:
-            # central DP: one Gaussian draw on the aggregate inside the TEE
-            mean_delta = dp.add_noise(
-                mean_delta, jax.random.fold_in(rng, 0xDEE), tee_noise * cohort_size / w_total)
+        # decode + weight-normalize + TEE noise draw: shared engine semantics
+        mean_delta = agg.finalize_aggregate(acc, w_s, spec,
+                                            jax.random.fold_in(rng, 0xDEE))
 
         new_params, new_opt = server.apply(params, state.opt_state, mean_delta)
         metrics = {

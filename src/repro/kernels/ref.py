@@ -45,6 +45,18 @@ def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
     return q.astype(jnp.float32) / scale
 
 
+def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
+                            uniforms: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """out[d] = sum_c quantize(weights[c] * x[c, d]) — int32 wraparound sum.
+
+    x, uniforms: (C, D); weights: (C,).  The buffered-async aggregation loop.
+    """
+    xf = x.astype(jnp.float32) * weights.astype(jnp.float32)[:, None] * scale
+    floor = jnp.floor(xf)
+    bit = (uniforms < (xf - floor)).astype(jnp.float32)
+    return (floor + bit).astype(jnp.int32).sum(0)  # int32 add wraps mod 2^32
+
+
 # --- bitagg -------------------------------------------------------------------
 def bit_counts(values: jnp.ndarray, thresholds: jnp.ndarray,
                uniforms: jnp.ndarray, flip_prob: float) -> jnp.ndarray:

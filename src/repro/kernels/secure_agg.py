@@ -45,6 +45,59 @@ def quantize_mask(x: jnp.ndarray, mask: jnp.ndarray, uniforms: jnp.ndarray,
     )(x, mask, uniforms)
 
 
+DEFAULT_BLOCK_D = 512
+DEFAULT_BLOCK_C = 8
+
+
+def _weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, out_ref, *,
+                                    scale: float):
+    i = pl.program_id(1)  # client-block index (innermost: accumulation)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (block_c, block_d)
+    w = w_ref[...].astype(jnp.float32)  # (block_c,)
+    xf = x * w[:, None] * scale
+    floor = jnp.floor(xf)
+    bit = (u_ref[...] < (xf - floor)).astype(jnp.float32)
+    q = (floor + bit).astype(jnp.int32)
+    out_ref[...] += jnp.sum(q, axis=0)  # int32 add wraps mod 2^32
+
+
+def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
+                            uniforms: jnp.ndarray, scale: float, *,
+                            block_c: int = DEFAULT_BLOCK_C,
+                            block_d: int = DEFAULT_BLOCK_D,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Fused buffered-async hot loop: out[d] = sum_c q(w[c] * x[c, d]).
+
+    x, uniforms: (C, D) f32; weights: (C,) f32 -> (D,) int32 wraparound sum.
+    Each contribution is weighted, stochastic-round fixed-point encoded and
+    accumulated in one pass — the encoded per-client ints never touch HBM.
+    """
+    C, D = x.shape
+    block_c = min(block_c, C)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and D % block_d == 0, (C, D, block_c, block_d)
+    import functools
+    kern = functools.partial(_weighted_quantize_accum_kernel, scale=scale)
+    grid = (D // block_d, C // block_c)  # clients innermost for accumulation
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, block_d), lambda j, i: (i, j)),
+            pl.BlockSpec((block_c,), lambda j, i: (i,)),
+            pl.BlockSpec((block_c, block_d), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
+        interpret=interpret,
+    )(x, weights, uniforms)
+
+
 def _dequantize_kernel(q_ref, out_ref, *, inv_scale: float):
     out_ref[...] = q_ref[...].astype(jnp.float32) * inv_scale
 

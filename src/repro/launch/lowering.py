@@ -201,9 +201,8 @@ def _probe_train(cfg, shape, mesh, fl_cfg, opts, meta):
     popts["clients_per_chunk"] = probe_shape.global_batch
     if meta["client_parallel"]:
         tp = mesh.shape["model"]
-        probe_mesh = _jax.make_mesh(
-            (1, tp), ("data", "model"),
-            axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        probe_mesh = make_mesh_compat((1, tp), ("data", "model"))
     else:
         probe_mesh = mesh
     fn, args, _ = build_train(probe_cfg, probe_shape, probe_mesh,

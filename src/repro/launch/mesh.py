@@ -5,20 +5,30 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_compat(shape, axes):
+    """Version-compatible ``jax.make_mesh``.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer jax;
+    on e.g. 0.4.37 plain ``make_mesh`` already yields Auto axes, so simply
+    omit the argument when the enum is absent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e: 16x16 (256 chips) per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2):
     """Small mesh over host devices for CPU integration tests."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 def axis_size(mesh, name: str) -> int:

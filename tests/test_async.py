@@ -4,8 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import mlp as mlp_cfg
 from repro.configs.base import FLConfig
-from repro.core.fl.async_fl import AsyncServer, simulate, staleness_weight
+from repro.core.fl.async_fl import (AsyncServer, build_async_buffer_step,
+                                    simulate, simulate_training,
+                                    staleness_weight)
+from repro.core.fl.round import build_client_update, build_round_step, \
+    init_fl_state
+from repro.models.model import build_mlp_classifier
 
 
 def test_staleness_weight_decreasing():
@@ -14,6 +20,18 @@ def test_staleness_weight_decreasing():
     assert np.all(np.diff(w) < 0)
     assert w[0] == pytest.approx(1.0)
     assert np.asarray(staleness_weight(5, mode="constant")) == pytest.approx(1.0)
+    # a client claiming a FUTURE version (negative staleness) must not NaN
+    assert np.asarray(staleness_weight(-5)) == pytest.approx(1.0)
+
+
+def test_negative_staleness_does_not_nan_model():
+    fl = FLConfig(clip_norm=10.0, server_lr=1.0)
+    srv = AsyncServer({"w": jnp.zeros((4,))}, fl, buffer_size=2)
+    srv.push({"w": jnp.ones((4,))}, client_version=5)  # "future" pull
+    srv.push({"w": jnp.ones((4,))}, client_version=0)
+    assert srv.version == 1
+    assert np.all(np.isfinite(np.asarray(srv.params["w"])))
+    np.testing.assert_allclose(np.asarray(srv.params["w"]), 1.0, atol=1e-6)
 
 
 def test_async_server_buffers_and_applies():
@@ -40,6 +58,128 @@ def test_async_server_staleness_discount():
     fresh_w, stale_w = 1.0, (1 + 4) ** -0.5
     want = (fresh_w * 1.0 + stale_w * 1.0) / (fresh_w + stale_w)
     np.testing.assert_allclose(np.asarray(srv.params["w"])[0], want, rtol=1e-5)
+
+
+def test_async_server_flush_partial_buffer():
+    """A partial flush aggregates only the filled slots (valid mask)."""
+    fl = FLConfig(clip_norm=10.0, server_lr=1.0)
+    srv = AsyncServer({"w": jnp.zeros((4,))}, fl, buffer_size=8)
+    srv.push({"w": jnp.ones((4,))}, 0)
+    srv.push({"w": 3.0 * jnp.ones((4,))}, 0)
+    assert srv.version == 0
+    srv.flush()
+    assert srv.version == 1
+    np.testing.assert_allclose(np.asarray(srv.params["w"]), 2.0, atol=1e-6)
+    srv.flush()  # empty: no-op
+    assert srv.version == 1
+
+
+# --- sync/async parity: the unified engine contract -------------------------
+@pytest.fixture(scope="module")
+def parity_setup():
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (8, 2, cfg.num_features))
+    y = (x.sum(-1) > 0).astype(jnp.float32)
+    return model, params, {"features": x, "label": y}
+
+
+@pytest.mark.parametrize("bits", [0, 32])
+@pytest.mark.parametrize("staleness_mode", ["constant", "polynomial"])
+def test_async_matches_sync_at_staleness_zero(parity_setup, bits,
+                                              staleness_mode):
+    """At staleness 0 the jitted async_buffer_step aggregate == the sync
+    round_step mean delta (within fixed-point quantization tolerance), with
+    and without secure aggregation — the unified-engine guarantee."""
+    model, params, batch = parity_setup
+    fl = FLConfig(cohort_size=8, local_steps=1, local_lr=0.2, clip_norm=1.0,
+                  noise_multiplier=0.0, secure_agg_bits=bits)
+    rng = jax.random.PRNGKey(3)
+
+    step = jax.jit(build_round_step(model.loss_fn, fl, cohort_size=8))
+    sync_state, _ = step(init_fl_state(params, fl), dict(batch), rng)
+
+    client_update = jax.jit(build_client_update(model.loss_fn, fl))
+    srv = AsyncServer(params, fl, buffer_size=8,
+                      staleness_mode=staleness_mode)
+    base_params, ver = srv.pull()
+    for c in range(8):
+        cbatch = jax.tree.map(lambda v: v[c], batch)
+        delta, _ = client_update(base_params, cbatch, jax.random.fold_in(rng, c))
+        srv.push(delta, ver, rng=jax.random.fold_in(rng, 100 + c))
+    assert srv.version == 1
+
+    tol = 1e-6 if bits == 0 else 2e-5  # fixed-point stochastic rounding
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         sync_state.params, srv.params)
+    assert max(jax.tree.leaves(diffs)) < tol
+
+
+def test_async_buffer_step_jitted_standalone(parity_setup):
+    """The engine is usable without the facade: flat buffers in, state out."""
+    from jax.flatten_util import ravel_pytree
+    model, params, batch = parity_setup
+    fl = FLConfig(clip_norm=1.0, server_lr=1.0)
+    from repro.core.fl.server_opt import build_server_opt
+    opt_state = build_server_opt(fl).init(params)
+    step = build_async_buffer_step(params, fl, buffer_size=4)
+    flat, _ = ravel_pytree(params)
+    buf = jnp.ones((4, flat.shape[0]), jnp.float32)
+    new_params, new_opt, metrics = step(
+        params, opt_state, buf, jnp.zeros((4,)), jnp.ones((4,)),
+        jax.random.PRNGKey(0))
+    # each row has norm sqrt(D) >> clip 1.0 => clipped everywhere
+    assert float(metrics["clip_fraction"]) == pytest.approx(1.0)
+    assert float(metrics["weight_total"]) == pytest.approx(4.0)
+    got = jax.tree.map(lambda a, b: np.asarray(a - b), new_params, params)
+    want = 1.0 / np.sqrt(flat.shape[0])  # clipped mean delta, server_lr=1
+    for leaf in jax.tree.leaves(got):
+        np.testing.assert_allclose(leaf, want, rtol=1e-4)
+
+
+def test_staleness_reduces_influence_via_engine():
+    """Polynomial discounting: a stale push moves the model less."""
+    fl = FLConfig(clip_norm=10.0, server_lr=1.0, secure_agg_bits=0)
+
+    def run(staleness):
+        srv = AsyncServer({"w": jnp.zeros((2,))}, fl, buffer_size=2)
+        srv.version = 8
+        srv.push({"w": jnp.ones((2,))}, client_version=8)  # fresh anchor
+        srv.push({"w": -jnp.ones((2,))}, client_version=8 - staleness)
+        return float(np.asarray(srv.params["w"])[0])
+
+    # the negative (second) push is increasingly discounted with staleness
+    assert run(0) == pytest.approx(0.0, abs=1e-6)
+    assert run(2) > 0.1
+    assert run(6) > run(2)
+
+
+def test_simulate_training_async_converges():
+    """The event-driven sim drives the REAL jitted engine and learns."""
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fl = FLConfig(local_steps=2, local_lr=0.4, clip_norm=1.0, server_lr=1.0)
+    key = jax.random.PRNGKey(9)
+    wstar = jax.random.normal(key, (cfg.num_features,))
+
+    def make_client_batch(seed, n):
+        k = jax.random.fold_in(key, seed)
+        x = jax.random.normal(k, (n, 4, cfg.num_features))
+        y = (jnp.einsum("cbf,f->cb", x, wstar) > 0).astype(jnp.float32)
+        return {"features": x, "label": y}
+
+    res = simulate_training(
+        "async", loss_fn=model.loss_fn, params=params, fl_cfg=fl,
+        make_client_batch=make_client_batch, target_updates=96, cohort=16,
+        population=64, buffer_size=8, seed=1)
+    assert res.sim.applied_updates >= 96
+    assert res.sim.server_steps == 96 // 8
+    k = len(res.losses) // 4
+    assert np.mean(res.losses[-k:]) < np.mean(res.losses[:k])
 
 
 def test_async_beats_sync_wallclock_and_bytes():

@@ -12,6 +12,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess lower+compile: minutes, full lane
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -65,6 +65,34 @@ def test_secure_agg_encode_sweep(D, bits_scale):
                                atol=1.5 / scale)
 
 
+@pytest.mark.parametrize("C,D", [(8, 512), (16, 1024), (8, 2048)])
+def test_weighted_quantize_accum_sweep(C, D):
+    """Fused async-buffer kernel vs oracle: weight+encode+wraparound sum."""
+    key = jax.random.PRNGKey(C * D + 1)
+    x = jax.random.normal(key, (C, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (C, D))
+    scale = float(1 << 20)  # f32-exact quantization grid for |x*w| <~ 4
+    got = ksa.weighted_quantize_accum(x, w, u, scale, interpret=True)
+    want = ref.weighted_quantize_accum(x, w, u, scale)
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all(got == want))  # integer path: bit-exact
+    back = np.asarray(ksa.dequantize(got, scale, interpret=True))
+    direct = np.asarray((x * w[:, None]).sum(0))
+    np.testing.assert_allclose(back, direct, atol=1.5 * C / scale)
+
+
+def test_weighted_quantize_accum_zero_weight_rows():
+    """Zero-weight (invalid/padded) slots contribute exactly nothing."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (8, 512)) * 100.0  # huge values, masked out
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (8, 512))
+    w = jnp.zeros((8,)).at[0].set(1.0)
+    got = ksa.weighted_quantize_accum(x, w, u, 1024.0, interpret=True)
+    want = ref.weighted_quantize_accum(x[:1], w[:1], u[:1], 1024.0)
+    assert bool(jnp.all(got == want))
+
+
 @pytest.mark.parametrize("N,F,T", [(128, 8, 16), (256, 16, 8), (512, 8, 4)])
 @pytest.mark.parametrize("flip", [0.0, 0.25])
 def test_bitagg_sweep(N, F, T, flip):

@@ -10,6 +10,10 @@ from repro.core.fl.round import build_round_step, init_fl_state
 from repro.models.model import build_model
 
 ARCHS = list(registry.ARCH_IDS)
+# enc-dec FL step compiles both stacks twice: >30s on CPU -> full lane only
+_SLOW_FL_STEP = {"whisper-tiny"}
+FL_STEP_ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+                 if a in _SLOW_FL_STEP else a for a in ARCHS]
 
 
 def make_batch(cfg, key, B=2, S=32, with_labels=True, local_dim=False):
@@ -46,7 +50,7 @@ def test_forward_shapes_no_nan(arch, rng):
     assert jnp.isfinite(loss)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", FL_STEP_ARCHS)
 def test_one_fl_train_step(arch, rng):
     """One full DP-FL round (clip + secure agg + TEE noise) per arch."""
     cfg = registry.get_config(arch, reduced=True).with_overrides(max_seq_len=64)
