@@ -24,6 +24,8 @@ KW = dict(population=20_000, cohort=128, target_updates=12_800,
 
 RESULTS_CSV = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results", "async_engine.csv")
+MASKED_CSV = os.path.join(os.path.dirname(RESULTS_CSV),
+                          "secure_agg_overhead.csv")
 
 
 def _bytes_model() -> None:
@@ -88,9 +90,62 @@ def _jitted_engines() -> None:
     emit("async/results_csv", 0.0, RESULTS_CSV)
 
 
+def _masked_overhead() -> None:
+    """Per-buffer-round cost of in-path masking vs the PR 1 unmasked engine.
+
+    One size-B session of D-dim deltas pushed + applied through AsyncServer
+    in each mask_mode; records amortized per-round milliseconds (and the
+    push-side share for the client-masked path) into
+    results/secure_agg_overhead.csv so the perf cost of end-to-end masking
+    is tracked alongside async_engine.csv.
+    """
+    import time as _time
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import FLConfig
+    from repro.core.fl.async_fl import AsyncServer
+
+    B, D, rounds = 8, 65_536, 12
+    fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32)
+    params = {"w": jnp.zeros((D,), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    deltas = [0.1 * jax.random.normal(jax.random.fold_in(key, i), (D,))
+              for i in range(B)]
+
+    rows = []
+    for mode in ("off", "tee", "client"):
+        srv = AsyncServer(params, fl, buffer_size=B, mask_mode=mode,
+                          staleness_mode="constant")
+        for warm in range(2):  # compile push + apply paths
+            for d in deltas:
+                srv.push({"w": d}, srv.version)
+        jax.block_until_ready(srv.params)
+        t0 = _time.perf_counter()
+        for _ in range(rounds):
+            for d in deltas:
+                srv.push({"w": d}, srv.version)
+        jax.block_until_ready(srv.params)
+        per_round_ms = (_time.perf_counter() - t0) / rounds * 1e3
+        rows.append((mode, per_round_ms))
+        emit(f"async/masked_{mode}_round_ms", per_round_ms,
+             f"B={B};D={D};rounds={rounds}")
+
+    base = rows[0][1]
+    os.makedirs(os.path.dirname(MASKED_CSV), exist_ok=True)
+    with open(MASKED_CSV, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["mask_mode", "buffer_size", "dim", "round_ms",
+                    "overhead_vs_off"])
+        for mode, ms in rows:
+            w.writerow([mode, B, D, f"{ms:.3f}", f"{ms / base:.3f}x"])
+    emit("async/masked_overhead_csv", 0.0, MASKED_CSV)
+
+
 def run() -> None:
     _bytes_model()
     _jitted_engines()
+    _masked_overhead()
 
 
 if __name__ == "__main__":

@@ -238,6 +238,11 @@ class FLConfig:
     noise_placement: str = "tee"  # tee | device  (paper §Model aggregation)
     secure_agg_bits: int = 32  # fixed-point quantization width
     secure_agg_range: float = 4.0  # clip range for fixed-point encoding
+    # end-to-end masked sync rounds: every cohort slot adds its pairwise
+    # session mask to the encoded int32 delta inside the jitted round step;
+    # the masks cancel in the modular sum, so the round is bit-identical to
+    # the unmasked one while no unmasked encoding ever leaves a client slot.
+    secure_agg_masked: bool = False
     server_opt: str = "fedavg"  # fedavg | fedadam | fedadagrad | fedavgm
     server_lr: float = 1.0
     server_beta1: float = 0.9

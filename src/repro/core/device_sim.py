@@ -72,3 +72,22 @@ class DevicePopulation:
         idx = self.rs.choice(len(self.devices), size=min(k, len(self.devices)),
                              replace=False)
         return [self.devices[i] for i in idx]
+
+
+def midround_dropout_prob(device: DeviceState, base_rate: float) -> float:
+    """Probability that ``device`` dies mid-round (kills its upload).
+
+    The paper's eligibility heuristics select charging/wifi devices exactly
+    because the others abandon rounds: low uncharged battery doubles the
+    base rate, cellular adds half again, and a device already offline never
+    delivers.  Drives ``simulate_training(dropout_rate=..., devices=...)``
+    and, under masked secure aggregation, the dropout-recovery path.
+    """
+    if not device.alive:
+        return 1.0
+    p = base_rate
+    if device.battery < 0.2 and not device.charging:
+        p *= 2.0
+    if not device.on_wifi:
+        p *= 1.5
+    return min(p, 1.0)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fl import dp
+from repro.core.fl import secure_agg as sa
 
 
 class AggregationSpec(NamedTuple):
@@ -96,6 +97,76 @@ def decode_tree(tree, scale: float):
 
 
 # ---------------------------------------------------------------------------
+# Pairwise session masking (the in-engine secure-aggregation hot path)
+# ---------------------------------------------------------------------------
+def mask_tree(tree, slot, num_slots: int, key):
+    """Session masks shaped like ``tree`` for one contributor slot.
+
+    Each leaf gets an independent pairwise mask stream (key folded by leaf
+    index); summed over all ``num_slots`` slots every leaf cancels to zero
+    mod 2^32, so adding these to the encoded int32 tree leaves the round's
+    modular sum bit-identical.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(treedef, [
+        sa.session_mask(x.shape, slot, num_slots, jax.random.fold_in(key, i))
+        for i, x in enumerate(leaves)])
+
+
+def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSpec,
+                               session_key, rng):
+    """The CLIENT side of the in-path masked protocol, on a flat delta.
+
+    clip -> weight -> [device noise] -> stochastic fixed-point encode -> add
+    the slot's pairwise session mask.  This is the exact arithmetic of the
+    unmasked ``aggregate_buffer`` row pipeline, so a masked buffer decodes to
+    the same aggregate (up to independent stochastic-rounding draws).  The
+    server only ever receives the returned masked int32 vector; the norm /
+    clip indicator are client-side metrics (in production they ride the same
+    secure channel as aggregated scalars).
+
+    Returns (masked int32 (D,), pre-clip norm, was_clipped in {0., 1.}).
+    """
+    x = x.astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(x * x))
+    clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
+    weight = jnp.asarray(weight, jnp.float32)
+    xw = x * (weight * clip_scale)
+    if spec.dev_noise > 0.0:
+        noise = jax.random.normal(jax.random.fold_in(rng, 1), x.shape, jnp.float32)
+        xw = xw + noise * (spec.dev_noise * weight)
+    q = encode_array(xw, spec.sa_scale, jax.random.fold_in(rng, 2))
+    masked = q + sa.session_mask(x.shape, slot, spec.num_contributors,
+                                 session_key)  # int32 add wraps mod 2^32
+    return masked, nrm, (clip_scale < 1.0).astype(jnp.float32)
+
+
+def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
+                            total_weight, spec: AggregationSpec,
+                            session_key, rng):
+    """The SERVER side of the in-path masked protocol: modular sum + decode.
+
+    mbuf:    (B, D) int32 — per-slot MASKED fixed-point contributions (what
+             ``encode_masked_contribution`` produced); the server never sees
+             anything else.
+    present: (B,) 1/0 — slots whose contributor delivered.  Absent slots are
+             gated out and their un-cancelled mask shares are re-added via
+             ``recovery_mask`` (dropout recovery), so the decode yields the
+             exact sum of the survivors.
+
+    Returns the weight-normalized mean delta (D,) with TEE noise per
+    ``finalize_aggregate``.
+    """
+    B, D = mbuf.shape
+    pres_i = jnp.asarray(present).astype(jnp.int32)
+    acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # int32, wraps mod 2^32
+    acc = acc + sa.recovery_mask((D,), present, B, session_key)
+    # same TEE-noise stream derivation as aggregate_buffer
+    return finalize_aggregate(acc, total_weight, spec,
+                              jax.random.fold_in(rng, 0xDEE))
+
+
+# ---------------------------------------------------------------------------
 # Per-contribution privatization (shared by the sync chunk scan and async)
 # ---------------------------------------------------------------------------
 def privatize_contribution(delta, spec: AggregationSpec, rng) -> Tuple:
@@ -140,12 +211,18 @@ def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
 # ---------------------------------------------------------------------------
 def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
                      spec: AggregationSpec, rng, *,
+                     masks: Optional[jnp.ndarray] = None,
                      use_pallas: bool = False):
     """One batched on-device aggregation of a stacked contribution buffer.
 
     buf:     (B, D) f32 — raw (unclipped) flattened contributions.
     weights: (B,) f32 — per-contribution weight (staleness discount x validity
              mask); zero rows are excluded from the aggregate.
+    masks:   optional (B, D) int32 pairwise session masks added to the
+             encoded rows inside the fused accumulation (the in-TEE masked
+             path: every row of the session is masked, the masks cancel in
+             the modular sum, and unmasked encodings never materialize in
+             HBM).  Requires ``spec.use_secure_agg``.
 
     Returns (mean_delta_flat (D,), stats dict). The whole computation is
     traceable: clip scales from per-row squared norms, weighting, stochastic
@@ -154,6 +231,9 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
     weight/quantize/accumulate kernel) that never materializes the encoded
     per-contribution ints in HBM.
     """
+    if masks is not None and not spec.use_secure_agg:
+        raise ValueError("pairwise masks require the secure-agg integer field "
+                         "(spec.use_secure_agg)")
     B, D = buf.shape
     interpret = jax.default_backend() != "tpu"
     if use_pallas:
@@ -185,15 +265,19 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
         if use_pallas:
             from repro.kernels import secure_agg as _ksa
             pb, pd = (-B) % 8, (-D) % 512
+            pmasks = None if masks is None else jnp.pad(masks, ((0, pb), (0, pd)))
             acc = _ksa.weighted_quantize_accum(
                 jnp.pad(qx, ((0, pb), (0, pd))), jnp.pad(qw, (0, pb)),
                 jnp.pad(uniforms, ((0, pb), (0, pd))), spec.sa_scale,
-                interpret=interpret)[:D]
+                masks=pmasks, interpret=interpret)[:D]
         else:
             xf = qx * qw[:, None] * spec.sa_scale
             floor = jnp.floor(xf)
             bit = (uniforms < (xf - floor)).astype(jnp.float32)
-            acc = (floor + bit).astype(jnp.int32).sum(0)  # wraps mod 2^32
+            q = (floor + bit).astype(jnp.int32)
+            if masks is not None:
+                q = q + masks  # int32 add wraps mod 2^32
+            acc = q.sum(0)  # wraps mod 2^32
     else:
         x = buf.astype(jnp.float32) * row_w[:, None]
         if noise is not None:

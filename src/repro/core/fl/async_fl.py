@@ -14,6 +14,10 @@ network overhead ~8x versus synchronous rounds.  This module provides:
      is current and push deltas; pushes are written straight into a
      preallocated device buffer (one jitted dynamic-slot write, no float()
      round-trips), and the jitted step fires every ``buffer_size`` arrivals.
+     Secure aggregation runs in-path (``mask_mode``): "client" makes the
+     push write a MASKED int32 vector (clip/weight/encode/pairwise-mask in
+     one jitted call) with dropout recovery at flush; "tee" fuses the mask
+     lane into the Pallas accumulation kernel (bit-identical results).
   3. ``simulate`` — the event-driven fleet simulator (lognormal device
      times, dropouts) over a *numpy bytes model* for wall-clock/network
      accounting, and ``simulate_training`` — the same event loop driving the
@@ -30,6 +34,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.core.fl import aggregation as agg
+from repro.core.fl import secure_agg as sa
 from repro.core.fl.server_opt import build_server_opt
 
 
@@ -51,6 +56,7 @@ def staleness_weight(staleness, mode: str = "polynomial", a: float = 0.5):
 def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
                             staleness_mode: str = "polynomial",
                             staleness_exponent: float = 0.5,
+                            mask_mode: str = "off",
                             use_pallas: Optional[bool] = None) -> Callable:
     """Returns jitted ``step(params, opt_state, buf, staleness, valid, rng)``.
 
@@ -59,6 +65,13 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     staleness: (buffer_size,) f32 — server_version - pulled_version per slot.
     valid:     (buffer_size,) f32 — 1.0 for filled slots (partial flushes).
 
+    mask_mode="tee" adds per-slot pairwise session masks to the encoded rows
+    inside the fused aggregation (the paper's in-enclave protocol: all
+    ``buffer_size`` masks are generated and cancelled within the trusted
+    computation, so the result is bit-identical to mask_mode="off" while
+    unmasked encodings never materialize in HBM).  For client-side masking
+    with dropout recovery see ``build_masked_async_buffer_step``.
+
     The step shares clip / noise-placement / fixed-point encode / decode /
     server-optimizer semantics with the sync round via AggregationSpec: at
     staleness 0 with constant weighting it computes exactly the sync round's
@@ -66,14 +79,26 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    if mask_mode not in ("off", "tee"):
+        raise ValueError(f"mask_mode {mask_mode!r}: expected 'off' or 'tee'")
     spec = agg.make_spec(fl_cfg, buffer_size)
+    if mask_mode == "tee" and not spec.use_secure_agg:
+        raise ValueError("mask_mode='tee' requires secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    flat0, unravel = ravel_pytree(params)
+    D = flat0.shape[0]
 
     def step(params, opt_state, buf, staleness, valid, rng):
         w = staleness_weight(staleness, staleness_mode, staleness_exponent)
         w = w * valid  # empty slots contribute nothing
+        masks = None
+        if mask_mode == "tee":
+            skey = jax.random.fold_in(rng, 0x7EE)
+            masks = jnp.stack([
+                sa.session_mask((D,), s, buffer_size, skey)
+                for s in range(buffer_size)])
         mean_flat, stats = agg.aggregate_buffer(buf, w, spec, rng,
+                                                masks=masks,
                                                 use_pallas=use_pallas)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
@@ -89,6 +114,48 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     return jax.jit(step)
 
 
+def build_masked_async_buffer_step(params, fl_cfg, *,
+                                   buffer_size: int) -> Callable:
+    """The server half of the CLIENT-masked buffered-async protocol.
+
+    Returns jitted ``step(params, opt_state, mbuf, present, weights,
+    staleness, norms, clips, session_key, rng)`` where ``mbuf`` is the
+    (buffer_size, D) **int32** buffer of masked fixed-point contributions
+    written by ``AsyncServer.push`` (mask_mode="client") — the server never
+    holds a raw delta.  ``present`` gates delivered slots; absent slots
+    (dropouts / partial flushes) get their un-cancelled mask shares re-added
+    inside the same jitted computation (``recovery_mask``), so the modular
+    sum decodes to the exact survivor aggregate.  ``weights`` / ``norms`` /
+    ``clips`` are the client-reported per-slot scalars used only for
+    normalization and metrics.
+    """
+    spec = agg.make_spec(fl_cfg, buffer_size)
+    if not spec.use_secure_agg:
+        raise ValueError("client-masked aggregation requires secure_agg_bits > 0")
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+
+    def step(params, opt_state, mbuf, present, weights, staleness, norms,
+             clips, session_key, rng):
+        w = weights * present
+        w_total = w.sum()
+        mean_flat = agg.aggregate_masked_buffer(mbuf, present, w_total, spec,
+                                                session_key, rng)
+        mean_delta = unravel(mean_flat)
+        new_params, new_opt = server.apply(params, opt_state, mean_delta)
+        denom = jnp.maximum(w_total, 1e-9)
+        metrics = {
+            "update_norm": (norms * w).sum() / denom,
+            "clip_fraction": (clips * w).sum() / denom,
+            "weight_total": w_total,
+            "staleness_mean": (staleness * present).sum()
+            / jnp.maximum(present.sum(), 1.0),
+        }
+        return new_params, new_opt, metrics
+
+    return jax.jit(step)
+
+
 class AsyncServer:
     """Buffered asynchronous aggregation with staleness weighting + DP.
 
@@ -97,41 +164,95 @@ class AsyncServer:
     preallocated (buffer_size, D) device buffer, and every apply is one
     invocation of the jitted buffer step.  No per-push host-device transfer
     of update payloads, no ``float()`` round-trips.
+
+    mask_mode:
+      "off"    — raw f32 buffer, server-side clip/encode (PR 1 behaviour).
+      "tee"    — raw f32 buffer; the jitted step adds pairwise session masks
+                 inside the fused in-enclave aggregation (bit-identical
+                 results; unmasked encodings never hit HBM).
+      "client" — the buffer holds MASKED int32 vectors: the jitted write is
+                 the client-side clip -> staleness-weight -> stochastic
+                 fixed-point encode -> pairwise-mask pipeline, one session
+                 per buffer round (session id = server version).  Partial
+                 flushes (dropouts) re-add the absent slots' mask shares
+                 inside the jitted step — dropout recovery — so the decode
+                 is exact over the survivors.
     """
 
     def __init__(self, params, fl_cfg, buffer_size: int = 10,
                  staleness_exponent: float = 0.5,
                  staleness_mode: str = "polynomial",
+                 mask_mode: str = "off",
+                 session_seed: int = 0x5A5E,
                  use_pallas: Optional[bool] = None):
+        if mask_mode not in ("off", "tee", "client"):
+            raise ValueError(f"mask_mode {mask_mode!r}")
         self.params = params
         self.fl_cfg = fl_cfg
         self.buffer_size = buffer_size
         self.staleness_exponent = staleness_exponent
         self.staleness_mode = staleness_mode
+        self.mask_mode = mask_mode
         self.version = 0
         self.last_metrics: Optional[dict] = None
         self._applied_updates = 0
         self._fill = 0
+        self._session_base = jax.random.PRNGKey(session_seed)
+        self._push_base = jax.random.PRNGKey(0xA5)
 
         flat, _ = ravel_pytree(params)
         D = flat.shape[0]
         self._opt_state = build_server_opt(fl_cfg).init(params)
-        self._buf = jnp.zeros((buffer_size, D), jnp.float32)
         self._stal = jnp.zeros((buffer_size,), jnp.float32)
         self._valid = jnp.zeros((buffer_size,), jnp.float32)
-        self._step = build_async_buffer_step(
-            params, fl_cfg, buffer_size=buffer_size,
-            staleness_mode=staleness_mode,
-            staleness_exponent=staleness_exponent, use_pallas=use_pallas)
 
-        @jax.jit
-        def _write(buf, stal, valid, slot, delta, s):
-            flat_d, _ = ravel_pytree(delta)
-            return (buf.at[slot].set(flat_d.astype(jnp.float32)),
-                    stal.at[slot].set(jnp.asarray(s, jnp.float32)),
-                    valid.at[slot].set(1.0))
+        if mask_mode == "client":
+            spec = agg.make_spec(fl_cfg, buffer_size)
+            if not spec.use_secure_agg:
+                raise ValueError(
+                    "mask_mode='client' requires secure_agg_bits > 0")
+            self._buf = jnp.zeros((buffer_size, D), jnp.int32)
+            self._wts = jnp.zeros((buffer_size,), jnp.float32)
+            self._norms = jnp.zeros((buffer_size,), jnp.float32)
+            self._clips = jnp.zeros((buffer_size,), jnp.float32)
+            self._step = build_masked_async_buffer_step(
+                params, fl_cfg, buffer_size=buffer_size)
+            s_mode, s_exp = staleness_mode, staleness_exponent
 
-        self._write = _write
+            @jax.jit
+            def _write_masked(buf, stal, wts, norms, clips, slot, delta, s,
+                              session_key, rng):
+                flat_d, _ = ravel_pytree(delta)
+                w = staleness_weight(s, s_mode, s_exp)
+                masked, nrm, clipped = agg.encode_masked_contribution(
+                    flat_d, w, slot, spec, session_key, rng)
+                return (buf.at[slot].set(masked),
+                        stal.at[slot].set(jnp.asarray(s, jnp.float32)),
+                        wts.at[slot].set(w),
+                        norms.at[slot].set(nrm),
+                        clips.at[slot].set(clipped))
+
+            self._write_masked = _write_masked
+        else:
+            self._buf = jnp.zeros((buffer_size, D), jnp.float32)
+            self._step = build_async_buffer_step(
+                params, fl_cfg, buffer_size=buffer_size,
+                staleness_mode=staleness_mode,
+                staleness_exponent=staleness_exponent,
+                mask_mode=mask_mode, use_pallas=use_pallas)
+
+            @jax.jit
+            def _write(buf, stal, valid, slot, delta, s):
+                flat_d, _ = ravel_pytree(delta)
+                return (buf.at[slot].set(flat_d.astype(jnp.float32)),
+                        stal.at[slot].set(jnp.asarray(s, jnp.float32)),
+                        valid.at[slot].set(1.0))
+
+            self._write = _write
+
+    def _session_key(self):
+        """PRNG key of the current pairwise-mask session (= buffer round)."""
+        return jax.random.fold_in(self._session_base, self.version)
 
     # -- client protocol ----------------------------------------------------
     def pull(self) -> Tuple[Any, int]:
@@ -139,14 +260,28 @@ class AsyncServer:
 
     def push(self, delta, client_version: int, rng=None) -> None:
         staleness = self.version - client_version  # host-int metadata only
-        self._buf, self._stal, self._valid = self._write(
-            self._buf, self._stal, self._valid, self._fill, delta, staleness)
+        if self.mask_mode == "client":
+            wrng = jax.random.fold_in(
+                jax.random.fold_in(self._push_base, self.version), self._fill)
+            (self._buf, self._stal, self._wts, self._norms,
+             self._clips) = self._write_masked(
+                self._buf, self._stal, self._wts, self._norms, self._clips,
+                self._fill, delta, staleness, self._session_key(), wrng)
+        else:
+            self._buf, self._stal, self._valid = self._write(
+                self._buf, self._stal, self._valid, self._fill, delta,
+                staleness)
         self._fill += 1
         if self._fill >= self.buffer_size:
             self._apply(rng)
 
     def flush(self, rng=None) -> None:
-        """Apply a partially-filled buffer (end of run / deadline)."""
+        """Apply a partially-filled buffer (end of run / deadline).
+
+        In mask_mode="client" this is the dropout-recovery path: the absent
+        slots' pairwise-mask shares are reconstructed and cancelled inside
+        the jitted step, exactly as surviving clients would supply them.
+        """
         if self._fill > 0:
             self._apply(rng)
 
@@ -154,13 +289,22 @@ class AsyncServer:
     def _apply(self, rng=None) -> None:
         if rng is None:  # deterministic per-version stream for rounding/noise
             rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
-        self.params, self._opt_state, self.last_metrics = self._step(
-            self.params, self._opt_state, self._buf, self._stal, self._valid,
-            rng)
+        if self.mask_mode == "client":
+            present = jnp.asarray(
+                [1.0] * self._fill
+                + [0.0] * (self.buffer_size - self._fill), jnp.float32)
+            self.params, self._opt_state, self.last_metrics = self._step(
+                self.params, self._opt_state, self._buf, present, self._wts,
+                self._stal, self._norms, self._clips, self._session_key(),
+                rng)
+        else:
+            self.params, self._opt_state, self.last_metrics = self._step(
+                self.params, self._opt_state, self._buf, self._stal,
+                self._valid, rng)
+            self._valid = jnp.zeros_like(self._valid)
         self.version += 1
         self._applied_updates += self._fill
         self._fill = 0
-        self._valid = jnp.zeros_like(self._valid)
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +413,9 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
                       cohort: int, population: int = 1024,
                       buffer_size: int = 10, model_bytes: float = 4e6,
                       seed: int = 0, dropout: float = 0.0,
+                      dropout_rate: Optional[float] = None,
+                      devices: Optional[Any] = None,
+                      mask_mode: str = "off",
                       staleness_exponent: float = 0.5,
                       round_overhead: float = 30.0) -> TrainingSimResult:
     """The event-driven fleet simulation driving the real jitted engines.
@@ -278,6 +425,18 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     mode="async": the heterogeneous-fleet event loop feeding the jitted
     ``async_buffer_step`` through ``AsyncServer`` — each completing device
     trained against the (stale) version it pulled.
+
+    ``dropout_rate`` kills devices mid-round: in sync mode their weight is
+    zeroed in the cohort batch; in async mode the trained update is never
+    pushed, so with ``mask_mode="client"`` their pairwise-mask session slot
+    stays empty and the final flush exercises the dropout-recovery path.
+    (``dropout`` is the historical alias.)  When a
+    ``repro.core.device_sim.DevicePopulation`` is passed as ``devices``, the
+    per-device kill probability is modulated by its resource state
+    (battery / wifi / churn) via ``device_sim.midround_dropout_prob``.
+
+    ``mask_mode`` selects the secure-aggregation path of the async engine
+    ("off" | "tee" | "client" — see ``AsyncServer``).
 
     ``make_client_batch(client_seed, n_clients)`` must return a batch pytree
     with leading axis ``n_clients``.  Simulated wall-clock uses the same
@@ -291,6 +450,18 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     from repro.core.fl.round import build_client_update, build_round_step, \
         init_fl_state
 
+    if dropout_rate is None:
+        dropout_rate = dropout
+    if devices is not None:
+        from repro.core.device_sim import midround_dropout_prob
+        assert len(devices) >= population
+
+        def kill_prob(d: int) -> float:
+            return midround_dropout_prob(devices.devices[d], dropout_rate)
+    else:
+        def kill_prob(d: int) -> float:
+            return dropout_rate
+
     times = _device_times(population, seed)
     rs = np.random.RandomState(seed + 1)
     key = jax.random.PRNGKey(seed)
@@ -299,17 +470,31 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     if mode == "sync":
         step = build_round_step(loss_fn, fl_cfg, cohort_size=cohort)
         state = init_fl_state(params, fl_cfg)
+        # dedicated kill stream: device selection (and every seeded result at
+        # dropout_rate=0) stays bit-identical to the dropout-free engine
+        rs_kill = np.random.RandomState(seed + 2)
         t, up, down, applied, steps = 0.0, 0.0, 0.0, 0, 0
         host0 = _time.perf_counter()
         while applied < target_updates:
             sel = rs.choice(population, size=cohort, replace=False)
-            batch = make_client_batch(steps, cohort)
+            batch = dict(make_client_batch(steps, cohort))
+            if dropout_rate > 0.0:
+                survive = np.asarray(
+                    [rs_kill.uniform() >= kill_prob(d) for d in sel],
+                    np.float32)
+                if survive.sum() == 0.0:
+                    survive[0] = 1.0  # degenerate round: keep one survivor
+                prior_w = batch.get("weight")
+                batch["weight"] = (jnp.asarray(survive) if prior_w is None
+                                   else jnp.asarray(survive) * prior_w)
+            else:
+                survive = np.ones((cohort,), np.float32)
             state, metrics = step(state, batch, jax.random.fold_in(key, steps))
             losses.append(float(metrics["loss"]))
             t += float(np.max(times[sel])) + round_overhead
             down += cohort * model_bytes
-            up += cohort * model_bytes
-            applied += cohort
+            up += int(survive.sum()) * model_bytes
+            applied += int(survive.sum())
             steps += 1
         host = _time.perf_counter() - host0
         return TrainingSimResult(
@@ -318,7 +503,8 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     if mode == "async":
         client_update = jax.jit(build_client_update(loss_fn, fl_cfg))
         srv = AsyncServer(params, fl_cfg, buffer_size=buffer_size,
-                          staleness_exponent=staleness_exponent)
+                          staleness_exponent=staleness_exponent,
+                          mask_mode=mask_mode)
         # in-flight: (finish_time, device, client_seed, (version, params) at
         # PULL time — the device really trains against its stale snapshot
         # (cseed is unique, so heap comparison never reaches the pytree)
@@ -333,7 +519,7 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
         host0 = _time.perf_counter()
         while applied < target_updates:
             t, d, cseed, (pulled_version, pulled_params) = heapq.heappop(heap)
-            if rs.uniform() >= dropout:
+            if rs.uniform() >= kill_prob(d):
                 batch = make_client_batch(cseed, 1)
                 cbatch = jax.tree.map(lambda x: x[0], batch)
                 delta, loss = client_update(
@@ -349,6 +535,10 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
                                   (ver_now, params_now)))
             n_started += 1
             down += model_bytes
+        # deadline flush: a partially-filled buffer is applied; in
+        # mask_mode="client" the empty session slots go through dropout
+        # recovery (their mask shares are cancelled inside the jitted step)
+        srv.flush(rng=jax.random.fold_in(key, 0x6000))
         host = _time.perf_counter() - host0
         return TrainingSimResult(
             SimResult(t, up, down, applied, srv.version), losses, host)

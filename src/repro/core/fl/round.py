@@ -8,7 +8,10 @@ One round =
   3. deltas are fixed-point quantized and summed with wraparound int32
      arithmetic — bit-identical to the pairwise-masked secure-aggregation sum
      (masks cancel; see core/fl/secure_agg.py), lowering to one big integer
-     all-reduce over the (pod, data) axes;
+     all-reduce over the (pod, data) axes.  With
+     ``fl_cfg.secure_agg_masked`` the masks are real, not notional: every
+     cohort slot adds its pairwise session mask to the encoded delta inside
+     the scan, and the round stays bit-identical because they cancel;
   4. in ``tee`` placement, Gaussian noise is added once to the decoded
      aggregate inside the trusted boundary;
   5. the server optimizer applies the noised mean delta to the global model.
@@ -91,6 +94,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
     spec = agg.make_spec(fl_cfg, cohort_size)
     use_secure_agg = spec.use_secure_agg
     sa_scale = spec.sa_scale
+    masked = use_secure_agg and getattr(fl_cfg, "secure_agg_masked", False)
 
     if clients_per_chunk <= 0:
         clients_per_chunk = cohort_size if client_parallel else 1
@@ -116,6 +120,11 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
             lambda x: x.reshape((m, n_chunks) + x.shape[1:]).swapaxes(0, 1), batch)
         wchunks = weights.reshape(m, n_chunks).swapaxes(0, 1)
         rngs = jax.random.split(rng, n_chunks * m).reshape(n_chunks, m, 2)
+        # pairwise-mask session: one per round, slot = position in the cohort
+        # (any bijection works — only slot uniqueness matters for cancellation)
+        slots = jnp.arange(cohort_size, dtype=jnp.int32).reshape(
+            m, n_chunks).swapaxes(0, 1)
+        skey = jax.random.fold_in(rng, 0x5E55) if masked else None
 
         deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
         if deferred:
@@ -129,7 +138,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
 
         def chunk_body(carry, xs):
             acc, (loss_s, norm_s, clip_s, w_s) = carry
-            cbatch, crng, w = xs
+            cbatch, crng, w, cslot = xs
 
             if m == 1:
                 squeezed = jax.tree.map(lambda x: x[0], cbatch)
@@ -139,6 +148,10 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                 if use_secure_agg:
                     enc = _sa_encode_tree(delta, sa_scale,
                                           jax.random.fold_in(crng[0], 2))
+                    if masked:
+                        enc = jax.tree.map(
+                            lambda e, mk: e + mk, enc,
+                            agg.mask_tree(params, cslot[0], cohort_size, skey))
                 else:
                     enc = delta
                 acc = jax.tree.map(lambda a, e: a + e, acc, enc)
@@ -152,6 +165,11 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                 if use_secure_agg:
                     encs = jax.vmap(_sa_encode_tree, in_axes=(0, None, 0))(
                         deltas, sa_scale, crng)
+                    if masked:
+                        mks = jax.vmap(
+                            lambda s: agg.mask_tree(params, s, cohort_size,
+                                                    skey))(cslot)
+                        encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
                 else:
                     encs = deltas
                 if deferred:
@@ -166,7 +184,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
             return (acc, stats), None
 
         (acc, (loss_s, norm_s, clip_s, w_s)), _ = jax.lax.scan(
-            chunk_body, (acc0, stats0), (cbatches, rngs, wchunks))
+            chunk_body, (acc0, stats0), (cbatches, rngs, wchunks, slots))
 
         w_total = jnp.maximum(w_s, 1e-9)
         if deferred:

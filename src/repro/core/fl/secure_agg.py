@@ -8,6 +8,25 @@ int32 addition wraps (mod 2^32), the masked sum equals the unmasked sum
 ints directly with a psum while this module exercises the full masked
 protocol end-to-end (tests assert bit-exact agreement).
 
+Three layers live here:
+
+  1. scalar codec — ``quantize`` / ``dequantize`` with a wraparound-window
+     re-centering for decoded *sums* (``count``): the secure-agg field is
+     ``field_modulus(bits, count)``, a power of two dividing 2^32, so sums
+     whose int32 accumulation wrapped are still recovered exactly as long as
+     the true sum fits the window (``|s| < C/2``).  ``to_field`` reduces a
+     masked value to its canonical wire residue for reduced-field transports.
+  2. host-side pairwise masks — ``pairwise_mask`` / ``mask_update`` /
+     ``aggregate_masked`` (arbitrary peer-id sets, integer seeds).
+  3. session masks — ``session_mask`` / ``recovery_mask``: the jit-traceable
+     variant keyed by a PRNGKey and a slot index, used *inside* the jitted
+     engines (core/fl/aggregation.py writes masked vectors straight into the
+     async buffer; core/fl/round.py masks the sync chunk scan).  When a
+     session contributor drops, ``recovery_mask`` is the sum of the absent
+     slots' masks — exactly the cancelling shares the surviving clients
+     reconstruct in the real protocol — and adding it to the modular sum
+     makes ``dequantize`` yield the true sum of the survivors.
+
 The quantize/dequantize hot loop has a Pallas TPU kernel
 (`repro.kernels.secure_agg`); this module is the protocol layer.
 """
@@ -17,6 +36,9 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+_INT32_MIN = -(2 ** 31)
+_INT32_MAX = 2 ** 31 - 1
 
 
 def quantize(x: jnp.ndarray, bits: int, value_range: float,
@@ -37,17 +59,62 @@ def quantize(x: jnp.ndarray, bits: int, value_range: float,
     return xf.astype(jnp.int32)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def field_modulus(bits: int, count: int = 1) -> int:
+    """The secure-agg field size for a ``count``-contribution sum.
+
+    Smallest power of two >= count * 2^bits, capped at 2^32.  Powers of two
+    <= 2^32 divide the int32 wraparound modulus, so a sum accumulated with
+    plain int32 arithmetic (mod 2^32) can be reduced to its mod-C residue —
+    the property ``dequantize(count=...)`` relies on.
+    """
+    return min(_next_pow2(count) * (1 << bits), 1 << 32)
+
+
+def to_field(q: jnp.ndarray, modulus: int) -> jnp.ndarray:
+    """Canonical unsigned residue of ``q`` in the secure-agg field, as int32.
+
+    For ``modulus == 2^32`` the int32 two's-complement bit pattern *is* the
+    residue; for smaller (power-of-two) fields the result lies in
+    ``[0, modulus)`` — the reduced wire format that lets a masked value
+    travel in ``log2(modulus)`` bits instead of 32.
+    """
+    if modulus >= 1 << 32:
+        return q.astype(jnp.int32)
+    assert modulus & (modulus - 1) == 0, "field modulus must be a power of two"
+    # bitwise AND == mod for power-of-two fields, and (unlike jnp.mod with a
+    # python-int divisor) representable when modulus is 2^31
+    return q.astype(jnp.int32) & (modulus - 1)
+
+
 def dequantize(q: jnp.ndarray, bits: int, value_range: float,
                count: int = 1) -> jnp.ndarray:
     """Decode an (aggregated) fixed-point tensor back to f32.
 
-    count: number of summed contributions (for centering the wraparound
-    window when decoding a sum).
+    count: number of summed contributions.  The decoded sum is re-centered
+    into the wraparound window ``[-C/2, C/2)`` with
+    ``C = field_modulus(bits, count)``: an int32 accumulation that wrapped
+    (e.g. thousands of reduced-field residues) still round-trips exactly,
+    because C divides 2^32 so the mod-2^32 representative determines the
+    mod-C residue.
     """
     levels = jnp.float32(2 ** (bits - 1) - 1)
+    C = field_modulus(bits, count)
+    if C < 1 << 32:
+        half = C // 2
+        # q + half may wrap int32; that wrap is mod 2^32 and C | 2^32, so the
+        # mod-C reduction is unaffected.  & (C-1) == mod C for the power-of-
+        # two field and stays int32-representable up to C == 2^31.
+        q = ((q.astype(jnp.int32) + half) & (C - 1)) - half
     return q.astype(jnp.float32) * (value_range / levels)
 
 
+# ---------------------------------------------------------------------------
+# Host-side pairwise masks (arbitrary peer sets, integer seeds)
+# ---------------------------------------------------------------------------
 def pairwise_mask(shape, client_id: int, peer_ids: Sequence[int], seed: int) -> jnp.ndarray:
     """Additive int32 mask for `client_id` that cancels over all clients.
 
@@ -62,8 +129,7 @@ def pairwise_mask(shape, client_id: int, peer_ids: Sequence[int], seed: int) -> 
             continue
         lo, hi = (client_id, d) if client_id < d else (d, client_id)
         k = jax.random.fold_in(jax.random.fold_in(base, lo), hi)
-        m = jax.random.randint(k, shape, jnp.iinfo(jnp.int32).min,
-                               jnp.iinfo(jnp.int32).max, jnp.int32)
+        m = jax.random.randint(k, shape, _INT32_MIN, _INT32_MAX, jnp.int32)
         total = total + (m if client_id == lo else -m)  # wraps mod 2^32
     return total
 
@@ -79,6 +145,51 @@ def aggregate_masked(masked: Sequence[jnp.ndarray]) -> jnp.ndarray:
     for m in masked[1:]:
         out = out + m  # int32 wraparound == mod 2^32
     return out
+
+
+# ---------------------------------------------------------------------------
+# Session masks — the jit-traceable variant used inside the engines
+# ---------------------------------------------------------------------------
+def session_mask(shape, slot, num_slots: int, key) -> jnp.ndarray:
+    """Pairwise mask for session position ``slot`` of ``num_slots``.
+
+    Same cancellation identity as ``pairwise_mask`` over
+    ``peer_ids=range(num_slots)`` (bit-identical when
+    ``key == jax.random.PRNGKey(seed)``), but keyed by a PRNGKey — so the
+    host can fold a per-session id in — and traceable in ``slot``, which is
+    what lets the jitted buffer-write path mask a contribution for whatever
+    slot it lands in without per-slot recompilation.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    total = jnp.zeros(shape, jnp.int32)
+    for d in range(num_slots):
+        lo = jnp.minimum(slot, d)
+        hi = jnp.maximum(slot, d)
+        k = jax.random.fold_in(jax.random.fold_in(key, lo), hi)
+        m = jax.random.randint(k, shape, _INT32_MIN, _INT32_MAX, jnp.int32)
+        sign = jnp.where(d == slot, 0, jnp.where(slot < d, 1, -1))
+        total = total + sign.astype(jnp.int32) * m  # wraps mod 2^32
+    return total
+
+
+def recovery_mask(shape, present, num_slots: int, key) -> jnp.ndarray:
+    """Sum of the session masks of the ABSENT slots — the dropout shares.
+
+    ``present``: (num_slots,) 1/0 (or bool) per slot — 1 for contributors
+    whose masked vector made it into the aggregate.  Since all ``num_slots``
+    masks sum to zero, the surviving contributions carry exactly
+    ``-sum_{absent} mask_s`` of un-cancelled mask; adding this recovery term
+    to the modular sum restores the true sum of the survivors.  In the real
+    protocol the surviving clients reconstruct these shares from the dropped
+    clients' Shamir-shared seeds; in the simulator the server (which knows
+    the session key) stands in for them.
+    """
+    present = jnp.asarray(present)
+    total = jnp.zeros(shape, jnp.int32)
+    for s in range(num_slots):
+        gate = 1 - present[s].astype(jnp.int32)
+        total = total + gate * session_mask(shape, s, num_slots, key)
+    return total
 
 
 def secure_aggregate(updates: Sequence[jnp.ndarray], bits: int,

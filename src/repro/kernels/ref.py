@@ -46,15 +46,21 @@ def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
 
 
 def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
-                            uniforms: jnp.ndarray, scale: float) -> jnp.ndarray:
-    """out[d] = sum_c quantize(weights[c] * x[c, d]) — int32 wraparound sum.
+                            uniforms: jnp.ndarray, scale: float,
+                            masks: jnp.ndarray = None) -> jnp.ndarray:
+    """out[d] = sum_c [quantize(weights[c] * x[c, d]) + masks[c, d]] mod 2^32.
 
-    x, uniforms: (C, D); weights: (C,).  The buffered-async aggregation loop.
+    x, uniforms: (C, D); weights: (C,); masks: optional (C, D) int32 pairwise
+    session masks (cancel over a full session).  The buffered-async
+    aggregation loop.
     """
     xf = x.astype(jnp.float32) * weights.astype(jnp.float32)[:, None] * scale
     floor = jnp.floor(xf)
     bit = (uniforms < (xf - floor)).astype(jnp.float32)
-    return (floor + bit).astype(jnp.int32).sum(0)  # int32 add wraps mod 2^32
+    q = (floor + bit).astype(jnp.int32)
+    if masks is not None:
+        q = q + masks  # int32 add wraps mod 2^32
+    return q.sum(0)  # int32 add wraps mod 2^32
 
 
 # --- bitagg -------------------------------------------------------------------

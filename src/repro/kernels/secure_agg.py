@@ -66,36 +66,68 @@ def _weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, out_ref, *,
     out_ref[...] += jnp.sum(q, axis=0)  # int32 add wraps mod 2^32
 
 
+def _masked_weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, m_ref,
+                                           out_ref, *, scale: float):
+    """The mask-add lane: pairwise session masks ride the same fused pass.
+
+    Per-client encoded ints exist only as VMEM tiles with their mask already
+    added — the unmasked encodings never materialize in HBM, which is the
+    in-TEE secure-aggregation property the fusion models.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (block_c, block_d)
+    w = w_ref[...].astype(jnp.float32)  # (block_c,)
+    xf = x * w[:, None] * scale
+    floor = jnp.floor(xf)
+    bit = (u_ref[...] < (xf - floor)).astype(jnp.float32)
+    q = (floor + bit).astype(jnp.int32) + m_ref[...]  # int32 add wraps
+    out_ref[...] += jnp.sum(q, axis=0)  # masks cancel over the full session
+
+
 def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                             uniforms: jnp.ndarray, scale: float, *,
+                            masks: jnp.ndarray = None,
                             block_c: int = DEFAULT_BLOCK_C,
                             block_d: int = DEFAULT_BLOCK_D,
                             interpret: bool = False) -> jnp.ndarray:
-    """Fused buffered-async hot loop: out[d] = sum_c q(w[c] * x[c, d]).
+    """Fused buffered-async hot loop: out[d] = sum_c [q(w[c] * x[c, d]) + m].
 
     x, uniforms: (C, D) f32; weights: (C,) f32 -> (D,) int32 wraparound sum.
-    Each contribution is weighted, stochastic-round fixed-point encoded and
-    accumulated in one pass — the encoded per-client ints never touch HBM.
+    Each contribution is weighted, stochastic-round fixed-point encoded,
+    optionally pairwise-masked (``masks``: (C, D) int32) and accumulated in
+    one pass — the encoded per-client ints never touch HBM.  Over a full
+    session the masks sum to zero mod 2^32, so the masked output is
+    bit-identical to the unmasked one.
     """
     C, D = x.shape
     block_c = min(block_c, C)
     block_d = min(block_d, D)
     assert C % block_c == 0 and D % block_d == 0, (C, D, block_c, block_d)
     import functools
-    kern = functools.partial(_weighted_quantize_accum_kernel, scale=scale)
     grid = (D // block_d, C // block_c)  # clients innermost for accumulation
+    cd_spec = pl.BlockSpec((block_c, block_d), lambda j, i: (i, j))
+    c_spec = pl.BlockSpec((block_c,), lambda j, i: (i,))
+    if masks is None:
+        kern = functools.partial(_weighted_quantize_accum_kernel, scale=scale)
+        in_specs, args = [cd_spec, c_spec, cd_spec], (x, weights, uniforms)
+    else:
+        kern = functools.partial(_masked_weighted_quantize_accum_kernel,
+                                 scale=scale)
+        in_specs = [cd_spec, c_spec, cd_spec, cd_spec]
+        args = (x, weights, uniforms, masks)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_c, block_d), lambda j, i: (i, j)),
-            pl.BlockSpec((block_c,), lambda j, i: (i,)),
-            pl.BlockSpec((block_c, block_d), lambda j, i: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_d,), lambda j, i: (j,)),
         out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
         interpret=interpret,
-    )(x, weights, uniforms)
+    )(*args)
 
 
 def _dequantize_kernel(q_ref, out_ref, *, inv_scale: float):

@@ -87,13 +87,15 @@ def parity_setup():
     return model, params, {"features": x, "label": y}
 
 
-@pytest.mark.parametrize("bits", [0, 32])
+@pytest.mark.parametrize("bits,mask_mode", [(0, "off"), (32, "off"),
+                                            (32, "tee"), (32, "client")])
 @pytest.mark.parametrize("staleness_mode", ["constant", "polynomial"])
-def test_async_matches_sync_at_staleness_zero(parity_setup, bits,
+def test_async_matches_sync_at_staleness_zero(parity_setup, bits, mask_mode,
                                               staleness_mode):
     """At staleness 0 the jitted async_buffer_step aggregate == the sync
     round_step mean delta (within fixed-point quantization tolerance), with
-    and without secure aggregation — the unified-engine guarantee."""
+    and without secure aggregation — including the in-path masked buffer
+    modes — the unified-engine guarantee."""
     model, params, batch = parity_setup
     fl = FLConfig(cohort_size=8, local_steps=1, local_lr=0.2, clip_norm=1.0,
                   noise_multiplier=0.0, secure_agg_bits=bits)
@@ -104,7 +106,7 @@ def test_async_matches_sync_at_staleness_zero(parity_setup, bits,
 
     client_update = jax.jit(build_client_update(model.loss_fn, fl))
     srv = AsyncServer(params, fl, buffer_size=8,
-                      staleness_mode=staleness_mode)
+                      staleness_mode=staleness_mode, mask_mode=mask_mode)
     base_params, ver = srv.pull()
     for c in range(8):
         cbatch = jax.tree.map(lambda v: v[c], batch)

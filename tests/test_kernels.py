@@ -82,6 +82,42 @@ def test_weighted_quantize_accum_sweep(C, D):
     np.testing.assert_allclose(back, direct, atol=1.5 * C / scale)
 
 
+@pytest.mark.parametrize("C,D", [(8, 512), (16, 1024)])
+def test_masked_weighted_quantize_accum_sweep(C, D):
+    """The mask-add lane vs oracle: weight+encode+mask+wraparound sum."""
+    key = jax.random.PRNGKey(C + D + 3)
+    x = jax.random.normal(key, (C, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (C, D))
+    masks = jax.random.randint(jax.random.fold_in(key, 3), (C, D),
+                               -2 ** 31, 2 ** 31 - 1, jnp.int32)
+    scale = float(1 << 20)
+    got = ksa.weighted_quantize_accum(x, w, u, scale, masks=masks,
+                                      interpret=True)
+    want = ref.weighted_quantize_accum(x, w, u, scale, masks=masks)
+    assert got.dtype == jnp.int32
+    assert bool(jnp.all(got == want))  # integer path: bit-exact
+
+
+def test_masked_kernel_session_masks_cancel_bit_exact():
+    """With a full pairwise session in the mask lane, the fused masked
+    accumulation equals the unmasked kernel output bit-for-bit."""
+    from repro.core.fl import secure_agg as sa
+    C, D = 8, 512
+    key = jax.random.PRNGKey(77)
+    x = jax.random.normal(key, (C, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (C, D))
+    skey = jax.random.fold_in(key, 3)
+    masks = jnp.stack([sa.session_mask((D,), s, C, skey) for s in range(C)])
+    assert not bool(jnp.all(masks == 0))
+    scale = float(1 << 20)
+    masked = ksa.weighted_quantize_accum(x, w, u, scale, masks=masks,
+                                         interpret=True)
+    plain = ksa.weighted_quantize_accum(x, w, u, scale, interpret=True)
+    assert bool(jnp.all(masked == plain))
+
+
 def test_weighted_quantize_accum_zero_weight_rows():
     """Zero-weight (invalid/padded) slots contribute exactly nothing."""
     key = jax.random.PRNGKey(5)

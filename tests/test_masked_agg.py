@@ -1,0 +1,283 @@
+"""End-to-end masked secure aggregation inside the jitted engines.
+
+The adversarial harness for the in-path masked protocol:
+
+  * the masked async buffer (mask_mode="client"/"tee") agrees with PR 1's
+    unmasked path at staleness 0;
+  * dropping up to k contributors from a pairwise session still decodes the
+    exact survivor aggregate via the recovery shares — and WITHOUT them the
+    decode is garbage (masking really hides individual updates);
+  * masked sync rounds are bit-identical to unmasked ones (masks cancel in
+    the modular sum) across every chunking strategy;
+  * simulate_training's dropout_rate knob kills devices mid-round and drives
+    the recovery path through the real jitted engines.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import mlp as mlp_cfg
+from repro.configs.base import FLConfig
+from repro.core.fl import aggregation as agg
+from repro.core.fl import secure_agg as sa
+from repro.core.fl.async_fl import (AsyncServer, build_async_buffer_step,
+                                    build_masked_async_buffer_step,
+                                    simulate_training)
+from repro.core.fl.round import build_client_update, build_round_step, \
+    init_fl_state
+from repro.models.model import build_mlp_classifier
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 2, cfg.num_features))
+    y = (x.sum(-1) > 0).astype(jnp.float32)
+    return model, params, {"features": x, "label": y}
+
+
+FL = FLConfig(cohort_size=8, local_steps=1, local_lr=0.2, clip_norm=1.0,
+              noise_multiplier=0.0, secure_agg_bits=32)
+
+
+def _push_clients(srv, model, params, batch, rng, n):
+    client_update = jax.jit(build_client_update(model.loss_fn, srv.fl_cfg))
+    base, ver = srv.pull()
+    for c in range(n):
+        cbatch = jax.tree.map(lambda v: v[c], batch)
+        delta, _ = client_update(base, cbatch, jax.random.fold_in(rng, c))
+        srv.push(delta, ver, rng=jax.random.fold_in(rng, 100 + c))
+    return srv
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+
+# --- async parity: masked buffer vs PR 1's unmasked path ---------------------
+@pytest.mark.parametrize("mask_mode", ["tee", "client"])
+def test_masked_async_matches_unmasked_at_staleness_zero(setup, mask_mode):
+    """The issue's acceptance bar: the masked async buffer path agrees with
+    the unmasked engine at staleness 0 — bit-exact for the in-TEE fused mask
+    lane (masks cancel inside the accumulator), and to stochastic-rounding
+    tolerance for client-side masking (independent rounding draws)."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(3)
+    srv_off = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant"),
+        model, params, batch, rng, 8)
+    srv_m = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                    mask_mode=mask_mode),
+        model, params, batch, rng, 8)
+    assert srv_off.version == 1 and srv_m.version == 1
+    diff = _max_diff(srv_off.params, srv_m.params)
+    if mask_mode == "tee":
+        assert diff == 0.0  # masks cancel inside the same jitted sum
+    else:
+        assert diff < 2e-5
+    for k in ("update_norm", "clip_fraction", "weight_total"):
+        assert float(srv_m.last_metrics[k]) == pytest.approx(
+            float(srv_off.last_metrics[k]), abs=1e-5)
+
+
+@pytest.mark.parametrize("drop", [1, 3, 7])
+def test_masked_partial_flush_recovers_survivor_aggregate(setup, drop):
+    """Drop `drop` of 8 session contributors: the flush re-adds their mask
+    shares inside the jitted step and the result equals the unmasked engine
+    on the survivors alone."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(5)
+    n = 8 - drop
+    srv_off = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant"),
+        model, params, batch, rng, n)
+    srv_m = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                    mask_mode="client"),
+        model, params, batch, rng, n)
+    frng = jax.random.fold_in(rng, 999)
+    srv_off.flush(rng=frng)
+    srv_m.flush(rng=frng)
+    assert srv_m.version == 1
+    assert _max_diff(srv_off.params, srv_m.params) < 2e-5
+    assert float(srv_m.last_metrics["weight_total"]) == pytest.approx(n)
+
+
+def test_masked_flush_without_recovery_is_garbage(setup):
+    """Adversarial check: if the server sums a partial masked session WITHOUT
+    the recovery shares, the decoded aggregate is wrecked by the un-cancelled
+    full-range masks — i.e. the buffer contents alone leak nothing usable."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(6)
+    srv = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                    mask_mode="client"),
+        model, params, batch, rng, 5)
+    spec = agg.make_spec(FL, 8)
+    present = jnp.asarray([1.0] * 5 + [0.0] * 3)
+    acc_no_rec = jnp.sum(srv._buf * present[:, None].astype(jnp.int32), axis=0)
+    mean_no_rec = agg.finalize_aggregate(acc_no_rec, 5.0, spec,
+                                         jax.random.fold_in(rng, 0xDEE))
+    acc_rec = acc_no_rec + sa.recovery_mask(
+        (srv._buf.shape[1],), present, 8, srv._session_key())
+    mean_rec = agg.finalize_aggregate(acc_rec, 5.0, spec,
+                                      jax.random.fold_in(rng, 0xDEE))
+    # recovered aggregate is a sane clipped mean; the unrecovered one is
+    # dominated by residual uniform-int32 masks, whose decode spans the whole
+    # fixed-point field (orders of magnitude beyond any clipped mean element)
+    assert float(jnp.abs(mean_rec).max()) < FL.clip_norm
+    diff = jnp.abs(mean_no_rec - mean_rec)
+    assert float(diff.max()) > 1.0  # field-scale corruption
+    assert float(jnp.mean((diff < 1e-3).astype(jnp.float32))) < 0.01
+
+
+def test_masked_buffer_rows_hide_plaintext(setup):
+    """Server's eye view of mask_mode='client': buffer rows are
+    indistinguishable from noise at the element level (no row equals its
+    unmasked encoding anywhere but by chance)."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(7)
+    srv = _push_clients(
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                    mask_mode="client"),
+        model, params, batch, rng, 8 - 1)  # avoid triggering the apply
+    spec = agg.make_spec(FL, 8)
+    client_update = jax.jit(build_client_update(model.loss_fn, FL))
+    base, _ = srv.pull()
+    for c in range(7):
+        cbatch = jax.tree.map(lambda v: v[c], batch)
+        delta, _ = client_update(base, cbatch, jax.random.fold_in(rng, c))
+        flat = jax.flatten_util.ravel_pytree(delta)[0]
+        q = agg.encode_array(flat, spec.sa_scale,
+                             jax.random.fold_in(jax.random.PRNGKey(0), c))
+        match = float(jnp.mean((srv._buf[c] == q).astype(jnp.float32)))
+        assert match < 0.01, f"row {c} leaks plaintext ({match:.3f})"
+
+
+def test_mask_modes_require_secure_agg_field(setup):
+    model, params, _ = setup
+    fl_off = dataclasses.replace(FL, secure_agg_bits=0)
+    with pytest.raises(ValueError):
+        AsyncServer(params, fl_off, buffer_size=4, mask_mode="client")
+    with pytest.raises(ValueError):
+        build_async_buffer_step(params, fl_off, buffer_size=4, mask_mode="tee")
+    with pytest.raises(ValueError):
+        build_masked_async_buffer_step(params, fl_off, buffer_size=4)
+    with pytest.raises(ValueError):
+        AsyncServer(params, FL, buffer_size=4, mask_mode="bogus")
+
+
+# --- sync rounds: in-path masks cancel bit-exactly ---------------------------
+# compile-heavy (the masked round traces O(cohort^2) PRF folds): the fast
+# lane keeps one run per chunk schedule, the full matrix rides the slow lane
+@pytest.mark.parametrize("clients_per_chunk,deferred", [
+    (0, False), (1, False), (2, True),
+    pytest.param(2, False, marks=pytest.mark.slow),
+    pytest.param(0, True, marks=pytest.mark.slow),
+])
+def test_masked_sync_round_bit_identical(setup, clients_per_chunk, deferred):
+    """secure_agg_masked adds a pairwise session mask to every cohort slot's
+    encoded delta inside the jitted round step; the modular sum is therefore
+    BIT-identical to the unmasked round, for every chunk schedule and for
+    the deferred per-slot accumulation."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(8)
+    fl_u = dataclasses.replace(FL, deferred_agg=deferred)
+    fl_m = dataclasses.replace(fl_u, secure_agg_masked=True)
+    step_u = jax.jit(build_round_step(model.loss_fn, fl_u, cohort_size=8,
+                                      clients_per_chunk=clients_per_chunk))
+    step_m = jax.jit(build_round_step(model.loss_fn, fl_m, cohort_size=8,
+                                      clients_per_chunk=clients_per_chunk))
+    su, mu = step_u(init_fl_state(params, fl_u), dict(batch), rng)
+    sm, mm = step_m(init_fl_state(params, fl_m), dict(batch), rng)
+    assert _max_diff(su.params, sm.params) == 0.0
+    assert float(mu["loss"]) == float(mm["loss"])
+
+
+def test_masked_sync_round_with_dropout_weights(setup):
+    """Mid-round dropouts (weight 0) keep their session slot: the encode of a
+    zero-weighted delta is exactly zero, the mask still cancels, and the
+    masked round remains bit-identical to the unmasked one."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(9)
+    batch = dict(batch)
+    batch["weight"] = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.float32)
+    fl_m = dataclasses.replace(FL, secure_agg_masked=True)
+    step_u = jax.jit(build_round_step(model.loss_fn, FL, cohort_size=8,
+                                      clients_per_chunk=4))
+    step_m = jax.jit(build_round_step(model.loss_fn, fl_m, cohort_size=8,
+                                      clients_per_chunk=4))
+    su, mu = step_u(init_fl_state(params, FL), dict(batch), rng)
+    sm, mm = step_m(init_fl_state(params, fl_m), dict(batch), rng)
+    assert _max_diff(su.params, sm.params) == 0.0
+    assert float(mm["participation"]) == pytest.approx(5 / 8)
+
+
+# --- the simulator drives the masked engines end-to-end ----------------------
+@pytest.mark.slow
+def test_simulate_training_masked_with_dropout_converges():
+    """dropout_rate kills devices mid-round; the masked client path still
+    learns and the final deadline flush exercises dropout recovery."""
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fl = FLConfig(local_steps=2, local_lr=0.4, clip_norm=1.0, server_lr=1.0,
+                  secure_agg_bits=32)
+    key = jax.random.PRNGKey(9)
+    wstar = jax.random.normal(key, (cfg.num_features,))
+
+    def make_client_batch(seed, n):
+        k = jax.random.fold_in(key, seed)
+        x = jax.random.normal(k, (n, 4, cfg.num_features))
+        y = (jnp.einsum("cbf,f->cb", x, wstar) > 0).astype(jnp.float32)
+        return {"features": x, "label": y}
+
+    res = simulate_training(
+        "async", loss_fn=model.loss_fn, params=params, fl_cfg=fl,
+        make_client_batch=make_client_batch, target_updates=60, cohort=16,
+        population=64, buffer_size=8, seed=1, dropout_rate=0.25,
+        mask_mode="client")
+    assert res.sim.applied_updates >= 60
+    # 60 pushes into size-8 sessions: 7 full applies + one recovery flush
+    assert res.sim.server_steps == 8
+    k = len(res.losses) // 4
+    assert np.mean(res.losses[-k:]) < np.mean(res.losses[:k])
+
+
+@pytest.mark.slow
+def test_simulate_training_sync_dropout_rate_with_devices():
+    """Sync mode: dropout_rate (modulated by DevicePopulation resource state)
+    zeroes mid-round casualties' weights — participation drops below 1 but
+    the masked round still aggregates the survivors."""
+    from repro.core.device_sim import DevicePopulation, midround_dropout_prob
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fl = FLConfig(local_steps=1, local_lr=0.3, clip_norm=1.0,
+                  secure_agg_bits=32, secure_agg_masked=True)
+    key = jax.random.PRNGKey(2)
+    wstar = jax.random.normal(key, (cfg.num_features,))
+
+    def make_client_batch(seed, n):
+        k = jax.random.fold_in(key, seed)
+        x = jax.random.normal(k, (n, 2, cfg.num_features))
+        y = (jnp.einsum("cbf,f->cb", x, wstar) > 0).astype(jnp.float32)
+        return {"features": x, "label": y}
+
+    pop = DevicePopulation(64, seed=4)
+    probs = [midround_dropout_prob(d, 0.3) for d in pop.devices]
+    assert min(probs) >= 0.3 and max(probs) <= 1.0  # resource modulation up
+    res = simulate_training(
+        "sync", loss_fn=model.loss_fn, params=params, fl_cfg=fl,
+        make_client_batch=make_client_batch, target_updates=48, cohort=8,
+        population=64, seed=4, dropout_rate=0.3, devices=pop)
+    assert res.sim.applied_updates >= 48
+    assert res.sim.applied_updates < res.sim.server_steps * 8  # dropouts real

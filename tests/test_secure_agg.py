@@ -71,6 +71,168 @@ def test_stochastic_rounding_unbiased():
     assert float(back.mean()) == pytest.approx(0.1234567, abs=2e-4)
 
 
+# --- wraparound-window decode (the `count` parameter) ------------------------
+def test_dequantize_count_recenters_wrapped_sum():
+    """Regression: an int32-wrapping reduced-field sum round-trips exactly.
+
+    4096 contributors, 16-bit values, wire residues in [0, C) with
+    C = field_modulus(16, 4096) = 2^28: the int32 accumulation wraps mod 2^32
+    many times, yet dequantize(count=4096) recovers the exact sum because C
+    divides 2^32.  (The seed bug: `count` was accepted and silently ignored.)
+    """
+    bits, count = 16, 4096
+    C = sa.field_modulus(bits, count)
+    assert C == 1 << 28 and (1 << 32) % C == 0
+    rs = np.random.RandomState(0)
+    vals = rs.randint(-20_000, 20_000, size=(count, 16)).astype(np.int32)
+    wire = np.asarray(sa.to_field(jnp.asarray(vals), C))
+    assert wire.min() >= 0 and wire.max() < C
+    acc = np.zeros(16, np.int32)
+    for row in wire:
+        acc = (acc + row).astype(np.int32)  # plain int32 wraparound adds
+    true = vals.sum(0)
+    assert np.any(acc != true), "test must actually overflow int32"
+    assert np.any(np.abs(true) > 1 << 16), "sums must exceed the 1-count window"
+    levels = 2 ** (bits - 1) - 1
+    back = np.asarray(sa.dequantize(jnp.asarray(acc), bits, 1.0, count=count))
+    np.testing.assert_array_equal(np.rint(back * levels).astype(np.int64), true)
+    # without the count window the decode is garbage — both the seed's raw
+    # int32 interpretation and a 1-count re-centering get the sums wrong
+    raw = acc.astype(np.float32)  # what the seed code decoded from
+    assert np.any(np.rint(raw).astype(np.int64) != true)
+    naive = np.asarray(sa.dequantize(jnp.asarray(acc), bits, 1.0))
+    assert np.any(np.rint(naive * levels).astype(np.int64) != true)
+
+
+def test_field_modulus_shapes():
+    assert sa.field_modulus(32, 1) == 1 << 32  # full int32 field: identity
+    assert sa.field_modulus(16, 1) == 1 << 16
+    assert sa.field_modulus(16, 3) == 1 << 18  # count rounded up to pow2
+    assert sa.field_modulus(32, 64) == 1 << 32  # capped
+    # to_field at the full field is the identity bit pattern
+    q = jnp.asarray([-5, 0, 2 ** 31 - 1, -(2 ** 31)], jnp.int32)
+    assert bool(jnp.all(sa.to_field(q, 1 << 32) == q))
+
+
+def test_field_modulus_2_31_boundary():
+    """C == 2^31 must not overflow the int32 scalar path (regression)."""
+    bits, count = 24, 128
+    assert sa.field_modulus(bits, count) == 1 << 31
+    ups = [0.1 * jnp.ones((8,)) for _ in range(70)]  # C == 2^31 via next_pow2
+    mean = sa.secure_aggregate(ups, 24, 4.0, seed=5)
+    np.testing.assert_allclose(np.asarray(mean), 0.1, atol=1e-5)
+    q = sa.quantize(jnp.asarray([-1.5, 0.0, 2.0]), bits, 4.0)
+    back = sa.dequantize(q, bits, 4.0, count=count)
+    np.testing.assert_allclose(np.asarray(back), [-1.5, 0.0, 2.0], atol=1e-5)
+    wire = sa.to_field(q, 1 << 31)
+    assert int(wire.min()) >= 0
+
+
+def test_dequantize_count_identity_in_window():
+    """Within the window the re-centering is a no-op (back-compat)."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.uniform(key, (300,), minval=-2.0, maxval=2.0)
+    for count in (1, 7, 64):
+        q = sa.quantize(x, 16, 2.0)
+        back = sa.dequantize(q, 16, 2.0, count=count)
+        base = sa.dequantize(q, 16, 2.0)
+        assert bool(jnp.all(back == base))
+
+
+# --- session masks (the traceable in-engine variant) -------------------------
+def test_session_mask_matches_pairwise_mask():
+    """Same PRF tree: session_mask(key=PRNGKey(seed)) == pairwise_mask."""
+    key = jax.random.PRNGKey(11)
+    n, shape = 7, (29,)
+    for c in range(n):
+        a = sa.pairwise_mask(shape, c, list(range(n)), 11)
+        b = sa.session_mask(shape, c, n, key)
+        assert bool(jnp.all(a == b))
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_session_mask_cancellation_property(n_slots, seed):
+    """Bit-exact mask cancellation for random pairwise sessions of 2..64."""
+    key = jax.random.PRNGKey(seed)
+    shape = (17,)
+    total = jnp.zeros(shape, jnp.int32)
+    for s in range(n_slots):
+        total = total + sa.session_mask(shape, s, n_slots, key)
+    assert bool(jnp.all(total == 0))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+def test_masked_sum_equals_unmasked_under_wraparound_property(n, seed):
+    """Masked modular sum == plain int32 wraparound sum, even when the
+    quantized values are extreme enough that partial sums wrap."""
+    key = jax.random.PRNGKey(seed)
+    shape = (41,)
+    # full-range int32 values: the unmasked running sum itself wraps
+    qs = [jax.random.randint(jax.random.fold_in(key, c), shape,
+                             -2 ** 31, 2 ** 31 - 1, jnp.int32)
+          for c in range(n)]
+    plain = qs[0]
+    for q in qs[1:]:
+        plain = plain + q
+    skey = jax.random.fold_in(key, 0xABCD)
+    masked = [q + sa.session_mask(shape, c, n, skey) for c, q in enumerate(qs)]
+    agg = sa.aggregate_masked(masked)
+    assert bool(jnp.all(agg == plain))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.floats(-0.999, 0.999), st.integers(0, 2 ** 31 - 1))
+def test_stochastic_rounding_unbiased_property(value, seed):
+    """E[dequant(quant(x, rng))] == x for coarse grids (unbiasedness)."""
+    key = jax.random.PRNGKey(seed)
+    x = jnp.full((40_000,), jnp.float32(value))
+    q = sa.quantize(x, 8, 1.0, rng=key)  # 127 levels: large rounding step
+    back = sa.dequantize(q, 8, 1.0)
+    lsb = 1.0 / (2 ** 7 - 1)
+    assert abs(float(back.mean()) - float(jnp.float32(value))) < lsb / 8
+
+
+# --- dropout recovery / adversarial ------------------------------------------
+@pytest.mark.parametrize("n,drop", [(4, 1), (8, 3), (12, 5)])
+def test_dropout_recovery_decodes_exact_survivor_sum(n, drop):
+    """Drop 1..k clients from a masked session: with the recovery shares the
+    decode is EXACT over survivors; without them it is garbage (the masks
+    actually hide the updates)."""
+    key = jax.random.PRNGKey(n * 31 + drop)
+    shape = (65,)
+    qs = [sa.quantize(0.4 * jax.random.normal(jax.random.fold_in(key, c), shape),
+                      24, 4.0) for c in range(n)]
+    skey = jax.random.fold_in(key, 0xD0)
+    masked = [q + sa.session_mask(shape, c, n, skey) for c, q in enumerate(qs)]
+    dropped = set(range(drop))  # kill the first `drop` contributors
+    present = jnp.asarray([0.0 if c in dropped else 1.0 for c in range(n)])
+    partial = sum(m for c, m in enumerate(masked) if c not in dropped)
+    want = sum(q for c, q in enumerate(qs) if c not in dropped)
+    # (a) recovery shares cancel the un-paired masks: exact survivor sum
+    recovered = partial + sa.recovery_mask(shape, present, n, skey)
+    assert bool(jnp.all(recovered == want))
+    # (b) without recovery the decode is garbage: the un-cancelled masks are
+    # full-range int32, so almost no element survives unchanged
+    assert float(jnp.mean((partial == want).astype(jnp.float32))) < 0.02
+
+
+def test_single_masked_update_hides_plaintext():
+    """Adversarial server view: one masked update reveals ~nothing elementwise
+    and recovery shares for NON-dropped clients do not unmask anyone."""
+    key = jax.random.PRNGKey(17)
+    n, shape = 6, (257,)
+    q = sa.quantize(0.5 * jax.random.normal(key, shape), 24, 4.0)
+    skey = jax.random.fold_in(key, 1)
+    masked = q + sa.session_mask(shape, 0, n, skey)
+    assert float(jnp.mean((masked == q).astype(jnp.float32))) < 0.01
+    # recovery for an all-present session is identically zero — the server
+    # cannot request shares that would strip a live client's mask
+    zero = sa.recovery_mask(shape, jnp.ones((n,)), n, skey)
+    assert bool(jnp.all(zero == 0))
+
+
 def test_round_step_scale_guards_overflow():
     """Fixed-point scale leaves headroom for a cohort-sized sum."""
     from repro.configs.base import FLConfig
