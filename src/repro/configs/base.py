@@ -243,6 +243,13 @@ class FLConfig:
     # the masks cancel in the modular sum, so the round is bit-identical to
     # the unmasked one while no unmasked encoding ever leaves a client slot.
     secure_agg_masked: bool = False
+    # pairwise-mask communication graph degree: 0 = complete graph (every
+    # pair of session slots shares a mask stream — the Bonawitz et al.
+    # baseline); an even k >= 2 masks each slot with its k ring neighbours
+    # only (SecAgg+-style sparse graph, Bell et al. 2020: O(log n) degree
+    # suffices at production session sizes), cutting mask generation from
+    # O(B^2) to O(B*k) streams per session.
+    secure_agg_degree: int = 0
     server_opt: str = "fedavg"  # fedavg | fedadam | fedadagrad | fedavgm
     server_lr: float = 1.0
     server_beta1: float = 0.9

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.fl import dp
 from repro.core.fl import secure_agg as sa
+from repro.kernels import prf
 
 
 class AggregationSpec(NamedTuple):
@@ -46,6 +47,7 @@ class AggregationSpec(NamedTuple):
     sa_scale: float  # fixed-point scale (1.0 when secure agg is off)
     dev_noise: float  # per-contribution Gaussian std ("device" placement)
     tee_noise: float  # aggregate-mean Gaussian std ("tee" placement)
+    mask_degree: int = 0  # pairwise mask graph degree (0 = complete graph)
 
 
 def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
@@ -70,6 +72,8 @@ def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
         if fl_cfg.noise_placement == "device" else 0.0,
         tee_noise=dp.noise_stddev(fl_cfg, num_contributors, "tee")
         if fl_cfg.noise_placement == "tee" else 0.0,
+        mask_degree=sa.effective_degree(
+            num_contributors, getattr(fl_cfg, "secure_agg_degree", 0)),
     )
 
 
@@ -99,7 +103,7 @@ def decode_tree(tree, scale: float):
 # ---------------------------------------------------------------------------
 # Pairwise session masking (the in-engine secure-aggregation hot path)
 # ---------------------------------------------------------------------------
-def mask_tree(tree, slot, num_slots: int, key):
+def mask_tree(tree, slot, num_slots: int, key, degree: int = 0):
     """Session masks shaped like ``tree`` for one contributor slot.
 
     Each leaf gets an independent pairwise mask stream (key folded by leaf
@@ -109,12 +113,13 @@ def mask_tree(tree, slot, num_slots: int, key):
     """
     leaves, treedef = jax.tree.flatten(tree)
     return jax.tree.unflatten(treedef, [
-        sa.session_mask(x.shape, slot, num_slots, jax.random.fold_in(key, i))
+        sa.session_mask(x.shape, slot, num_slots,
+                        jax.random.fold_in(key, i), degree)
         for i, x in enumerate(leaves)])
 
 
 def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSpec,
-                               session_key, rng):
+                               session_key, rng, *, use_pallas: bool = False):
     """The CLIENT side of the in-path masked protocol, on a flat delta.
 
     clip -> weight -> [device noise] -> stochastic fixed-point encode -> add
@@ -124,6 +129,13 @@ def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSp
     server only ever receives the returned masked int32 vector; the norm /
     clip indicator are client-side metrics (in production they ride the same
     secure channel as aggregated scalars).
+
+    The encode+mask tail is one pass of the counter-based PRF pipeline:
+    stochastic-rounding uniforms and the slot's pairwise session mask both
+    come from ``repro.kernels.prf`` streams, so the host path here is
+    bit-identical to the fused Pallas kernel (``quantize_mask_prf``) used
+    when ``use_pallas`` — where mask and uniforms are generated in-kernel
+    per VMEM tile and never exist in HBM.
 
     Returns (masked int32 (D,), pre-clip norm, was_clipped in {0., 1.}).
     """
@@ -135,15 +147,30 @@ def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSp
     if spec.dev_noise > 0.0:
         noise = jax.random.normal(jax.random.fold_in(rng, 1), x.shape, jnp.float32)
         xw = xw + noise * (spec.dev_noise * weight)
-    q = encode_array(xw, spec.sa_scale, jax.random.fold_in(rng, 2))
-    masked = q + sa.session_mask(x.shape, slot, spec.num_contributors,
-                                 session_key)  # int32 add wraps mod 2^32
+    (D,) = xw.shape
+    u_words = prf.key_words(jax.random.fold_in(rng, 2))
+    if use_pallas:
+        from repro.kernels import secure_agg as _ksa
+        masked = _ksa.quantize_mask_prf(
+            xw, spec.sa_scale, slot, spec.num_contributors,
+            jnp.stack(prf.key_words(session_key)), jnp.stack(u_words),
+            degree=spec.mask_degree,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        xf = xw * spec.sa_scale
+        floor = jnp.floor(xf)
+        bit = (prf.uniform_block(*u_words, D) < (xf - floor)).astype(
+            jnp.float32)
+        q = (floor + bit).astype(jnp.int32)
+        masked = q + sa.session_mask((D,), slot, spec.num_contributors,
+                                     session_key,
+                                     spec.mask_degree)  # wraps mod 2^32
     return masked, nrm, (clip_scale < 1.0).astype(jnp.float32)
 
 
 def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
                             total_weight, spec: AggregationSpec,
-                            session_key, rng):
+                            session_key, rng, *, recover: bool = True):
     """The SERVER side of the in-path masked protocol: modular sum + decode.
 
     mbuf:    (B, D) int32 — per-slot MASKED fixed-point contributions (what
@@ -153,14 +180,23 @@ def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
              gated out and their un-cancelled mask shares are re-added via
              ``recovery_mask`` (dropout recovery), so the decode yields the
              exact sum of the survivors.
+    recover: static.  A session the caller KNOWS is complete (every slot
+             delivered — the steady-state buffer apply) can skip both the
+             present-gating and the recovery sweep: all pairwise masks
+             cancel in the plain modular sum, bit-identically.  Partial
+             flushes must pass ``recover=True``.
 
     Returns the weight-normalized mean delta (D,) with TEE noise per
     ``finalize_aggregate``.
     """
     B, D = mbuf.shape
-    pres_i = jnp.asarray(present).astype(jnp.int32)
-    acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # int32, wraps mod 2^32
-    acc = acc + sa.recovery_mask((D,), present, B, session_key)
+    if recover:
+        pres_i = jnp.asarray(present).astype(jnp.int32)
+        acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # int32, wraps mod 2^32
+        acc = acc + sa.recovery_mask((D,), present, B, session_key,
+                                     spec.mask_degree)
+    else:
+        acc = jnp.sum(mbuf, axis=0)  # full session: masks cancel exactly
     # same TEE-noise stream derivation as aggregate_buffer
     return finalize_aggregate(acc, total_weight, spec,
                               jax.random.fold_in(rng, 0xDEE))
@@ -211,18 +247,22 @@ def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
 # ---------------------------------------------------------------------------
 def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
                      spec: AggregationSpec, rng, *,
-                     masks: Optional[jnp.ndarray] = None,
+                     mask_key=None,
                      use_pallas: bool = False):
     """One batched on-device aggregation of a stacked contribution buffer.
 
-    buf:     (B, D) f32 — raw (unclipped) flattened contributions.
-    weights: (B,) f32 — per-contribution weight (staleness discount x validity
-             mask); zero rows are excluded from the aggregate.
-    masks:   optional (B, D) int32 pairwise session masks added to the
-             encoded rows inside the fused accumulation (the in-TEE masked
-             path: every row of the session is masked, the masks cancel in
-             the modular sum, and unmasked encodings never materialize in
-             HBM).  Requires ``spec.use_secure_agg``.
+    buf:      (B, D) f32 — raw (unclipped) flattened contributions.
+    weights:  (B,) f32 — per-contribution weight (staleness discount x
+              validity mask); zero rows are excluded from the aggregate.
+    mask_key: optional pairwise-session PRNGKey — every row of the session
+              gets its slot's pairwise PRF mask added to its encoded ints
+              inside the fused accumulation (the in-TEE masked path).  The
+              masks cancel in the modular sum, and on the Pallas path they
+              are generated IN-KERNEL per VMEM tile from counters
+              (``prf`` streams) — no (B, D) mask array ever exists in HBM.
+              The jnp fallback materializes them via one deduplicated
+              ``secure_agg.session_masks`` sweep.  Requires
+              ``spec.use_secure_agg``.
 
     Returns (mean_delta_flat (D,), stats dict). The whole computation is
     traceable: clip scales from per-row squared norms, weighting, stochastic
@@ -231,7 +271,7 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
     weight/quantize/accumulate kernel) that never materializes the encoded
     per-contribution ints in HBM.
     """
-    if masks is not None and not spec.use_secure_agg:
+    if mask_key is not None and not spec.use_secure_agg:
         raise ValueError("pairwise masks require the secure-agg integer field "
                          "(spec.use_secure_agg)")
     B, D = buf.shape
@@ -264,19 +304,21 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
             qw = jnp.ones((B,), jnp.float32)
         if use_pallas:
             from repro.kernels import secure_agg as _ksa
-            pb, pd = (-B) % 8, (-D) % 512
-            pmasks = None if masks is None else jnp.pad(masks, ((0, pb), (0, pd)))
+            mkw = (None if mask_key is None
+                   else jnp.stack(prf.key_words(mask_key)))
             acc = _ksa.weighted_quantize_accum(
-                jnp.pad(qx, ((0, pb), (0, pd))), jnp.pad(qw, (0, pb)),
-                jnp.pad(uniforms, ((0, pb), (0, pd))), spec.sa_scale,
-                masks=pmasks, interpret=interpret)[:D]
+                qx, qw, uniforms, spec.sa_scale,
+                mask_key_words=mkw, num_slots=B,
+                mask_degree=spec.mask_degree, interpret=interpret)
         else:
             xf = qx * qw[:, None] * spec.sa_scale
             floor = jnp.floor(xf)
             bit = (uniforms < (xf - floor)).astype(jnp.float32)
             q = (floor + bit).astype(jnp.int32)
-            if masks is not None:
-                q = q + masks  # int32 add wraps mod 2^32
+            if mask_key is not None:
+                # one deduplicated edge sweep for the whole session
+                q = q + sa.session_masks((D,), B, mask_key,
+                                         spec.mask_degree)  # wraps mod 2^32
             acc = q.sum(0)  # wraps mod 2^32
     else:
         x = buf.astype(jnp.float32) * row_w[:, None]

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,20 +85,14 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     if mask_mode == "tee" and not spec.use_secure_agg:
         raise ValueError("mask_mode='tee' requires secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    flat0, unravel = ravel_pytree(params)
-    D = flat0.shape[0]
+    _, unravel = ravel_pytree(params)
 
     def step(params, opt_state, buf, staleness, valid, rng):
         w = staleness_weight(staleness, staleness_mode, staleness_exponent)
         w = w * valid  # empty slots contribute nothing
-        masks = None
-        if mask_mode == "tee":
-            skey = jax.random.fold_in(rng, 0x7EE)
-            masks = jnp.stack([
-                sa.session_mask((D,), s, buffer_size, skey)
-                for s in range(buffer_size)])
+        skey = jax.random.fold_in(rng, 0x7EE) if mask_mode == "tee" else None
         mean_flat, stats = agg.aggregate_buffer(buf, w, spec, rng,
-                                                masks=masks,
+                                                mask_key=skey,
                                                 use_pallas=use_pallas)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
@@ -114,8 +108,8 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     return jax.jit(step)
 
 
-def build_masked_async_buffer_step(params, fl_cfg, *,
-                                   buffer_size: int) -> Callable:
+def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
+                                   recover: bool = True) -> Callable:
     """The server half of the CLIENT-masked buffered-async protocol.
 
     Returns jitted ``step(params, opt_state, mbuf, present, weights,
@@ -128,6 +122,13 @@ def build_masked_async_buffer_step(params, fl_cfg, *,
     sum decodes to the exact survivor aggregate.  ``weights`` / ``norms`` /
     ``clips`` are the client-reported per-slot scalars used only for
     normalization and metrics.
+
+    ``recover=False`` builds the steady-state variant for sessions the host
+    KNOWS are complete (every slot delivered): the recovery sweep is elided
+    entirely — the full session's pairwise masks cancel in the plain
+    modular sum, bit-identically — so the common-case apply costs no PRF
+    work at all.  ``AsyncServer`` uses it for every full-buffer apply and
+    keeps the recovering variant for partial flushes.
     """
     spec = agg.make_spec(fl_cfg, buffer_size)
     if not spec.use_secure_agg:
@@ -140,7 +141,8 @@ def build_masked_async_buffer_step(params, fl_cfg, *,
         w = weights * present
         w_total = w.sum()
         mean_flat = agg.aggregate_masked_buffer(mbuf, present, w_total, spec,
-                                                session_key, rng)
+                                                session_key, rng,
+                                                recover=recover)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
         denom = jnp.maximum(w_total, 1e-9)
@@ -156,6 +158,21 @@ def build_masked_async_buffer_step(params, fl_cfg, *,
     return jax.jit(step)
 
 
+class ClientPush(NamedTuple):
+    """A client-side encoded push: what actually travels to the server in
+    mask_mode="client" — the masked int32 row plus the scalar metadata that
+    rides the same channel.  ``version``/``slot`` pin the pairwise session
+    and position the encoding was produced for."""
+
+    row: jnp.ndarray  # (D,) int32, masked fixed-point encoding
+    weight: jnp.ndarray  # staleness weight the client applied pre-encode
+    norm: jnp.ndarray  # pre-clip L2 norm (client-side metric)
+    clipped: jnp.ndarray  # 1.0 if the clip bound was active
+    staleness: float
+    version: int  # session id (server version at encode time)
+    slot: int  # session position the mask was generated for
+
+
 class AsyncServer:
     """Buffered asynchronous aggregation with staleness weighting + DP.
 
@@ -166,17 +183,39 @@ class AsyncServer:
     of update payloads, no ``float()`` round-trips.
 
     mask_mode:
-      "off"    — raw f32 buffer, server-side clip/encode (PR 1 behaviour).
-      "tee"    — raw f32 buffer; the jitted step adds pairwise session masks
-                 inside the fused in-enclave aggregation (bit-identical
-                 results; unmasked encodings never hit HBM).
-      "client" — the buffer holds MASKED int32 vectors: the jitted write is
-                 the client-side clip -> staleness-weight -> stochastic
-                 fixed-point encode -> pairwise-mask pipeline, one session
-                 per buffer round (session id = server version).  Partial
-                 flushes (dropouts) re-add the absent slots' mask shares
-                 inside the jitted step — dropout recovery — so the decode
-                 is exact over the survivors.
+      "off"        — raw f32 buffer, server-side clip/encode (PR 1
+                     behaviour).
+      "tee"        — raw f32 buffer; the jitted step adds pairwise session
+                     masks inside the fused in-enclave aggregation
+                     (bit-identical results; with the Pallas path the masks
+                     are generated in-kernel from PRF counters and never
+                     exist in HBM).  The whole mask lane runs in the
+                     batched apply, i.e. on the round's critical path.
+      "tee_stream" — STREAMING in-enclave masking: the TEE runs the
+                     clip/weight/encode/PRF-mask pipeline per arriving
+                     delta (one jitted push), so the raw update never
+                     rests in HBM at all — the buffer only ever holds
+                     masked int32 rows — and the flush is a plain modular
+                     sum (masks provably cancel).  Per-arrival mask work is
+                     amortized into the gaps between arrivals instead of
+                     stacking up at flush time.  Parity with "off" is to
+                     stochastic-rounding tolerance (independent draws).
+      "client"     — the buffer holds MASKED int32 vectors.  The protocol
+                     is split along the real trust boundary:
+                     ``encode_push`` is the CLIENT half (clip ->
+                     staleness-weight -> stochastic fixed-point encode ->
+                     pairwise PRF mask, one jitted call — in a fleet it
+                     runs on the device, in parallel across clients), and
+                     ``push_encoded`` is the SERVER half (a plain row
+                     write; the server never sees an unmasked delta).  One
+                     session per buffer round (session id = server
+                     version).  Partial flushes (dropouts) re-add the
+                     absent slots' mask shares inside the jitted step —
+                     dropout recovery — so the decode is exact over the
+                     survivors; full buffers skip recovery entirely (masks
+                     provably cancel).  ``push(delta, ...)`` remains the
+                     convenience wrapper that runs both halves back to
+                     back.
     """
 
     def __init__(self, params, fl_cfg, buffer_size: int = 10,
@@ -185,7 +224,7 @@ class AsyncServer:
                  mask_mode: str = "off",
                  session_seed: int = 0x5A5E,
                  use_pallas: Optional[bool] = None):
-        if mask_mode not in ("off", "tee", "client"):
+        if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         self.params = params
         self.fl_cfg = fl_cfg
@@ -199,6 +238,8 @@ class AsyncServer:
         self._fill = 0
         self._session_base = jax.random.PRNGKey(session_seed)
         self._push_base = jax.random.PRNGKey(0xA5)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
 
         flat, _ = ravel_pytree(params)
         D = flat.shape[0]
@@ -206,33 +247,57 @@ class AsyncServer:
         self._stal = jnp.zeros((buffer_size,), jnp.float32)
         self._valid = jnp.zeros((buffer_size,), jnp.float32)
 
-        if mask_mode == "client":
+        if mask_mode in ("client", "tee_stream"):
             spec = agg.make_spec(fl_cfg, buffer_size)
             if not spec.use_secure_agg:
                 raise ValueError(
-                    "mask_mode='client' requires secure_agg_bits > 0")
+                    f"mask_mode={mask_mode!r} requires secure_agg_bits > 0")
             self._buf = jnp.zeros((buffer_size, D), jnp.int32)
             self._wts = jnp.zeros((buffer_size,), jnp.float32)
             self._norms = jnp.zeros((buffer_size,), jnp.float32)
             self._clips = jnp.zeros((buffer_size,), jnp.float32)
+            # per-slot presence: masked sessions may fill out of order
+            # (concurrent clients push for their assigned slots whenever
+            # they finish), so the apply's present vector and the dropout
+            # recovery must reflect the actual filled set, not a prefix
+            self._present = [False] * buffer_size
+            # steady state: full sessions skip the recovery sweep entirely
+            # (masks provably cancel); the recovering flush variant is
+            # compiled lazily on the first partial flush (capturing self,
+            # not the init-time params pytree, so nothing stale is pinned)
             self._step = build_masked_async_buffer_step(
-                params, fl_cfg, buffer_size=buffer_size)
+                params, fl_cfg, buffer_size=buffer_size, recover=False)
+            self._flush_step: Optional[Callable] = None
+            self._build_flush_step = lambda: build_masked_async_buffer_step(
+                self.params, fl_cfg, buffer_size=buffer_size, recover=True)
             s_mode, s_exp = staleness_mode, staleness_exponent
 
             @jax.jit
-            def _write_masked(buf, stal, wts, norms, clips, slot, delta, s,
-                              session_key, rng):
+            def _masked_encode(delta, slot, s, session_key, rng):
+                """The masked-push encode pipeline (one jitted call).
+
+                Runs on the device in mask_mode="client" and inside the
+                enclave, per arriving delta, in mask_mode="tee_stream".
+                """
                 flat_d, _ = ravel_pytree(delta)
                 w = staleness_weight(s, s_mode, s_exp)
                 masked, nrm, clipped = agg.encode_masked_contribution(
-                    flat_d, w, slot, spec, session_key, rng)
-                return (buf.at[slot].set(masked),
+                    flat_d, w, slot, spec, session_key, rng,
+                    use_pallas=use_pallas)
+                return masked, w, nrm, clipped
+
+            @jax.jit
+            def _write_row(buf, stal, wts, norms, clips, slot, row, s, w,
+                           nrm, clipped):
+                """SERVER-side jit: store one masked row."""
+                return (buf.at[slot].set(row),
                         stal.at[slot].set(jnp.asarray(s, jnp.float32)),
                         wts.at[slot].set(w),
                         norms.at[slot].set(nrm),
                         clips.at[slot].set(clipped))
 
-            self._write_masked = _write_masked
+            self._masked_encode = _masked_encode
+            self._write_row = _write_row
         else:
             self._buf = jnp.zeros((buffer_size, D), jnp.float32)
             self._step = build_async_buffer_step(
@@ -258,19 +323,88 @@ class AsyncServer:
     def pull(self) -> Tuple[Any, int]:
         return self.params, self.version
 
-    def push(self, delta, client_version: int, rng=None) -> None:
+    def encode_push(self, delta, client_version: int, rng=None,
+                    slot: Optional[int] = None) -> ClientPush:
+        """The CLIENT half of mask_mode='client': encode + mask one delta.
+
+        Pure with respect to server state (reads only the current session
+        id and the target slot) — in a real fleet this computation runs on
+        the device, concurrently across clients; the server receives
+        nothing but the returned ``ClientPush``.  ``slot`` defaults to the
+        next free slot; concurrent clients of one session encode against
+        the distinct slots the server assigned them at check-in.
+        """
+        if self.mask_mode != "client":
+            raise ValueError(
+                f"encode_push is the client half of mask_mode='client' "
+                f"(server is in mask_mode={self.mask_mode!r})")
         staleness = self.version - client_version  # host-int metadata only
+        if slot is None:
+            slot = self._present.index(False)  # lowest unfilled slot
+        row, w, nrm, clipped = self._encode_for_slot(delta, staleness, slot,
+                                                     rng)
+        return ClientPush(row, w, nrm, clipped, staleness, self.version,
+                          slot)
+
+    def _encode_for_slot(self, delta, staleness, slot: int, rng=None):
+        """One masked encode bound to (current session, ``slot``)."""
+        if rng is None:
+            rng = jax.random.fold_in(
+                jax.random.fold_in(self._push_base, self.version), slot)
+        return self._masked_encode(delta, slot, staleness,
+                                   self._session_key(), rng)
+
+    def push_encoded(self, cp: ClientPush, rng=None) -> None:
+        """The SERVER half of mask_mode='client': store one masked row.
+
+        Arrivals may land in any order — each ``ClientPush`` carries the
+        slot its mask was generated for.  Rejected if its session has
+        already been applied (the pairwise masks of a new session no
+        longer cancel against it) or its slot was already delivered.
+        """
+        if self.mask_mode != "client":
+            raise ValueError(
+                f"push_encoded is the server half of mask_mode='client' "
+                f"(server is in mask_mode={self.mask_mode!r})")
+        if (cp.version != self.version or not 0 <= cp.slot < self.buffer_size
+                or self._present[cp.slot]):
+            raise ValueError(
+                f"stale ClientPush (session {cp.version} slot {cp.slot}; "
+                f"server at session {self.version}, slot filled="
+                f"{self._present[cp.slot] if 0 <= cp.slot < self.buffer_size else 'n/a'}): "
+                "the pairwise mask no longer matches an open session position")
+        self._store_row(cp.slot, cp.row, cp.staleness, cp.weight, cp.norm,
+                        cp.clipped, rng)
+
+    def _store_row(self, slot: int, row, staleness, w, nrm, clipped,
+                   rng=None) -> None:
+        """Write one masked row into its session slot (+ apply when full)."""
+        (self._buf, self._stal, self._wts, self._norms,
+         self._clips) = self._write_row(
+            self._buf, self._stal, self._wts, self._norms, self._clips,
+            slot, row, staleness, w, nrm, clipped)
+        self._present[slot] = True
+        self._fill += 1
+        if self._fill >= self.buffer_size:
+            self._apply(rng)
+
+    def push(self, delta, client_version: int, rng=None) -> None:
         if self.mask_mode == "client":
-            wrng = jax.random.fold_in(
-                jax.random.fold_in(self._push_base, self.version), self._fill)
-            (self._buf, self._stal, self._wts, self._norms,
-             self._clips) = self._write_masked(
-                self._buf, self._stal, self._wts, self._norms, self._clips,
-                self._fill, delta, staleness, self._session_key(), wrng)
-        else:
-            self._buf, self._stal, self._valid = self._write(
-                self._buf, self._stal, self._valid, self._fill, delta,
-                staleness)
+            self.push_encoded(self.encode_push(delta, client_version), rng)
+            return
+        staleness = self.version - client_version  # host-int metadata only
+        if self.mask_mode == "tee_stream":
+            # streaming in-enclave masking: encode + mask the arriving delta
+            # NOW (one jitted call) so the raw update never rests in HBM and
+            # the flush is left with nothing but the modular sum
+            slot = self._present.index(False)  # lowest unfilled slot
+            row, w, nrm, clipped = self._encode_for_slot(delta, staleness,
+                                                         slot)
+            self._store_row(slot, row, staleness, w, nrm, clipped, rng)
+            return
+        self._buf, self._stal, self._valid = self._write(
+            self._buf, self._stal, self._valid, self._fill, delta,
+            staleness)
         self._fill += 1
         if self._fill >= self.buffer_size:
             self._apply(rng)
@@ -289,14 +423,20 @@ class AsyncServer:
     def _apply(self, rng=None) -> None:
         if rng is None:  # deterministic per-version stream for rounding/noise
             rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
-        if self.mask_mode == "client":
-            present = jnp.asarray(
-                [1.0] * self._fill
-                + [0.0] * (self.buffer_size - self._fill), jnp.float32)
-            self.params, self._opt_state, self.last_metrics = self._step(
+        if self.mask_mode in ("client", "tee_stream"):
+            present = jnp.asarray([1.0 if p else 0.0 for p in self._present],
+                                  jnp.float32)
+            if self._fill >= self.buffer_size:
+                step = self._step  # complete session: no recovery needed
+            else:
+                if self._flush_step is None:
+                    self._flush_step = self._build_flush_step()
+                step = self._flush_step  # dropout recovery for absent slots
+            self.params, self._opt_state, self.last_metrics = step(
                 self.params, self._opt_state, self._buf, present, self._wts,
                 self._stal, self._norms, self._clips, self._session_key(),
                 rng)
+            self._present = [False] * self.buffer_size
         else:
             self.params, self._opt_state, self.last_metrics = self._step(
                 self.params, self._opt_state, self._buf, self._stal,
@@ -436,7 +576,7 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     (battery / wifi / churn) via ``device_sim.midround_dropout_prob``.
 
     ``mask_mode`` selects the secure-aggregation path of the async engine
-    ("off" | "tee" | "client" — see ``AsyncServer``).
+    ("off" | "tee" | "tee_stream" | "client" — see ``AsyncServer``).
 
     ``make_client_batch(client_seed, n_clients)`` must return a batch pytree
     with leading axis ``n_clients``.  Simulated wall-clock uses the same

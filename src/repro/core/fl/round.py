@@ -10,8 +10,10 @@ One round =
      (masks cancel; see core/fl/secure_agg.py), lowering to one big integer
      all-reduce over the (pod, data) axes.  With
      ``fl_cfg.secure_agg_masked`` the masks are real, not notional: every
-     cohort slot adds its pairwise session mask to the encoded delta inside
-     the scan, and the round stays bit-identical because they cancel;
+     cohort slot adds its pairwise session mask — one batched counter-PRF
+     sweep per slot (``secure_agg.session_mask``; graph degree from
+     ``fl_cfg.secure_agg_degree``) — to the encoded delta inside the scan,
+     and the round stays bit-identical because they cancel;
   4. in ``tee`` placement, Gaussian noise is added once to the decoded
      aggregate inside the trusted boundary;
   5. the server optimizer applies the noised mean delta to the global model.
@@ -151,7 +153,8 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                     if masked:
                         enc = jax.tree.map(
                             lambda e, mk: e + mk, enc,
-                            agg.mask_tree(params, cslot[0], cohort_size, skey))
+                            agg.mask_tree(params, cslot[0], cohort_size, skey,
+                                          spec.mask_degree))
                 else:
                     enc = delta
                 acc = jax.tree.map(lambda a, e: a + e, acc, enc)
@@ -168,7 +171,8 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                     if masked:
                         mks = jax.vmap(
                             lambda s: agg.mask_tree(params, s, cohort_size,
-                                                    skey))(cslot)
+                                                    skey,
+                                                    spec.mask_degree))(cslot)
                         encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
                 else:
                     encs = deltas

@@ -18,17 +18,27 @@ Three layers live here:
      masked value to its canonical wire residue for reduced-field transports.
   2. host-side pairwise masks — ``pairwise_mask`` / ``mask_update`` /
      ``aggregate_masked`` (arbitrary peer-id sets, integer seeds).
-  3. session masks — ``session_mask`` / ``recovery_mask``: the jit-traceable
-     variant keyed by a PRNGKey and a slot index, used *inside* the jitted
-     engines (core/fl/aggregation.py writes masked vectors straight into the
-     async buffer; core/fl/round.py masks the sync chunk scan).  When a
-     session contributor drops, ``recovery_mask`` is the sum of the absent
-     slots' masks — exactly the cancelling shares the surviving clients
-     reconstruct in the real protocol — and adding it to the modular sum
-     makes ``dequantize`` yield the true sum of the survivors.
+  3. session masks — ``session_mask`` / ``session_masks`` /
+     ``recovery_mask``: the jit-traceable variant keyed by a PRNGKey and a
+     slot index, used *inside* the jitted engines (core/fl/aggregation.py
+     writes masked vectors straight into the async buffer; core/fl/round.py
+     masks the sync chunk scan).  When a session contributor drops,
+     ``recovery_mask`` is the sum of the absent slots' masks — exactly the
+     cancelling shares the surviving clients reconstruct in the real
+     protocol — and adding it to the modular sum makes ``dequantize`` yield
+     the true sum of the survivors.
 
-The quantize/dequantize hot loop has a Pallas TPU kernel
-(`repro.kernels.secure_agg`); this module is the protocol layer.
+Every mask in layers 2 and 3 is one stream of the counter-based pairwise
+PRF in ``repro.kernels.prf`` (Threefry-2x32, keyed by session key and the
+unordered slot pair, indexed by flat element position).  Random access by
+element position is what lets the Pallas kernels in
+``repro.kernels.secure_agg`` regenerate any tile of any mask on the fly in
+VMEM — bit-identical to the host functions here, which serve as the oracle —
+so the fused paths never materialize a (B, D) mask array in HBM.  Host-side
+generation is batched: one vectorized PRF call per mask (``session_mask``),
+one deduplicated pair sweep for a whole session (``session_masks``), and one
+gated pair sweep for dropout recovery (``recovery_mask``) — no Python loops
+over slots, O(num_slots * D) peak memory.
 """
 from __future__ import annotations
 
@@ -37,8 +47,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-_INT32_MIN = -(2 ** 31)
-_INT32_MAX = 2 ** 31 - 1
+from repro.kernels import prf
 
 
 def quantize(x: jnp.ndarray, bits: int, value_range: float,
@@ -113,25 +122,114 @@ def dequantize(q: jnp.ndarray, bits: int, value_range: float,
 
 
 # ---------------------------------------------------------------------------
-# Host-side pairwise masks (arbitrary peer sets, integer seeds)
+# Pairwise-PRF mask generation (batched; one vectorized sweep per mask set)
 # ---------------------------------------------------------------------------
-def pairwise_mask(shape, client_id: int, peer_ids: Sequence[int], seed: int) -> jnp.ndarray:
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def effective_degree(num_slots: int, degree: int) -> int:
+    """Canonicalize a mask-graph degree: 0 == complete graph.
+
+    A ring degree must be even (each slot pairs with k/2 neighbours on each
+    side) and leave at least one non-neighbour (k <= num_slots - 2);
+    anything denser collapses to the complete graph.
+    """
+    if degree <= 0 or degree >= num_slots - 1:
+        return 0
+    if degree % 2 != 0:
+        raise ValueError(f"ring mask-graph degree must be even, got {degree}")
+    return degree
+
+
+def _neighbor_slots(slot, num_slots: int, degree: int) -> jnp.ndarray:
+    """The slots ``slot`` shares a pairwise mask with, traceable in slot.
+
+    Complete graph (degree 0): all num_slots - 1 other slots, enumerated
+    without the diagonal (``others = arange + (arange >= slot)``).  Ring
+    degree k: the k/2 neighbours on each side, ``(slot +- j) % num_slots``.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    k = effective_degree(num_slots, degree)
+    if k == 0:
+        d = jnp.arange(num_slots - 1, dtype=jnp.int32)
+        return d + (d >= slot).astype(jnp.int32)
+    offs = jnp.asarray([j for j in range(1, k // 2 + 1)]
+                       + [-j for j in range(1, k // 2 + 1)], jnp.int32)
+    return (slot + offs + num_slots) % num_slots
+
+
+def session_pairs(num_slots: int, degree: int = 0):
+    """The mask graph's edge list as static (lo, hi) int32 arrays.
+
+    Complete graph: all num_slots*(num_slots-1)/2 unordered pairs.  Ring
+    degree k: the num_slots*k/2 edges {s, (s+j) % num_slots}, j = 1..k/2.
+    """
+    k = effective_degree(num_slots, degree)
+    if k == 0:
+        lo, hi = jnp.triu_indices(num_slots, k=1)
+        return lo.astype(jnp.int32), hi.astype(jnp.int32)
+    s = jnp.arange(num_slots, dtype=jnp.int32)
+    edges = jnp.stack([jnp.stack([s, (s + j) % num_slots], axis=1)
+                       for j in range(1, k // 2 + 1)]).reshape(-1, 2)
+    return jnp.min(edges, axis=1), jnp.max(edges, axis=1)
+
+
+def _edge_chunks(lo: jnp.ndarray, hi: jnp.ndarray, D: int):
+    """Pad an edge list into fixed-size chunks for a lax.scan sweep.
+
+    Returns (lo, hi, weight) each shaped (n_chunks, chunk); padded entries
+    alias edge (0, 0) and carry weight 0, so every sweep body can neutralize
+    them the same way.  The chunk size balances scan length against cache
+    footprint: at least 16 edges per chunk (short scans — a chunked scatter
+    over few-edge chunks rewrites the whole accumulator per step), at most
+    ~16 MiB of stream words.
+    """
+    P = int(lo.shape[0])
+    chunk = max(1, min(P, max((1 << 22) // max(D, 1), 16)))
+    n_chunks = -(-P // chunk)
+    pad = n_chunks * chunk - P
+    w = jnp.concatenate([jnp.ones((P,), jnp.int32),
+                         jnp.zeros((pad,), jnp.int32)])
+    lo_c = jnp.concatenate([lo, jnp.zeros((pad,), jnp.int32)])
+    hi_c = jnp.concatenate([hi, jnp.zeros((pad,), jnp.int32)])
+    return (lo_c.reshape(n_chunks, chunk), hi_c.reshape(n_chunks, chunk),
+            w.reshape(n_chunks, chunk))
+
+
+def _signed_pair_sum(k0, k1, slot, others, shape) -> jnp.ndarray:
+    """sum_d sign(d - slot) * PRF_stream(key, pair(slot, d)) over ``others``.
+
+    One batched PRF call generates all pair streams ((len(others), D) peak);
+    a diagonal entry d == slot (allowed in ``pairwise_mask``'s peer list)
+    gates itself out via sign 0.  Traceable in ``slot`` and in ``others``.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    others = jnp.asarray(others, jnp.int32)
+    lo = jnp.minimum(slot, others)
+    hi = jnp.maximum(slot, others)
+    pk0, pk1 = prf.pair_keys(k0, k1, lo.astype(prf.U32), hi.astype(prf.U32))
+    m = prf.stream_block(pk0, pk1, _size(shape))  # (len(others), D)
+    sign = jnp.sign(others - slot)  # +1 below, -1 above, 0 on the diagonal
+    total = jnp.sum(sign[:, None] * m, axis=0, dtype=jnp.int32)  # mod 2^32
+    return total.reshape(shape)
+
+
+def pairwise_mask(shape, client_id: int, peer_ids: Sequence[int],
+                  seed: int) -> jnp.ndarray:
     """Additive int32 mask for `client_id` that cancels over all clients.
 
     mask_c = sum_{d > c} PRF(c, d) - sum_{d < c} PRF(d, c): each unordered
     pair contributes +m to one endpoint and -m to the other, so
-    sum_c mask_c == 0 (mod 2^32).
+    sum_c mask_c == 0 (mod 2^32).  All peers are generated in ONE batched
+    PRF sweep — trace size is O(1) in the peer count (the old per-peer
+    fold-in loop emitted O(B) ops and blew up trace time at B=64).
     """
-    base = jax.random.PRNGKey(seed)
-    total = jnp.zeros(shape, jnp.int32)
-    for d in peer_ids:
-        if d == client_id:
-            continue
-        lo, hi = (client_id, d) if client_id < d else (d, client_id)
-        k = jax.random.fold_in(jax.random.fold_in(base, lo), hi)
-        m = jax.random.randint(k, shape, _INT32_MIN, _INT32_MAX, jnp.int32)
-        total = total + (m if client_id == lo else -m)  # wraps mod 2^32
-    return total
+    k0, k1 = prf.key_words(jax.random.PRNGKey(seed))
+    return _signed_pair_sum(k0, k1, client_id, jnp.asarray(peer_ids), shape)
 
 
 def mask_update(q: jnp.ndarray, client_id: int, peer_ids: Sequence[int],
@@ -140,39 +238,76 @@ def mask_update(q: jnp.ndarray, client_id: int, peer_ids: Sequence[int],
 
 
 def aggregate_masked(masked: Sequence[jnp.ndarray]) -> jnp.ndarray:
-    """Modular sum of masked contributions — masks cancel exactly."""
-    out = masked[0]
-    for m in masked[1:]:
-        out = out + m  # int32 wraparound == mod 2^32
-    return out
+    """Modular sum of masked contributions — masks cancel exactly.
+
+    One stacked wraparound reduce (trace O(1) in the contribution count).
+    """
+    return jnp.sum(jnp.stack(list(masked)), axis=0, dtype=jnp.int32)
 
 
 # ---------------------------------------------------------------------------
 # Session masks — the jit-traceable variant used inside the engines
 # ---------------------------------------------------------------------------
-def session_mask(shape, slot, num_slots: int, key) -> jnp.ndarray:
+def session_mask(shape, slot, num_slots: int, key,
+                 degree: int = 0) -> jnp.ndarray:
     """Pairwise mask for session position ``slot`` of ``num_slots``.
 
-    Same cancellation identity as ``pairwise_mask`` over
-    ``peer_ids=range(num_slots)`` (bit-identical when
-    ``key == jax.random.PRNGKey(seed)``), but keyed by a PRNGKey — so the
-    host can fold a per-session id in — and traceable in ``slot``, which is
-    what lets the jitted buffer-write path mask a contribution for whatever
-    slot it lands in without per-slot recompilation.
+    Same cancellation identity (and same PRF tree — bit-identical when
+    ``key == jax.random.PRNGKey(seed)``) as ``pairwise_mask`` over
+    ``peer_ids=range(num_slots)``, but keyed by a PRNGKey — so the host can
+    fold a per-session id in — and traceable in ``slot``, which is what lets
+    the jitted buffer-write path mask a contribution for whatever slot it
+    lands in without per-slot recompilation.  ``degree`` selects the mask
+    graph (0 = complete, even k = ring).  This is the host oracle for the
+    in-kernel PRF mask lanes (kernels/secure_agg.py): parity is bit-exact
+    and test-enforced.
     """
-    slot = jnp.asarray(slot, jnp.int32)
-    total = jnp.zeros(shape, jnp.int32)
-    for d in range(num_slots):
-        lo = jnp.minimum(slot, d)
-        hi = jnp.maximum(slot, d)
-        k = jax.random.fold_in(jax.random.fold_in(key, lo), hi)
-        m = jax.random.randint(k, shape, _INT32_MIN, _INT32_MAX, jnp.int32)
-        sign = jnp.where(d == slot, 0, jnp.where(slot < d, 1, -1))
-        total = total + sign.astype(jnp.int32) * m  # wraps mod 2^32
-    return total
+    k0, k1 = prf.key_words(key)
+    return _signed_pair_sum(
+        k0, k1, slot, _neighbor_slots(slot, num_slots, degree), shape)
 
 
-def recovery_mask(shape, present, num_slots: int, key) -> jnp.ndarray:
+def session_masks(shape, num_slots: int, key, degree: int = 0) -> jnp.ndarray:
+    """All ``num_slots`` session masks at once -> (num_slots, *shape) int32.
+
+    Two bit-identical strategies (int32 addition commutes mod 2^32):
+
+      * small complete-graph sessions (<= 32 slots): per-row batched
+        generation — each row's neighbour streams fuse straight into its
+        signed sum, so no stream is ever materialized (the XLA analogue of
+        the in-kernel tile lane), at the cost of generating each edge
+        stream twice (measured faster than the sweep at these sizes);
+      * everything else: deduplicated edge sweep over ``session_pairs`` —
+        each unordered pair stream is generated ONCE and scatter-added
+        (+ to its low slot, - to its high slot), in chunks bounded to
+        ~16 MiB of stream, so peak memory stays O(num_slots * D).
+    """
+    D = _size(shape)
+    k0, k1 = prf.key_words(key)
+    if num_slots <= 32 and effective_degree(num_slots, degree) == 0:
+        rows = [_signed_pair_sum(
+            k0, k1, s, _neighbor_slots(jnp.int32(s), num_slots, degree),
+            (D,)) for s in range(num_slots)]
+        return jnp.stack(rows).reshape((num_slots,) + tuple(shape))
+    lo, hi = session_pairs(num_slots, degree)
+    out = jnp.zeros((num_slots, D), jnp.int32)
+    if int(lo.shape[0]) == 0:
+        return out.reshape((num_slots,) + tuple(shape))
+
+    def body(acc, xs):
+        clo, chi, cw = xs
+        pk0, pk1 = prf.pair_keys(k0, k1, clo.astype(prf.U32),
+                                 chi.astype(prf.U32))
+        m = prf.stream_block(pk0, pk1, D) * cw[:, None]  # (chunk, D)
+        acc = acc.at[clo].add(m).at[chi].add(-m)  # wraps mod 2^32
+        return acc, None
+
+    out, _ = jax.lax.scan(body, out, _edge_chunks(lo, hi, D))
+    return out.reshape((num_slots,) + tuple(shape))
+
+
+def recovery_mask(shape, present, num_slots: int, key,
+                  degree: int = 0) -> jnp.ndarray:
     """Sum of the session masks of the ABSENT slots — the dropout shares.
 
     ``present``: (num_slots,) 1/0 (or bool) per slot — 1 for contributors
@@ -183,13 +318,34 @@ def recovery_mask(shape, present, num_slots: int, key) -> jnp.ndarray:
     protocol the surviving clients reconstruct these shares from the dropped
     clients' Shamir-shared seeds; in the simulator the server (which knows
     the session key) stands in for them.
+
+    One gated edge sweep instead of the old num_slots nested
+    ``session_mask`` calls: an edge (lo, hi) with both endpoints present or
+    both absent cancels out of the recovery term, so its gate
+    ``present[hi] - present[lo]`` is zero and only mixed edges contribute —
+    every edge stream is generated exactly once.  Edge chunks are bounded
+    to ~16 MiB of stream; peak memory is O(num_slots * D) and trace size is
+    O(1) in the session size.
     """
-    present = jnp.asarray(present)
-    total = jnp.zeros(shape, jnp.int32)
-    for s in range(num_slots):
-        gate = 1 - present[s].astype(jnp.int32)
-        total = total + gate * session_mask(shape, s, num_slots, key)
-    return total
+    present = jnp.asarray(present).astype(jnp.int32).reshape(-1)
+    D = _size(shape)
+    k0, k1 = prf.key_words(key)
+    lo, hi = session_pairs(num_slots, degree)
+    if int(lo.shape[0]) == 0:
+        return jnp.zeros(shape, jnp.int32)
+
+    def body(acc, xs):
+        clo, chi, cw = xs
+        # 0 unless exactly one endpoint absent (and 0 on padded edges)
+        gate = (present[chi] - present[clo]) * cw
+        pk0, pk1 = prf.pair_keys(k0, k1, clo.astype(prf.U32),
+                                 chi.astype(prf.U32))
+        m = prf.stream_block(pk0, pk1, D)  # (chunk, D)
+        return acc + jnp.sum(gate[:, None] * m, axis=0, dtype=jnp.int32), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((D,), jnp.int32),
+                            _edge_chunks(lo, hi, D))
+    return total.reshape(shape)
 
 
 def secure_aggregate(updates: Sequence[jnp.ndarray], bits: int,

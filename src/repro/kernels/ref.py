@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import prf
+
 
 # --- dp_clip ---------------------------------------------------------------
 def sq_norms(deltas: jnp.ndarray) -> jnp.ndarray:
@@ -61,6 +63,75 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
     if masks is not None:
         q = q + masks  # int32 add wraps mod 2^32
     return q.sum(0)  # int32 add wraps mod 2^32
+
+
+# --- in-kernel PRF mask lanes -------------------------------------------------
+# Oracles for the counter-based pairwise-PRF paths.  Deliberately assembled
+# the "slow, obvious" way — a Python loop over the other slots, one
+# ``prf.stream_at`` word lookup per pair at explicit element positions — so
+# the kernels' tiled/offset generation AND the batched host generation in
+# core/fl/secure_agg.py are both checked against the same spec:
+#   word(session_key, lo, hi, e) = threefry(pair_key(lo, hi), (e>>1, tag))[e&1]
+
+def mask_graph_neighbors(slot: int, num_slots: int, degree: int = 0):
+    """The slots ``slot`` shares a pairwise mask with (static Python form).
+
+    degree 0 = complete graph; even k = ring ((slot +- j) % num_slots,
+    j = 1..k/2) — the SecAgg+-style sparse session graph.
+    """
+    if degree <= 0 or degree >= num_slots - 1:
+        return [d for d in range(num_slots) if d != slot]
+    assert degree % 2 == 0, degree
+    return [(slot + j) % num_slots for j in range(1, degree // 2 + 1)] \
+        + [(slot - j) % num_slots for j in range(1, degree // 2 + 1)]
+
+
+def prf_session_mask(D: int, slot: int, num_slots: int, mask_key_words,
+                     degree: int = 0) -> jnp.ndarray:
+    """The pairwise session mask of ``slot``, one pair stream at a time."""
+    k0, k1 = jnp.asarray(mask_key_words, prf.U32)
+    e = jnp.arange(D)
+    total = jnp.zeros((D,), jnp.int32)
+    for d in mask_graph_neighbors(slot, num_slots, degree):
+        lo, hi = min(slot, d), max(slot, d)
+        pk0, pk1 = prf.pair_keys(k0, k1, jnp.uint32(lo), jnp.uint32(hi))
+        m = prf.stream_at(pk0, pk1, e)
+        total = total + (m if slot == lo else -m)  # wraps mod 2^32
+    return total
+
+
+def prf_uniforms(D: int, uniform_key_words) -> jnp.ndarray:
+    """Stochastic-rounding uniforms of the fused push path, per position."""
+    u0, u1 = jnp.asarray(uniform_key_words, prf.U32)
+    return prf.bits_to_uniform(
+        prf.stream_at(u0, u1, jnp.arange(D), tag=prf.TAG_UNIFORM))
+
+
+def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
+                      num_slots: int, mask_key_words, uniform_key_words,
+                      degree: int = 0) -> jnp.ndarray:
+    """Oracle for the fused masked-push kernel: q(x * scale) + mask[slot]."""
+    (D,) = x.shape
+    xf = x.astype(jnp.float32) * scale
+    floor = jnp.floor(xf)
+    bit = (prf_uniforms(D, uniform_key_words) < (xf - floor)).astype(
+        jnp.float32)
+    q = (floor + bit).astype(jnp.int32)
+    return q + prf_session_mask(D, slot, num_slots, mask_key_words, degree)
+
+
+def weighted_quantize_accum_prf(x: jnp.ndarray, weights: jnp.ndarray,
+                                uniforms: jnp.ndarray, scale: float,
+                                mask_key_words, num_slots: int = None,
+                                degree: int = 0) -> jnp.ndarray:
+    """Oracle for the in-kernel PRF mask lane of the fused accumulation."""
+    C, D = x.shape
+    if num_slots is None:
+        num_slots = C
+    masks = jnp.stack([
+        prf_session_mask(D, s, num_slots, mask_key_words, degree)
+        if s < num_slots else jnp.zeros((D,), jnp.int32) for s in range(C)])
+    return weighted_quantize_accum(x, weights, uniforms, scale, masks=masks)
 
 
 # --- bitagg -------------------------------------------------------------------

@@ -1,18 +1,45 @@
-"""Pallas TPU kernel: secure-aggregation fixed-point encode (+ mask).
+"""Pallas TPU kernels: secure-aggregation fixed-point encode (+ PRF masks).
 
-Elementwise hot loop of the TEE protocol: clip to range, scale, stochastic
-round (uniforms precomputed by the host PRNG — keeps the kernel deterministic
-and oracle-testable), cast to int32 and add the pairwise mask with wraparound.
-Blocked at 8x512 f32 tiles (VMEM-aligned); purely VPU work, so the roofline
-is HBM-bandwidth — one read of (x, mask, uniforms), one int32 write.
+Elementwise hot loop of the TEE protocol: clip/weight, stochastic round,
+cast to int32, add pairwise masks with wraparound, accumulate.  Blocked at
+8x512 f32 tiles (VMEM-aligned); purely VPU work, so the roofline is
+HBM-bandwidth — one read of the inputs, one int32 write.
+
+Pairwise session masks are generated *inside* the kernels with the
+counter-based PRF from ``repro.kernels.prf`` (Threefry-2x32 keyed by
+``(session_key, lo_slot, hi_slot)``, indexed by flat element position): each
+tile computes its own mask words from its grid offset while the data tile is
+resident in VMEM.  Masks therefore never exist in HBM — the mask lane costs
+zero extra HBM bandwidth and rides the same memory-bound pipeline as the
+encode.  ``repro.kernels.ref`` holds the bit-exact host oracles, and
+``repro.core.fl.secure_agg.session_mask`` is the protocol-layer reference
+the oracles are tested against.
+
+All wrappers pad ragged shapes up to tile multiples and slice the result
+back, so real transformer parameter counts (D % block != 0) work; padded
+rows are weight-gated and padded slots are excluded from the in-kernel mask
+lane (``num_slots`` counts only real session positions).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import prf
+
 DEFAULT_BLOCK = 4096
+
+
+def _pad1(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    p = (-x.shape[-1]) % mult
+    return x if p == 0 else jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p)])
+
+
+def _iota_u32(n: int) -> jnp.ndarray:
+    return jax.lax.broadcasted_iota(prf.U32, (n,), 0)
 
 
 def _quantize_mask_kernel(x_ref, mask_ref, u_ref, out_ref, *, scale: float,
@@ -28,21 +55,118 @@ def _quantize_mask_kernel(x_ref, mask_ref, u_ref, out_ref, *, scale: float,
 def quantize_mask(x: jnp.ndarray, mask: jnp.ndarray, uniforms: jnp.ndarray,
                   scale: float, value_range: float, *,
                   block: int = DEFAULT_BLOCK, interpret: bool = False) -> jnp.ndarray:
-    """x, uniforms: (D,) f32; mask: (D,) int32 -> masked fixed-point int32."""
+    """x, uniforms: (D,) f32; mask: (D,) int32 -> masked fixed-point int32.
+
+    Any D works: ragged tails are zero-padded to the block size and sliced
+    off the output.
+    """
     (D,) = x.shape
     block = min(block, D)
-    assert D % block == 0
-    import functools
+    x, mask, uniforms = _pad1(x, block), _pad1(mask, block), _pad1(uniforms, block)
     kern = functools.partial(_quantize_mask_kernel, scale=scale,
                              value_range=value_range)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(D // block,),
+        grid=(x.shape[0] // block,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
         interpret=interpret,
     )(x, mask, uniforms)
+    return out[:D]
+
+
+# ---------------------------------------------------------------------------
+# Fused client push: encode + in-kernel PRF mask (+ in-kernel uniforms)
+# ---------------------------------------------------------------------------
+def _neighbor_list(num_slots: int, degree: int):
+    """Static neighbour enumeration for the in-kernel mask lanes.
+
+    Returns a list of callables mapping a (traced) slot to a neighbour slot
+    id — unrolled in the kernel body.  degree 0 = complete graph (gated
+    diagonal); even k = ring graph ((slot +- j) % num_slots).
+    """
+    # same canonicalization rule as core/fl/secure_agg.effective_degree
+    # (kept independent — kernels must not import the protocol layer)
+    if degree <= 0 or degree >= num_slots - 1:
+        return [lambda slot, d=d: jnp.full_like(slot, d)
+                for d in range(num_slots)]
+    if degree % 2 != 0:
+        raise ValueError(f"ring mask-graph degree must be even, got {degree}")
+    offs = [j for j in range(1, degree // 2 + 1)] \
+        + [-j for j in range(1, degree // 2 + 1)]
+    return [lambda slot, o=o: (slot + o + num_slots) % num_slots
+            for o in offs]
+
+
+def _session_mask_tile(k0, k1, slot, e, num_slots: int,
+                       degree: int = 0) -> jnp.ndarray:
+    """In-kernel pairwise mask words for ``slot`` at element positions ``e``.
+
+    Statically unrolled over the slot's mask-graph neighbours; each pair's
+    stream words are regenerated from (session key, pair, position) — pure
+    VPU work on whatever tile shape ``e`` has, nothing read from memory.
+    """
+    mask = jnp.int32(0)  # broadcasts against any (slot, e) tile shape
+    for nb in _neighbor_list(num_slots, degree):
+        d = nb(slot)
+        lo = jnp.minimum(slot, d).astype(prf.U32)
+        hi = jnp.maximum(slot, d).astype(prf.U32)
+        pk0, pk1 = prf.pair_keys(k0, k1, lo, hi)
+        sign = jnp.where(d == slot, 0, jnp.where(slot < d, 1, -1))
+        mask = mask + sign * prf.stream_at(pk0, pk1, e)  # wraps mod 2^32
+    return mask + jnp.zeros(e.shape, jnp.int32)
+
+
+def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
+                              num_slots: int, degree: int, block: int):
+    # meta: (5,) uint32 = mask key words, uniform key words, slot id
+    k0, k1 = meta_ref[0], meta_ref[1]
+    u0, u1 = meta_ref[2], meta_ref[3]
+    slot = meta_ref[4].astype(jnp.int32)
+    e = (pl.program_id(0) * block).astype(prf.U32) + _iota_u32(block)
+
+    xf = x_ref[...].astype(jnp.float32) * scale
+    floor = jnp.floor(xf)
+    u = prf.bits_to_uniform(prf.stream_at(u0, u1, e, tag=prf.TAG_UNIFORM))
+    bit = (u < (xf - floor)).astype(jnp.float32)
+    q = (floor + bit).astype(jnp.int32)
+    out_ref[...] = q + _session_mask_tile(k0, k1, slot, e, num_slots, degree)
+
+
+def quantize_mask_prf(x: jnp.ndarray, scale: float, slot, num_slots: int,
+                      mask_key_words, uniform_key_words, *,
+                      degree: int = 0, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False) -> jnp.ndarray:
+    """The fused masked-push hot loop: out = q(x * scale) + mask[slot].
+
+    x: (D,) f32 already clipped/weighted/noised (the client pipeline's
+    pre-encode value); ``mask_key_words`` / ``uniform_key_words``: (2,)
+    uint32 PRF keys (see ``prf.key_words``); ``slot``: traced session
+    position; ``degree``: mask-graph degree (0 = complete).  Stochastic-
+    rounding uniforms AND the slot's pairwise session mask are generated
+    in-kernel from counters — neither ever exists in HBM.  Bit-identical to
+    the host oracle ``ref.quantize_mask_prf``.
+    """
+    (D,) = x.shape
+    block = min(block, D)
+    xp = _pad1(x.astype(jnp.float32), block)
+    meta = jnp.concatenate([
+        jnp.asarray(mask_key_words, prf.U32).reshape(2),
+        jnp.asarray(uniform_key_words, prf.U32).reshape(2),
+        jnp.asarray(slot, prf.U32).reshape(1)])
+    kern = functools.partial(_quantize_mask_prf_kernel, scale=scale,
+                             num_slots=num_slots, degree=degree, block=block)
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((5,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(xp, meta)
+    return out[:D]
 
 
 DEFAULT_BLOCK_D = 512
@@ -68,12 +192,7 @@ def _weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, out_ref, *,
 
 def _masked_weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, m_ref,
                                            out_ref, *, scale: float):
-    """The mask-add lane: pairwise session masks ride the same fused pass.
-
-    Per-client encoded ints exist only as VMEM tiles with their mask already
-    added — the unmasked encodings never materialize in HBM, which is the
-    in-TEE secure-aggregation property the fusion models.
-    """
+    """The explicit-mask lane: precomputed masks ride the same fused pass."""
     i = pl.program_id(1)
 
     @pl.when(i == 0)
@@ -89,9 +208,47 @@ def _masked_weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, m_ref,
     out_ref[...] += jnp.sum(q, axis=0)  # masks cancel over the full session
 
 
+def _prf_masked_weighted_quantize_accum_kernel(
+        x_ref, w_ref, u_ref, meta_ref, out_ref, *, scale: float,
+        num_slots: int, degree: int, block_c: int, block_d: int):
+    """The in-kernel PRF mask lane: pairwise session masks are generated
+    from counters while each (client, d) tile sits in VMEM — per-client
+    encoded ints exist only as VMEM tiles with their mask already added.
+    Nothing mask-shaped is ever read from or written to HBM, which is the
+    in-TEE secure-aggregation property the fusion models.
+    """
+    j = pl.program_id(0)  # d-block index
+    i = pl.program_id(1)  # client-block index (innermost: accumulation)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    k0, k1 = meta_ref[0], meta_ref[1]
+    x = x_ref[...].astype(jnp.float32)  # (block_c, block_d)
+    w = w_ref[...].astype(jnp.float32)  # (block_c,)
+    xf = x * w[:, None] * scale
+    floor = jnp.floor(xf)
+    bit = (u_ref[...] < (xf - floor)).astype(jnp.float32)
+    q = (floor + bit).astype(jnp.int32)
+
+    rows = (i * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (block_c, 1), 0))  # session slots of this client block
+    e = (j * block_d + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_d), 1)).astype(prf.U32)
+    mask = _session_mask_tile(k0, k1, rows, e, num_slots, degree)
+    # padded client rows (slot >= num_slots) are not session members: their
+    # masks would not cancel, so the lane gates them to zero (their weight
+    # is already zero, so q is zero too)
+    mask = jnp.where(rows < num_slots, mask, 0)
+    out_ref[...] += jnp.sum(q + mask, axis=0)  # int32 add wraps mod 2^32
+
+
 def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                             uniforms: jnp.ndarray, scale: float, *,
                             masks: jnp.ndarray = None,
+                            mask_key_words=None, num_slots: int = None,
+                            mask_degree: int = 0,
                             block_c: int = DEFAULT_BLOCK_C,
                             block_d: int = DEFAULT_BLOCK_D,
                             interpret: bool = False) -> jnp.ndarray:
@@ -99,35 +256,65 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
 
     x, uniforms: (C, D) f32; weights: (C,) f32 -> (D,) int32 wraparound sum.
     Each contribution is weighted, stochastic-round fixed-point encoded,
-    optionally pairwise-masked (``masks``: (C, D) int32) and accumulated in
-    one pass — the encoded per-client ints never touch HBM.  Over a full
-    session the masks sum to zero mod 2^32, so the masked output is
-    bit-identical to the unmasked one.
+    optionally pairwise-masked and accumulated in one pass — the encoded
+    per-client ints never touch HBM.  Over a full session the masks sum to
+    zero mod 2^32, so the masked output is bit-identical to the unmasked one.
+
+    Mask lanes (mutually exclusive):
+      masks          — precomputed (C, D) int32 masks read from HBM (the
+                       PR 2 path, kept for the explicit-mask oracle tests);
+      mask_key_words — (2,) uint32 session PRF key: masks are generated
+                       IN-KERNEL per tile (no HBM mask traffic at all).
+                       ``num_slots`` bounds the session (default C); slots
+                       beyond it (padding) are excluded from the lane.
+                       ``mask_degree`` selects the mask graph (0=complete).
+
+    Ragged C or D are padded up to tile multiples (padded rows carry zero
+    weight) and the output is sliced back to (D,).
     """
+    if masks is not None and mask_key_words is not None:
+        raise ValueError("pass either precomputed `masks` or PRF "
+                         "`mask_key_words`, not both")
     C, D = x.shape
+    if num_slots is None:
+        num_slots = C
     block_c = min(block_c, C)
     block_d = min(block_d, D)
-    assert C % block_c == 0 and D % block_d == 0, (C, D, block_c, block_d)
-    import functools
-    grid = (D // block_d, C // block_c)  # clients innermost for accumulation
+    pc, pd = (-C) % block_c, (-D) % block_d
+    x = jnp.pad(x.astype(jnp.float32), ((0, pc), (0, pd)))
+    uniforms = jnp.pad(uniforms, ((0, pc), (0, pd)))
+    weights = jnp.pad(weights, (0, pc))
+    Cp, Dp = x.shape
+
+    grid = (Dp // block_d, Cp // block_c)  # clients innermost for accumulation
     cd_spec = pl.BlockSpec((block_c, block_d), lambda j, i: (i, j))
     c_spec = pl.BlockSpec((block_c,), lambda j, i: (i,))
-    if masks is None:
-        kern = functools.partial(_weighted_quantize_accum_kernel, scale=scale)
-        in_specs, args = [cd_spec, c_spec, cd_spec], (x, weights, uniforms)
-    else:
+    if mask_key_words is not None:
+        kern = functools.partial(
+            _prf_masked_weighted_quantize_accum_kernel, scale=scale,
+            num_slots=num_slots, degree=mask_degree, block_c=block_c,
+            block_d=block_d)
+        meta = jnp.asarray(mask_key_words, prf.U32).reshape(2)
+        in_specs = [cd_spec, c_spec, cd_spec,
+                    pl.BlockSpec((2,), lambda j, i: (0,))]
+        args = (x, weights, uniforms, meta)
+    elif masks is not None:
         kern = functools.partial(_masked_weighted_quantize_accum_kernel,
                                  scale=scale)
         in_specs = [cd_spec, c_spec, cd_spec, cd_spec]
-        args = (x, weights, uniforms, masks)
-    return pl.pallas_call(
+        args = (x, weights, uniforms, jnp.pad(masks, ((0, pc), (0, pd))))
+    else:
+        kern = functools.partial(_weighted_quantize_accum_kernel, scale=scale)
+        in_specs, args = [cd_spec, c_spec, cd_spec], (x, weights, uniforms)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_d,), lambda j, i: (j,)),
-        out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.int32),
         interpret=interpret,
     )(*args)
+    return out[:D]
 
 
 def _dequantize_kernel(q_ref, out_ref, *, inv_scale: float):
@@ -138,14 +325,14 @@ def dequantize(q: jnp.ndarray, scale: float, *, block: int = DEFAULT_BLOCK,
                interpret: bool = False) -> jnp.ndarray:
     (D,) = q.shape
     block = min(block, D)
-    assert D % block == 0
-    import functools
+    qp = _pad1(q, block)
     kern = functools.partial(_dequantize_kernel, inv_scale=1.0 / scale)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(D // block,),
+        grid=(qp.shape[0] // block,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0],), jnp.float32),
         interpret=interpret,
-    )(q)
+    )(qp)
+    return out[:D]

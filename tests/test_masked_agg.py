@@ -62,12 +62,13 @@ def _max_diff(a, b):
 
 
 # --- async parity: masked buffer vs PR 1's unmasked path ---------------------
-@pytest.mark.parametrize("mask_mode", ["tee", "client"])
+@pytest.mark.parametrize("mask_mode", ["tee", "tee_stream", "client"])
 def test_masked_async_matches_unmasked_at_staleness_zero(setup, mask_mode):
     """The issue's acceptance bar: the masked async buffer path agrees with
     the unmasked engine at staleness 0 — bit-exact for the in-TEE fused mask
     lane (masks cancel inside the accumulator), and to stochastic-rounding
-    tolerance for client-side masking (independent rounding draws)."""
+    tolerance for the streaming-TEE and client-side encode paths
+    (independent rounding draws)."""
     model, params, batch = setup
     rng = jax.random.PRNGKey(3)
     srv_off = _push_clients(
@@ -89,19 +90,24 @@ def test_masked_async_matches_unmasked_at_staleness_zero(setup, mask_mode):
 
 
 @pytest.mark.parametrize("drop", [1, 3, 7])
-def test_masked_partial_flush_recovers_survivor_aggregate(setup, drop):
+@pytest.mark.parametrize("mask_mode,degree", [("client", 0), ("client", 4),
+                                              ("tee_stream", 0)])
+def test_masked_partial_flush_recovers_survivor_aggregate(setup, drop,
+                                                          mask_mode, degree):
     """Drop `drop` of 8 session contributors: the flush re-adds their mask
-    shares inside the jitted step and the result equals the unmasked engine
-    on the survivors alone."""
+    shares inside the jitted step (for the complete AND the ring mask
+    graph) and the result equals the unmasked engine on the survivors."""
+    import dataclasses as _dc
     model, params, batch = setup
+    fl = _dc.replace(FL, secure_agg_degree=degree)
     rng = jax.random.PRNGKey(5)
     n = 8 - drop
     srv_off = _push_clients(
-        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant"),
+        AsyncServer(params, fl, buffer_size=8, staleness_mode="constant"),
         model, params, batch, rng, n)
     srv_m = _push_clients(
-        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
-                    mask_mode="client"),
+        AsyncServer(params, fl, buffer_size=8, staleness_mode="constant",
+                    mask_mode=mask_mode),
         model, params, batch, rng, n)
     frng = jax.random.fold_in(rng, 999)
     srv_off.flush(rng=frng)
@@ -168,11 +174,42 @@ def test_mask_modes_require_secure_agg_field(setup):
     with pytest.raises(ValueError):
         AsyncServer(params, fl_off, buffer_size=4, mask_mode="client")
     with pytest.raises(ValueError):
+        AsyncServer(params, fl_off, buffer_size=4, mask_mode="tee_stream")
+    with pytest.raises(ValueError):
         build_async_buffer_step(params, fl_off, buffer_size=4, mask_mode="tee")
     with pytest.raises(ValueError):
         build_masked_async_buffer_step(params, fl_off, buffer_size=4)
     with pytest.raises(ValueError):
         AsyncServer(params, FL, buffer_size=4, mask_mode="bogus")
+
+
+def test_client_server_push_split_and_stale_push_rejected(setup):
+    """The protocol split: clients of one session encode concurrently for
+    their assigned slots (encode_push is pure w.r.t. server state), the
+    server stores rows via push_encoded — and a ClientPush whose session
+    moved on is rejected, because its pairwise mask no longer matches."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(31)
+    srv = AsyncServer(params, FL, buffer_size=4, staleness_mode="constant",
+                      mask_mode="client")
+    client_update = jax.jit(build_client_update(model.loss_fn, FL))
+    base, ver = srv.pull()
+    # all four clients encode BEFORE any push lands (concurrent session)
+    pushes = []
+    for c in range(4):
+        cbatch = jax.tree.map(lambda v: v[c], batch)
+        delta, _ = client_update(base, cbatch, jax.random.fold_in(rng, c))
+        pushes.append(srv.encode_push(delta, ver, slot=c))
+    assert srv._fill == 0  # encoding mutated nothing server-side
+    stale = pushes[0]
+    for cp in (pushes[2], pushes[0], pushes[3]):  # arrivals are unordered
+        srv.push_encoded(cp, rng=jax.random.fold_in(rng, 99))
+    with pytest.raises(ValueError):  # duplicate slot delivery
+        srv.push_encoded(pushes[0])
+    srv.push_encoded(pushes[1], rng=jax.random.fold_in(rng, 99))
+    assert srv.version == 1  # session applied
+    with pytest.raises(ValueError):  # session no longer open
+        srv.push_encoded(stale)
 
 
 # --- sync rounds: in-path masks cancel bit-exactly ---------------------------

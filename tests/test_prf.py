@@ -1,0 +1,255 @@
+"""The counter-based pairwise-PRF mask pipeline: bit-exact parity everywhere.
+
+The contract under test (the tentpole of the fused mask work):
+
+  * the PRF core is real Threefry (20 rounds == JAX's own threefry_2x32);
+  * the stream layout (half-counters + lane parity + tags) is identical
+    between random-access (``stream_at``, used in kernels), block
+    generation (``stream_block``, used on the host), and the ref oracles;
+  * the in-kernel mask lanes (quantize_mask_prf, weighted_quantize_accum's
+    PRF lane) are bit-identical to ``secure_agg.session_mask`` / the ref.py
+    oracles across tiles, slots, graph degrees, and ragged (padded) shapes;
+  * no (B, D) mask array is ever an input to the fused kernels — masks are
+    regenerated per tile from the (2,)-word session key.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fl import secure_agg as sa
+from repro.kernels import prf, ref
+from repro.kernels import secure_agg as ksa
+
+
+def _kw(seed):
+    return jnp.stack(prf.key_words(jax.random.PRNGKey(seed)))
+
+
+# --- the PRF core ------------------------------------------------------------
+def test_threefry_20_rounds_matches_jax():
+    """Full-strength schedule == JAX's internal threefry_2x32 (independent
+    implementation of the same cipher — a true known-answer check)."""
+    from jax._src.prng import threefry_2x32
+    key = jnp.array([0xDEADBEEF, 0x12345678], jnp.uint32)
+    cnt = jnp.arange(256, dtype=jnp.uint32)
+    want = threefry_2x32(key, cnt)
+    x0, x1 = jnp.split(cnt, 2)
+    y0, y1 = prf.threefry2x32(key[0], key[1], x0, x1, rounds=20)
+    assert bool(jnp.all(jnp.concatenate([y0, y1]) == want))
+
+
+def test_stream_at_matches_stream_block():
+    """Random-access (kernel) and block (host) generation agree bit-for-bit
+    at every position, for both tags, odd lengths, and non-default round
+    counts (regression: stream_block once dropped its rounds argument)."""
+    k0, k1 = prf.pair_keys(*prf.key_words(jax.random.PRNGKey(3)),
+                           jnp.uint32(2), jnp.uint32(5))
+    for L in (1, 2, 33, 256, 1001):
+        for tag in (prf.TAG_MASK, prf.TAG_UNIFORM):
+            for rounds in (prf.DEFAULT_ROUNDS, 20):
+                a = prf.stream_at(k0, k1, jnp.arange(L), tag=tag,
+                                  rounds=rounds)
+                b = prf.stream_block(k0, k1, L, tag=tag, rounds=rounds)
+                assert bool(jnp.all(a == b)), (L, tag, rounds)
+    a13 = prf.stream_block(k0, k1, 64)
+    a20 = prf.stream_block(k0, k1, 64, rounds=20)
+    assert not bool(jnp.all(a13 == a20))  # rounds actually takes effect
+
+
+def test_stream_tags_are_independent_families():
+    k0, k1 = prf.pair_keys(*prf.key_words(jax.random.PRNGKey(4)),
+                           jnp.uint32(0), jnp.uint32(1))
+    m = prf.stream_block(k0, k1, 4096, tag=prf.TAG_MASK)
+    u = prf.stream_block(k0, k1, 4096, tag=prf.TAG_UNIFORM)
+    assert float(jnp.mean((m == u).astype(jnp.float32))) < 0.01
+
+
+def test_uniform_block_range_and_mean():
+    u = prf.uniform_block(jnp.uint32(7), jnp.uint32(9), 50_000)
+    assert float(u.min()) >= 0.0 and float(u.max()) < 1.0
+    assert float(u.mean()) == pytest.approx(0.5, abs=0.01)
+
+
+def test_stream_words_look_uniform():
+    """Full-range int32 words: mean ~0, both signs, no stuck bits."""
+    k0, k1 = prf.pair_keys(*prf.key_words(jax.random.PRNGKey(5)),
+                           jnp.uint32(1), jnp.uint32(3))
+    w = prf.stream_block(k0, k1, 100_000)
+    bits = jnp.unpackbits(
+        jnp.asarray(np.asarray(w).view(np.uint8))).astype(jnp.float32)
+    assert float(bits.mean()) == pytest.approx(0.5, abs=0.01)
+    assert abs(float(np.asarray(w, np.float64).mean())) < 2 ** 31 * 0.02
+
+
+# --- session masks vs the oracles -------------------------------------------
+@pytest.mark.parametrize("B,degree", [(8, 0), (8, 4), (8, 2), (6, 4),
+                                      (9, 0), (12, 6)])
+def test_session_mask_matches_ref_oracle_all_slots(B, degree):
+    D, key = 999, jax.random.PRNGKey(11)
+    kw = jnp.stack(prf.key_words(key))
+    for s in range(B):
+        got = sa.session_mask((D,), s, B, key, degree)
+        want = ref.prf_session_mask(D, s, B, kw, degree)
+        assert bool(jnp.all(got == want)), (B, degree, s)
+
+
+@pytest.mark.parametrize("B,degree", [(8, 0), (8, 4), (16, 0), (33, 0),
+                                      (40, 4)])
+def test_session_masks_batched_equals_rows_and_cancels(B, degree):
+    """Both generation strategies (row-stack / dedup edge sweep) equal the
+    per-slot oracle and cancel to zero over the session."""
+    D, key = 257, jax.random.PRNGKey(12)
+    Mb = sa.session_masks((D,), B, key, degree)
+    for s in (0, B // 2, B - 1):
+        assert bool(jnp.all(Mb[s] == sa.session_mask((D,), s, B, key,
+                                                     degree)))
+    assert bool(jnp.all(Mb.sum(0) == 0))
+
+
+@pytest.mark.parametrize("degree", [0, 4])
+def test_recovery_mask_equals_absent_mask_sum(degree):
+    B, D, key = 8, 321, jax.random.PRNGKey(13)
+    Ms = sa.session_masks((D,), B, key, degree)
+    for absent in ([], [0], [1, 5], [0, 1, 2, 6, 7], list(range(B))):
+        present = jnp.asarray([0.0 if s in absent else 1.0
+                               for s in range(B)])
+        got = sa.recovery_mask((D,), present, B, key, degree)
+        want = sum((Ms[s] for s in absent), jnp.zeros((D,), jnp.int32))
+        assert bool(jnp.all(got == want)), (degree, absent)
+
+
+def test_ring_degree_validation():
+    with pytest.raises(ValueError):
+        sa.effective_degree(8, 3)  # odd ring degree
+    assert sa.effective_degree(8, 0) == 0
+    assert sa.effective_degree(8, 7) == 0  # dense -> complete
+    assert sa.effective_degree(8, 10) == 0  # over-dense -> complete
+    assert sa.effective_degree(8, 4) == 4
+
+
+def test_pairwise_mask_batched_trace_is_constant_size():
+    """The vectorized host path: trace size does not grow with the peer
+    count (the old per-peer fold-in loop emitted O(B) PRF ops)."""
+    def n_eqns(n_peers):
+        fn = lambda: sa.pairwise_mask((17,), 0, list(range(n_peers)), 7)
+        return len(jax.make_jaxpr(fn)().eqns)
+    assert n_eqns(64) == n_eqns(4)
+    # and it still cancels at B=64
+    total = sum(sa.pairwise_mask((17,), c, list(range(64)), 7)
+                for c in range(64))
+    assert bool(jnp.all(jnp.asarray(total) == 0))
+
+
+# --- the fused kernels (interpret mode) vs the oracles -----------------------
+@pytest.mark.parametrize("D,block", [(2048, 512), (1234, 512), (777, 4096),
+                                     (512, 512)])
+@pytest.mark.parametrize("degree", [0, 4])
+def test_quantize_mask_prf_kernel_bit_exact(D, block, degree):
+    """The fused masked-push kernel == ref oracle across tiles, slots,
+    ragged shapes — in-kernel uniforms and masks included."""
+    B = 8
+    key = jax.random.PRNGKey(D + degree)
+    x = jax.random.normal(key, (D,)) * 2.0
+    mkw, ukw = _kw(1), _kw(2)
+    for slot in (0, 3, B - 1):
+        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
+                                    degree=degree, block=block,
+                                    interpret=True)
+        want = ref.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
+                                     degree)
+        assert got.dtype == jnp.int32
+        assert bool(jnp.all(got == want)), (D, block, degree, slot)
+
+
+@pytest.mark.parametrize("C,D", [(8, 1024), (5, 999), (16, 512), (8, 2048)])
+@pytest.mark.parametrize("degree", [0, 4])
+def test_weighted_quantize_accum_prf_lane_bit_exact(C, D, degree):
+    """The in-kernel PRF mask lane == ref oracle, including ragged C/D
+    (padded client rows are excluded from the session graph)."""
+    key = jax.random.PRNGKey(C * D + degree)
+    x = jax.random.normal(key, (C, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (C, D))
+    mkw = _kw(3)
+    got = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
+                                      mask_key_words=mkw, mask_degree=degree,
+                                      interpret=True)
+    want = ref.weighted_quantize_accum_prf(x, w, u, float(1 << 20), mkw,
+                                           degree=degree)
+    assert bool(jnp.all(got == want))
+    # full session: the in-kernel masks cancel bit-exactly
+    plain = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
+                                        interpret=True)
+    assert bool(jnp.all(got == plain))
+
+
+def test_kernel_mask_lane_matches_session_mask_oracle_tilewise():
+    """Tile-offset bookkeeping: the kernel's per-tile mask generation at
+    every block size equals the single host ``session_mask`` stream."""
+    B, D, key = 8, 4096, jax.random.PRNGKey(21)
+    mkw, ukw = jnp.stack(prf.key_words(key)), _kw(9)
+    want_mask = sa.session_mask((D,), 3, B, key)
+    zero = jnp.zeros((D,), jnp.float32)  # q(0) == 0 -> output IS the mask
+    for block in (512, 1024, 4096):
+        got = ksa.quantize_mask_prf(zero, 1.0, 3, B, mkw, ukw, block=block,
+                                    interpret=True)
+        assert bool(jnp.all(got == want_mask)), block
+
+
+@pytest.mark.parametrize("D", [4096, 1023])
+def test_padded_wrappers_match_unpadded_semantics(D):
+    """D % block != 0 pad-and-slice: quantize_mask and dequantize give the
+    same answers as the pure-jnp refs on the un-padded arrays."""
+    key = jax.random.PRNGKey(D)
+    x = jax.random.normal(key, (D,))
+    mask = jax.random.randint(jax.random.fold_in(key, 1), (D,),
+                              -2 ** 31, 2 ** 31 - 1, jnp.int32)
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (D,))
+    got = ksa.quantize_mask(x, mask, u, 1000.0, 4.0, interpret=True)
+    want = ref.quantize_mask(x, mask, 1000.0, u, value_range=4.0)
+    assert bool(jnp.all(got == want))
+    back = ksa.dequantize(got - mask, 1000.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(back),
+                               np.asarray(jnp.clip(x, -4.0, 4.0)),
+                               atol=1.5 / 1000.0)
+
+
+def test_fused_kernels_take_no_mask_arrays():
+    """The no-HBM-mask property, enforced at the API level: the PRF lanes
+    consume a (2,)-word key — never a (B, D) mask operand — and reject
+    being given both."""
+    import inspect
+    sig = inspect.signature(ksa.quantize_mask_prf)
+    assert "mask" not in sig.parameters  # only key words
+    x = jnp.zeros((8, 512), jnp.float32)
+    u = jnp.zeros((8, 512), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    with pytest.raises(ValueError):
+        ksa.weighted_quantize_accum(
+            x, w, u, 1.0, masks=jnp.zeros((8, 512), jnp.int32),
+            mask_key_words=_kw(0), interpret=True)
+
+
+# --- the host encode pipeline is the kernel pipeline -------------------------
+def test_encode_masked_contribution_host_equals_kernel():
+    """aggregation.encode_masked_contribution: the jnp fallback and the
+    Pallas (interpret) route produce the SAME masked int32 row — the host
+    path is the kernel's oracle, so either can serve any deployment."""
+    from repro.core.fl import aggregation as agg
+    from repro.configs.base import FLConfig
+    D = 1500
+    for degree in (0, 4):
+        fl = FLConfig(clip_norm=1.0, secure_agg_bits=32,
+                      secure_agg_degree=degree)
+        spec = agg.make_spec(fl, 8)
+        assert spec.mask_degree == degree
+        x = jax.random.normal(jax.random.PRNGKey(degree), (D,))
+        skey = jax.random.PRNGKey(77)
+        rng = jax.random.PRNGKey(88)
+        host = agg.encode_masked_contribution(x, 0.7, 3, spec, skey, rng,
+                                              use_pallas=False)
+        kern = agg.encode_masked_contribution(x, 0.7, 3, spec, skey, rng,
+                                              use_pallas=True)
+        assert bool(jnp.all(host[0] == kern[0])), degree
+        assert float(host[1]) == float(kern[1])
