@@ -99,10 +99,11 @@ def _one_masked_round(srv, deltas):
                 PRF-mask ``encode_push`` per session member.  In a fleet
                 these run on the devices, concurrently — a round pays only
                 the slowest one.
-      arrival — server-side work per NON-final arrival (raw-buffer write;
-                in "tee_stream" the in-enclave encode+mask of that delta).
-                Streamed into the gaps between arrivals, so off the round's
-                critical path.
+      arrival — server-side work per NON-final arrival: the streamed
+                encode of that delta ("off" streams its encode since PR 4;
+                "tee_stream" adds the in-enclave mask; "tee" is a raw
+                buffer write).  Streamed into the gaps between arrivals,
+                so off the round's critical path.
       flush   — the final arrival's handling plus the buffer apply: the
                 part no round can avoid paying at the end.  In "tee"
                 (batched) mode this includes the whole in-enclave mask

@@ -1,0 +1,214 @@
+"""Aggregation-tier scaling: leaves x buffer x dim over a device mesh.
+
+The paper scales FL by fanning clients over many aggregators whose partial
+sums combine hierarchically before the main aggregator applies the server
+step.  This sweep drives ``ShardedAsyncServer`` with a SIMULATED
+MILLION-CLIENT ARRIVAL STREAM — arrivals drawn from a configurable client
+population land in (K,)-batches via the vectorized multi-push — and
+measures, per (num_leaves, leaf_buffer, dim, mask_mode) point, the wall
+clock of one full session on the SERVER TIER's critical path:
+
+  encode_ms   — mask_mode="client" only: the batched client-side encode.
+                In a fleet this runs concurrently on the clients' own
+                devices, so it is reported but NOT charged to the tier;
+  ingest_ms   — median cost of landing one NON-final arrival batch (one
+                vmapped encode for the enclave modes + one jitted scatter
+                routing rows to leaves).  Streamed into the gaps between
+                arrivals — off the round's critical path, exactly the
+                accounting bench_async.py established;
+  flush_ms    — the final arrival batch plus the session apply: leaf
+                partial modular sums, the field-modulus psum, root
+                decode / central noise / server optimizer — the
+                aggregation work no round can avoid paying serially;
+  updates_per_s — session slots aggregated per second of flush time: the
+                tier's per-round aggregation throughput.  Work per LEAF
+                stays constant as leaves multiply the session, so this is
+                the column that must scale (``scaling_vs_base``, against
+                the smallest leaf count in the sweep — 1 by default).
+
+Configurations are interleaved round-robin (every configuration sees the
+same machine conditions, so the RATIOS are stable on a noisy host).
+
+The sweep defaults to ``--degree 4`` (a SecAgg+-style sparse session
+graph): complete-graph pairwise masking is O(B^2) PRF streams per session,
+so it cannot scale with session size by construction — Bell et al.'s
+O(log n)-degree random graphs are the production configuration the tier
+targets, and the fixed degree keeps per-slot mask cost constant as leaves
+multiply the session.
+
+Run under a real mesh, or force host devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src:. python benchmarks/bench_hierarchy.py \\
+      --leaves 1 --leaves 2 --leaves 4 --leaves 8 --dim 65536
+
+Writes results/hierarchy_scaling.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import FLConfig
+from repro.core.fl.hierarchy import ShardedAsyncServer
+
+RESULTS_CSV = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "hierarchy_scaling.csv")
+
+
+def _arrival_batches(population: int, n_batches: int, batch: int, D: int,
+                     seed: int = 0):
+    """(batch, D) arrival payloads from a ``population``-client fleet.
+
+    Client ids are drawn uniformly from the population (the million-client
+    stream) and map onto a small pool of device-resident delta payloads —
+    identity drives routing/accounting, payload content does not affect
+    timing."""
+    rs = np.random.RandomState(seed)
+    pool_n = 32
+    pool = 0.1 * jax.random.normal(jax.random.PRNGKey(seed), (pool_n, D))
+    for _ in range(n_batches):
+        ids = rs.randint(0, population, size=batch)
+        yield jnp.take(pool, jnp.asarray(ids % pool_n), axis=0)
+
+
+def _one_session(srv, payloads, mode):
+    """Drive one full session -> (encode_s, ingest_s list, flush_s)."""
+    enc = 0.0
+    if mode == "client":
+        t0 = time.perf_counter()
+        batches, s0 = [], 0
+        for p in payloads:  # concurrent clients encode for ASSIGNED slots
+            k = jax.tree.leaves(p)[0].shape[0]
+            batches.append(srv.encode_push_batch(
+                p, srv.version, slots=list(range(s0, s0 + k))))
+            s0 += k
+        jax.block_until_ready(batches[-1][-1].row)
+        enc = time.perf_counter() - t0
+        land = srv.push_encoded_batch
+    else:
+        batches = payloads
+        land = lambda p: srv.push_batch(p, srv.version)
+    ingest = []
+    for b in batches[:-1]:
+        t0 = time.perf_counter()
+        land(b)
+        jax.block_until_ready(srv._buf)
+        ingest.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    land(batches[-1])  # triggers the sharded apply
+    jax.block_until_ready(srv.params["w"])
+    return enc, ingest, time.perf_counter() - t0
+
+
+def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
+                  population: int):
+    """All (mode, leaves, leaf_buffer) points at one dim, interleaved."""
+    fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32,
+                  secure_agg_degree=degree)
+    servers, streams = [], []
+    for mode, L, Bl in configs:
+        srv = ShardedAsyncServer({"w": jnp.zeros((D,), jnp.float32)}, fl,
+                                 num_leaves=L, leaf_buffer=Bl,
+                                 mask_mode=mode, staleness_mode="constant")
+        B = L * Bl
+        assert B % batch == 0, (B, batch)
+        per_round = B // batch
+        stream = _arrival_batches(population, (rounds + 1) * per_round,
+                                  batch, D, seed=L)
+        servers.append(srv)
+        streams.append(lambda s=stream, n=per_round:
+                       [{"w": next(s)} for _ in range(n)])
+        _one_session(srv, streams[-1](), mode)  # compile round
+
+    samples = [[] for _ in configs]
+    for _ in range(rounds):  # interleaved: drift hits all configs equally
+        for i, ((mode, L, Bl), srv) in enumerate(zip(configs, servers)):
+            samples[i].append(_one_session(srv, streams[i](), mode))
+
+    out = []
+    med = lambda v: float(np.median(v)) * 1e3
+    for (mode, L, Bl), rows in zip(configs, samples):
+        B = L * Bl
+        flush_ms = med([f for _, _, f in rows])
+        out.append((mode, L, Bl, {
+            "encode_ms": med([e for e, _, _ in rows]),
+            "ingest_ms": med([float(np.median(a)) if a else 0.0
+                              for _, a, _ in rows]),
+            "flush_ms": flush_ms,
+            "updates_per_s": B / (flush_ms / 1e3),
+        }))
+    return out
+
+
+def run(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--leaves", type=int, action="append", default=None,
+                   help="leaf counts to sweep (repeatable; default 1,2,4,8 "
+                        "capped at the visible device count)")
+    p.add_argument("--leaf-buffer", type=int, default=8,
+                   help="session slots per leaf")
+    p.add_argument("--dim", type=int, action="append", default=None,
+                   help="flattened model dim(s) (default 65536)")
+    p.add_argument("--mode", action="append", default=None,
+                   help="mask modes (default client and tee_stream)")
+    p.add_argument("--degree", type=int, default=4,
+                   help="mask-graph degree (default 4: SecAgg+-style sparse "
+                        "random graph; 0 = complete, O(B^2) per session)")
+    p.add_argument("--batch", type=int, default=0,
+                   help="arrival batch size (default: one leaf buffer)")
+    p.add_argument("--rounds", type=int, default=8,
+                   help="measured sessions per configuration")
+    p.add_argument("--population", type=int, default=1_000_000,
+                   help="simulated fleet size the arrival stream draws from")
+    args = p.parse_args(argv)
+
+    n_dev = jax.device_count()
+    leaves = args.leaves or [x for x in (1, 2, 4, 8) if x <= n_dev]
+    dims = args.dim or [65_536]
+    modes = args.mode or ["client", "tee_stream"]
+    batch = args.batch or args.leaf_buffer
+    base_leaves = min(leaves)  # the scaling baseline is the SMALLEST sweep
+    rows = []                  # point (1 leaf in the default sweep)
+    for Dd in dims:
+        grid = [(mode, L, args.leaf_buffer) for mode in modes
+                for L in leaves]
+        measured = _measure_grid(grid, Dd, args.degree, args.rounds, batch,
+                                 args.population)
+        base = {mode: r["updates_per_s"]
+                for mode, L, _, r in measured if L == base_leaves}
+        for mode, L, Bl, r in measured:
+            r["scaling_vs_base"] = r["updates_per_s"] / base[mode]
+            rows.append((mode, L, Bl, Dd, batch, r))
+            emit(f"hierarchy/{mode}_L{L}_updates_per_s",
+                 r["updates_per_s"],
+                 f"D={Dd};flush={r['flush_ms']:.1f}ms;"
+                 f"x{r['scaling_vs_base']:.2f} vs {base_leaves} "
+                 f"leaf/leaves")
+
+    os.makedirs(os.path.dirname(RESULTS_CSV), exist_ok=True)
+    with open(RESULTS_CSV, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["mask_mode", "graph_degree", "num_leaves", "leaf_buffer",
+                    "session_slots", "dim", "arrival_batch", "encode_ms",
+                    "ingest_ms", "flush_ms", "updates_per_s",
+                    "base_leaves", "scaling_vs_base"])
+        for mode, L, Bl, Dd, bt, r in rows:
+            w.writerow([mode, args.degree, L, Bl, L * Bl, Dd, bt,
+                        f"{r['encode_ms']:.3f}", f"{r['ingest_ms']:.3f}",
+                        f"{r['flush_ms']:.3f}",
+                        f"{r['updates_per_s']:.1f}", base_leaves,
+                        f"{r['scaling_vs_base']:.3f}x"])
+    emit("hierarchy/results_csv", 0.0, RESULTS_CSV)
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1:])

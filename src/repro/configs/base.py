@@ -245,11 +245,17 @@ class FLConfig:
     secure_agg_masked: bool = False
     # pairwise-mask communication graph degree: 0 = complete graph (every
     # pair of session slots shares a mask stream — the Bonawitz et al.
-    # baseline); an even k >= 2 masks each slot with its k ring neighbours
+    # baseline); an even k >= 2 masks each slot with its k neighbours
     # only (SecAgg+-style sparse graph, Bell et al. 2020: O(log n) degree
     # suffices at production session sizes), cutting mask generation from
     # O(B^2) to O(B*k) streams per session.
     secure_agg_degree: int = 0
+    # sparse-graph topology: by default the k-regular neighbourhoods are
+    # RANDOM, drawn per session from the session key (Bell et al. analyze
+    # random k-regular graphs — a fixed circulant ring lets an adversary
+    # know every session's mask partners in advance).  True falls back to
+    # the deterministic circulant ring of PR 3.
+    secure_agg_circulant: bool = False
     server_opt: str = "fedavg"  # fedavg | fedadam | fedadagrad | fedavgm
     server_lr: float = 1.0
     server_beta1: float = 0.9

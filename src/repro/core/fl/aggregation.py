@@ -48,6 +48,9 @@ class AggregationSpec(NamedTuple):
     dev_noise: float  # per-contribution Gaussian std ("device" placement)
     tee_noise: float  # aggregate-mean Gaussian std ("tee" placement)
     mask_degree: int = 0  # pairwise mask graph degree (0 = complete graph)
+    # sparse-graph topology: random k-regular neighbourhoods drawn per
+    # session from the session key (Bell et al.), vs the circulant ring
+    random_graph: bool = False
 
 
 def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
@@ -63,6 +66,8 @@ def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
 
 def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
     use_sa = fl_cfg.secure_agg_bits > 0
+    degree = sa.effective_degree(
+        num_contributors, getattr(fl_cfg, "secure_agg_degree", 0))
     return AggregationSpec(
         num_contributors=num_contributors,
         clip_norm=fl_cfg.clip_norm,
@@ -72,9 +77,25 @@ def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
         if fl_cfg.noise_placement == "device" else 0.0,
         tee_noise=dp.noise_stddev(fl_cfg, num_contributors, "tee")
         if fl_cfg.noise_placement == "tee" else 0.0,
-        mask_degree=sa.effective_degree(
-            num_contributors, getattr(fl_cfg, "secure_agg_degree", 0)),
+        mask_degree=degree,
+        random_graph=(degree > 0
+                      and not getattr(fl_cfg, "secure_agg_circulant", False)),
     )
+
+
+def mask_graph_perm(spec: AggregationSpec, session_key):
+    """The session's mask-graph permutation, or None.
+
+    Random k-regular sessions (``spec.random_graph``) relabel the k-ring
+    through a ``secure_agg.session_perm`` drawn from the session key; the
+    complete graph and the circulant fallback need none.  Every consumer
+    of one session's masks (client encode, tee lanes, recovery) must use
+    the SAME permutation or cancellation breaks — deriving it from the
+    session key here is what keeps them aligned.
+    """
+    if spec.mask_degree <= 0 or not spec.random_graph or session_key is None:
+        return None
+    return sa.session_perm(spec.num_contributors, session_key)
 
 
 # ---------------------------------------------------------------------------
@@ -103,18 +124,20 @@ def decode_tree(tree, scale: float):
 # ---------------------------------------------------------------------------
 # Pairwise session masking (the in-engine secure-aggregation hot path)
 # ---------------------------------------------------------------------------
-def mask_tree(tree, slot, num_slots: int, key, degree: int = 0):
+def mask_tree(tree, slot, num_slots: int, key, degree: int = 0, perm=None):
     """Session masks shaped like ``tree`` for one contributor slot.
 
     Each leaf gets an independent pairwise mask stream (key folded by leaf
     index); summed over all ``num_slots`` slots every leaf cancels to zero
     mod 2^32, so adding these to the encoded int32 tree leaves the round's
-    modular sum bit-identical.
+    modular sum bit-identical.  ``perm`` selects the random k-regular
+    session graph (shared by all leaves — the graph is per session, the
+    streams per leaf).
     """
     leaves, treedef = jax.tree.flatten(tree)
     return jax.tree.unflatten(treedef, [
         sa.session_mask(x.shape, slot, num_slots,
-                        jax.random.fold_in(key, i), degree)
+                        jax.random.fold_in(key, i), degree, perm)
         for i, x in enumerate(leaves)])
 
 
@@ -139,38 +162,81 @@ def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSp
 
     Returns (masked int32 (D,), pre-clip norm, was_clipped in {0., 1.}).
     """
+    xw, nrm, was_clipped = _clip_weight_noise(x, weight, spec, rng)
+    perm = mask_graph_perm(spec, session_key)
+    if use_pallas:
+        from repro.kernels import secure_agg as _ksa
+        u_words = prf.key_words(jax.random.fold_in(rng, 2))
+        masked = _ksa.quantize_mask_prf(
+            xw, spec.sa_scale, slot, spec.num_contributors,
+            jnp.stack(prf.key_words(session_key)), jnp.stack(u_words),
+            degree=spec.mask_degree,
+            neighbors=sa.neighbor_table(spec.num_contributors,
+                                        spec.mask_degree, perm)
+            if perm is not None else None,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        q = _stream_quantize(xw, spec.sa_scale, rng)
+        masked = q + sa.session_mask(xw.shape, slot, spec.num_contributors,
+                                     session_key, spec.mask_degree,
+                                     perm)  # wraps mod 2^32
+    return masked, nrm, was_clipped
+
+
+def _clip_weight_noise(x: jnp.ndarray, weight, spec: AggregationSpec, rng):
+    """The shared pre-encode prologue: clip -> weight -> [device noise].
+
+    One implementation for the masked AND unmasked streaming encodes —
+    their bit-parity contracts (streamed-off vs batched, sharded vs
+    single-host) hinge on identical arithmetic and rng keying
+    (``fold_in(rng, 1)`` is the noise stream), so it must not fork.
+
+    Returns (xw (D,) f32 ready to quantize, pre-clip norm, was_clipped).
+    """
     x = x.astype(jnp.float32)
     nrm = jnp.sqrt(jnp.sum(x * x))
     clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
     weight = jnp.asarray(weight, jnp.float32)
     xw = x * (weight * clip_scale)
     if spec.dev_noise > 0.0:
-        noise = jax.random.normal(jax.random.fold_in(rng, 1), x.shape, jnp.float32)
+        noise = jax.random.normal(jax.random.fold_in(rng, 1), x.shape,
+                                  jnp.float32)
         xw = xw + noise * (spec.dev_noise * weight)
+    return xw, nrm, (clip_scale < 1.0).astype(jnp.float32)
+
+
+def _stream_quantize(xw: jnp.ndarray, sa_scale: float, rng) -> jnp.ndarray:
+    """Stochastic fixed-point encode with PRF uniforms (``fold_in(rng, 2)``
+    keys the TAG_UNIFORM stream — the same derivation as the fused Pallas
+    push kernel, so host and kernel rows stay bit-identical)."""
     (D,) = xw.shape
     u_words = prf.key_words(jax.random.fold_in(rng, 2))
-    if use_pallas:
-        from repro.kernels import secure_agg as _ksa
-        masked = _ksa.quantize_mask_prf(
-            xw, spec.sa_scale, slot, spec.num_contributors,
-            jnp.stack(prf.key_words(session_key)), jnp.stack(u_words),
-            degree=spec.mask_degree,
-            interpret=jax.default_backend() != "tpu")
-    else:
-        xf = xw * spec.sa_scale
-        floor = jnp.floor(xf)
-        bit = (prf.uniform_block(*u_words, D) < (xf - floor)).astype(
-            jnp.float32)
-        q = (floor + bit).astype(jnp.int32)
-        masked = q + sa.session_mask((D,), slot, spec.num_contributors,
-                                     session_key,
-                                     spec.mask_degree)  # wraps mod 2^32
-    return masked, nrm, (clip_scale < 1.0).astype(jnp.float32)
+    xf = xw * sa_scale
+    floor = jnp.floor(xf)
+    bit = (prf.uniform_block(*u_words, D) < (xf - floor)).astype(jnp.float32)
+    return (floor + bit).astype(jnp.int32)
+
+
+def encode_contribution(x: jnp.ndarray, weight, spec: AggregationSpec, rng):
+    """The UNMASKED streaming encode: clip -> weight -> [device noise] ->
+    stochastic fixed-point encode of one flat delta, per arrival.
+
+    The mask_mode="off" analogue of ``encode_masked_contribution`` — the
+    identical pipeline (same helpers, same rng streams) minus the mask
+    add, so the baseline async engine can stream its encode into the gaps
+    between arrivals exactly like ``tee_stream`` does and pay a near-free
+    flush (a plain modular sum).
+
+    Returns (int32 (D,), pre-clip norm, was_clipped in {0., 1.}).
+    """
+    xw, nrm, was_clipped = _clip_weight_noise(x, weight, spec, rng)
+    return _stream_quantize(xw, spec.sa_scale, rng), nrm, was_clipped
 
 
 def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
                             total_weight, spec: AggregationSpec,
-                            session_key, rng, *, recover: bool = True):
+                            session_key, rng, *, recover: bool = True,
+                            masked: bool = True):
     """The SERVER side of the in-path masked protocol: modular sum + decode.
 
     mbuf:    (B, D) int32 — per-slot MASKED fixed-point contributions (what
@@ -185,6 +251,9 @@ def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
              present-gating and the recovery sweep: all pairwise masks
              cancel in the plain modular sum, bit-identically.  Partial
              flushes must pass ``recover=True``.
+    masked:  static.  False = the buffer holds UNMASKED streamed encodings
+             (the mask_mode="off" streaming engine): partial flushes still
+             gate absent slots but there are no mask shares to recover.
 
     Returns the weight-normalized mean delta (D,) with TEE noise per
     ``finalize_aggregate``.
@@ -193,8 +262,10 @@ def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
     if recover:
         pres_i = jnp.asarray(present).astype(jnp.int32)
         acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # int32, wraps mod 2^32
-        acc = acc + sa.recovery_mask((D,), present, B, session_key,
-                                     spec.mask_degree)
+        if masked:
+            acc = acc + sa.recovery_mask((D,), present, B, session_key,
+                                         spec.mask_degree,
+                                         mask_graph_perm(spec, session_key))
     else:
         acc = jnp.sum(mbuf, axis=0)  # full session: masks cancel exactly
     # same TEE-noise stream derivation as aggregate_buffer
@@ -245,6 +316,109 @@ def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
 # ---------------------------------------------------------------------------
 # Flat batched aggregation — the buffered-async hot path
 # ---------------------------------------------------------------------------
+def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
+                        uniforms, noise, spec: AggregationSpec, *,
+                        mask_key=None, slot_offset=0,
+                        num_slots: Optional[int] = None,
+                        use_pallas: bool = False):
+    """Clip/weight/[noise]/encode[+mask] a block of rows and modular-sum it.
+
+    The per-contribution half of ``aggregate_buffer``, factored out so a
+    SHARD of a larger session can run it: the rows of ``buf`` occupy global
+    session slots ``slot_offset .. slot_offset + B - 1`` of a
+    ``num_slots``-slot mask session (defaults: one whole session).  Because
+    the int32 accumulation wraps mod 2^32, partial sums over disjoint row
+    shards combine (``psum``) to the full buffer's accumulator bit-exactly —
+    the identity the hierarchical tier is built on.
+
+    ``uniforms`` / ``noise`` are the PRE-SLICED (B, D) blocks of the
+    session-wide draws (or None), so a shard consumes exactly the rows of
+    the same arrays the single-host engine would.
+
+    Returns (acc (D,) int32|f32, pre-clip norms (B,), was_clipped (B,)).
+    """
+    if mask_key is not None and not spec.use_secure_agg:
+        raise ValueError("pairwise masks require the secure-agg integer field "
+                         "(spec.use_secure_agg)")
+    B, D = buf.shape
+    if num_slots is None:
+        num_slots = B
+    interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        from repro.kernels import dp_clip as _kclip
+        pb, pd = (-B) % 8, (-D) % 512  # pad up to kernel tile multiples
+        pbuf = jnp.pad(buf.astype(jnp.float32), ((0, pb), (0, pd)))
+        sq = _kclip.sq_norms(pbuf, interpret=interpret)[:B]
+    else:
+        sq = jnp.sum(buf.astype(jnp.float32) * buf.astype(jnp.float32), axis=1)
+    nrm = jnp.sqrt(sq)
+    clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
+    was_clipped = (clip_scale < 1.0).astype(jnp.float32)
+
+    # weighted, clipped contributions; "device" noise rides the same weights
+    row_w = weights * clip_scale  # (B,)
+
+    if spec.use_secure_agg:
+        if noise is None:
+            qx, qw = buf.astype(jnp.float32), row_w
+        else:  # noise folded in pre-quantization; weights already applied
+            qx = buf.astype(jnp.float32) * row_w[:, None] + noise
+            qw = jnp.ones((B,), jnp.float32)
+        perm = mask_graph_perm(spec, mask_key)
+        if use_pallas:
+            from repro.kernels import secure_agg as _ksa
+            mkw = (None if mask_key is None
+                   else jnp.stack(prf.key_words(mask_key)))
+            acc = _ksa.weighted_quantize_accum(
+                qx, qw, uniforms, spec.sa_scale,
+                mask_key_words=mkw, num_slots=num_slots,
+                mask_degree=spec.mask_degree, slot_offset=slot_offset,
+                neighbors=sa.neighbor_table(num_slots, spec.mask_degree, perm)
+                if (mkw is not None and perm is not None) else None,
+                interpret=interpret)
+        else:
+            xf = qx * qw[:, None] * spec.sa_scale
+            floor = jnp.floor(xf)
+            bit = (uniforms < (xf - floor)).astype(jnp.float32)
+            q = (floor + bit).astype(jnp.int32)
+            if mask_key is not None:
+                if num_slots == B and isinstance(slot_offset, int) \
+                        and slot_offset == 0:
+                    # one deduplicated edge sweep for the whole session
+                    masks = sa.session_masks((D,), B, mask_key,
+                                             spec.mask_degree, perm)
+                else:  # a shard of the session: this block's rows only
+                    slots = slot_offset + jnp.arange(B, dtype=jnp.int32)
+                    masks = jax.vmap(
+                        lambda s: sa.session_mask((D,), s, num_slots,
+                                                  mask_key, spec.mask_degree,
+                                                  perm))(slots)
+                q = q + masks  # wraps mod 2^32
+            acc = q.sum(0)  # wraps mod 2^32
+    else:
+        x = buf.astype(jnp.float32) * row_w[:, None]
+        if noise is not None:
+            x = x + noise
+        acc = x.sum(0)
+    return acc, nrm, was_clipped
+
+
+def buffer_noise_and_uniforms(rng, B: int, D: int, spec: AggregationSpec):
+    """The session-wide stochastic draws of one buffered aggregation.
+
+    Shared by the single-host engine and the sharded tier (which slices
+    rows per leaf), so both consume bit-identical streams.
+    """
+    if spec.dev_noise > 0.0:
+        noise = jax.random.normal(jax.random.fold_in(rng, 1), (B, D),
+                                  jnp.float32)
+    else:
+        noise = None
+    uniforms = (jax.random.uniform(jax.random.fold_in(rng, 2), (B, D))
+                if spec.use_secure_agg else None)
+    return noise, uniforms
+
+
 def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
                      spec: AggregationSpec, rng, *,
                      mask_key=None,
@@ -271,60 +445,13 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
     weight/quantize/accumulate kernel) that never materializes the encoded
     per-contribution ints in HBM.
     """
-    if mask_key is not None and not spec.use_secure_agg:
-        raise ValueError("pairwise masks require the secure-agg integer field "
-                         "(spec.use_secure_agg)")
     B, D = buf.shape
-    interpret = jax.default_backend() != "tpu"
-    if use_pallas:
-        from repro.kernels import dp_clip as _kclip
-        pb, pd = (-B) % 8, (-D) % 512  # pad up to kernel tile multiples
-        pbuf = jnp.pad(buf.astype(jnp.float32), ((0, pb), (0, pd)))
-        sq = _kclip.sq_norms(pbuf, interpret=interpret)[:B]
-    else:
-        sq = jnp.sum(buf.astype(jnp.float32) * buf.astype(jnp.float32), axis=1)
-    nrm = jnp.sqrt(sq)
-    clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
-    was_clipped = (clip_scale < 1.0).astype(jnp.float32)
-
-    # weighted, clipped contributions; "device" noise rides the same weights
-    row_w = weights * clip_scale  # (B,)
-    if spec.dev_noise > 0.0:
-        noise = jax.random.normal(jax.random.fold_in(rng, 1), (B, D), jnp.float32)
+    noise, uniforms = buffer_noise_and_uniforms(rng, B, D, spec)
+    if noise is not None:
         noise = noise * (spec.dev_noise * weights)[:, None]
-    else:
-        noise = None
-
-    if spec.use_secure_agg:
-        uniforms = jax.random.uniform(jax.random.fold_in(rng, 2), (B, D))
-        if noise is None:
-            qx, qw = buf.astype(jnp.float32), row_w
-        else:  # noise folded in pre-quantization; weights already applied
-            qx = buf.astype(jnp.float32) * row_w[:, None] + noise
-            qw = jnp.ones((B,), jnp.float32)
-        if use_pallas:
-            from repro.kernels import secure_agg as _ksa
-            mkw = (None if mask_key is None
-                   else jnp.stack(prf.key_words(mask_key)))
-            acc = _ksa.weighted_quantize_accum(
-                qx, qw, uniforms, spec.sa_scale,
-                mask_key_words=mkw, num_slots=B,
-                mask_degree=spec.mask_degree, interpret=interpret)
-        else:
-            xf = qx * qw[:, None] * spec.sa_scale
-            floor = jnp.floor(xf)
-            bit = (uniforms < (xf - floor)).astype(jnp.float32)
-            q = (floor + bit).astype(jnp.int32)
-            if mask_key is not None:
-                # one deduplicated edge sweep for the whole session
-                q = q + sa.session_masks((D,), B, mask_key,
-                                         spec.mask_degree)  # wraps mod 2^32
-            acc = q.sum(0)  # wraps mod 2^32
-    else:
-        x = buf.astype(jnp.float32) * row_w[:, None]
-        if noise is not None:
-            x = x + noise
-        acc = x.sum(0)
+    acc, nrm, was_clipped = encode_and_sum_rows(
+        buf, weights, uniforms, noise, spec, mask_key=mask_key,
+        use_pallas=use_pallas)
 
     w_total = weights.sum()
     mean = finalize_aggregate(acc, w_total, spec, jax.random.fold_in(rng, 0xDEE))

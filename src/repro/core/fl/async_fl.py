@@ -109,8 +109,9 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
 
 
 def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
-                                   recover: bool = True) -> Callable:
-    """The server half of the CLIENT-masked buffered-async protocol.
+                                   recover: bool = True,
+                                   masked: bool = True) -> Callable:
+    """The server half of the streamed buffered-async protocols.
 
     Returns jitted ``step(params, opt_state, mbuf, present, weights,
     staleness, norms, clips, session_key, rng)`` where ``mbuf`` is the
@@ -129,6 +130,11 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     modular sum, bit-identically — so the common-case apply costs no PRF
     work at all.  ``AsyncServer`` uses it for every full-buffer apply and
     keeps the recovering variant for partial flushes.
+
+    ``masked=False`` is the STREAMED-UNMASKED flush (the mask_mode="off"
+    engine streaming its encode per arrival): same int32 buffer and
+    present-gating, but there are no mask shares to recover — a partial
+    flush is just the gated modular sum.
     """
     spec = agg.make_spec(fl_cfg, buffer_size)
     if not spec.use_secure_agg:
@@ -142,7 +148,8 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
         w_total = w.sum()
         mean_flat = agg.aggregate_masked_buffer(mbuf, present, w_total, spec,
                                                 session_key, rng,
-                                                recover=recover)
+                                                recover=recover,
+                                                masked=masked)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
         denom = jnp.maximum(w_total, 1e-9)
@@ -183,8 +190,16 @@ class AsyncServer:
     of update payloads, no ``float()`` round-trips.
 
     mask_mode:
-      "off"        — raw f32 buffer, server-side clip/encode (PR 1
-                     behaviour).
+      "off"        — no masks.  With a secure-agg field configured the
+                     engine STREAMS its encode per arrival exactly like
+                     "tee_stream" (one jitted clip/weight/encode push into
+                     an int32 buffer; the flush is a plain modular sum —
+                     near-free), because the tee_stream restructuring
+                     showed the batched flush was paying the whole encode
+                     on the round's critical path for nothing.
+                     ``stream_encode=False`` (or ``secure_agg_bits=0``)
+                     falls back to the PR 1 batched engine: raw f32
+                     buffer, server-side clip/encode at flush time.
       "tee"        — raw f32 buffer; the jitted step adds pairwise session
                      masks inside the fused in-enclave aggregation
                      (bit-identical results; with the Pallas path the masks
@@ -223,7 +238,8 @@ class AsyncServer:
                  staleness_mode: str = "polynomial",
                  mask_mode: str = "off",
                  session_seed: int = 0x5A5E,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 stream_encode: Optional[bool] = None):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         self.params = params
@@ -247,11 +263,25 @@ class AsyncServer:
         self._stal = jnp.zeros((buffer_size,), jnp.float32)
         self._valid = jnp.zeros((buffer_size,), jnp.float32)
 
-        if mask_mode in ("client", "tee_stream"):
-            spec = agg.make_spec(fl_cfg, buffer_size)
+        spec = agg.make_spec(fl_cfg, buffer_size)
+        if mask_mode == "off":
+            # the baseline engine streams its encode too (when it has an
+            # integer field to stream into) — flush becomes near-free
+            if stream_encode and not spec.use_secure_agg:
+                raise ValueError(
+                    "stream_encode requires secure_agg_bits > 0 (there is "
+                    "no fixed-point field to stream the encode into)")
+            streaming = (spec.use_secure_agg if stream_encode is None
+                         else stream_encode)
+        else:
+            streaming = mask_mode in ("client", "tee_stream")
+        self._streaming = streaming
+
+        if streaming:
             if not spec.use_secure_agg:
                 raise ValueError(
                     f"mask_mode={mask_mode!r} requires secure_agg_bits > 0")
+            masked = mask_mode != "off"
             self._buf = jnp.zeros((buffer_size, D), jnp.int32)
             self._wts = jnp.zeros((buffer_size,), jnp.float32)
             self._norms = jnp.zeros((buffer_size,), jnp.float32)
@@ -266,25 +296,32 @@ class AsyncServer:
             # compiled lazily on the first partial flush (capturing self,
             # not the init-time params pytree, so nothing stale is pinned)
             self._step = build_masked_async_buffer_step(
-                params, fl_cfg, buffer_size=buffer_size, recover=False)
+                params, fl_cfg, buffer_size=buffer_size, recover=False,
+                masked=masked)
             self._flush_step: Optional[Callable] = None
             self._build_flush_step = lambda: build_masked_async_buffer_step(
-                self.params, fl_cfg, buffer_size=buffer_size, recover=True)
+                self.params, fl_cfg, buffer_size=buffer_size, recover=True,
+                masked=masked)
             s_mode, s_exp = staleness_mode, staleness_exponent
 
             @jax.jit
             def _masked_encode(delta, slot, s, session_key, rng):
-                """The masked-push encode pipeline (one jitted call).
+                """The streamed-push encode pipeline (one jitted call).
 
-                Runs on the device in mask_mode="client" and inside the
-                enclave, per arriving delta, in mask_mode="tee_stream".
+                Runs on the device in mask_mode="client"; inside the
+                enclave, per arriving delta, in mask_mode="tee_stream";
+                and server-side (no mask) for the streamed "off" engine.
                 """
                 flat_d, _ = ravel_pytree(delta)
                 w = staleness_weight(s, s_mode, s_exp)
-                masked, nrm, clipped = agg.encode_masked_contribution(
-                    flat_d, w, slot, spec, session_key, rng,
-                    use_pallas=use_pallas)
-                return masked, w, nrm, clipped
+                if masked:
+                    row, nrm, clipped = agg.encode_masked_contribution(
+                        flat_d, w, slot, spec, session_key, rng,
+                        use_pallas=use_pallas)
+                else:
+                    row, nrm, clipped = agg.encode_contribution(
+                        flat_d, w, spec, rng)
+                return row, w, nrm, clipped
 
             @jax.jit
             def _write_row(buf, stal, wts, norms, clips, slot, row, s, w,
@@ -393,10 +430,11 @@ class AsyncServer:
             self.push_encoded(self.encode_push(delta, client_version), rng)
             return
         staleness = self.version - client_version  # host-int metadata only
-        if self.mask_mode == "tee_stream":
-            # streaming in-enclave masking: encode + mask the arriving delta
-            # NOW (one jitted call) so the raw update never rests in HBM and
-            # the flush is left with nothing but the modular sum
+        if self._streaming:
+            # streaming encode: process the arriving delta NOW (one jitted
+            # call — in "tee_stream" masked, so the raw update never rests
+            # in HBM; in streamed "off" plain) and leave the flush nothing
+            # but the modular sum
             slot = self._present.index(False)  # lowest unfilled slot
             row, w, nrm, clipped = self._encode_for_slot(delta, staleness,
                                                          slot)
@@ -423,7 +461,7 @@ class AsyncServer:
     def _apply(self, rng=None) -> None:
         if rng is None:  # deterministic per-version stream for rounding/noise
             rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
-        if self.mask_mode in ("client", "tee_stream"):
+        if self._streaming:
             present = jnp.asarray([1.0 if p else 0.0 for p in self._present],
                                   jnp.float32)
             if self._fill >= self.buffer_size:

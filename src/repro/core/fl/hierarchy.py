@@ -1,0 +1,588 @@
+"""Sharded hierarchical aggregation tier — masked rounds across a device mesh.
+
+The paper's production architecture scales FL by fanning clients out over
+MANY aggregators that combine partial sums hierarchically before the main
+aggregator applies the server step; a single host's buffer caps round size
+otherwise.  Because masked secure aggregation is a MODULAR sum (int32
+addition wraps mod 2^32, associative and commutative *exactly*), partial
+sums commute across shards: a leaf/root tier preserves bit-exactness while
+multiplying ingest and flush throughput.
+
+Topology (one session = ``num_leaves * leaf_buffer`` global slots):
+
+                 clients ──► batched ingest (one jitted scatter)
+                     │
+      ┌──────────────┼──────────────────┐
+      ▼              ▼                  ▼
+   leaf 0         leaf 1    ...      leaf L-1      (shard_map over "leaf")
+   slots [0,Bl)   [Bl,2Bl)           [.., L*Bl)
+   local modular  partial sums  +  its shard of the gated
+   recovery-edge sweep (cross-shard dropout recovery)
+      │              │                  │
+      └─────── field-modulus psum (int32, mod 2^32) ──────┐
+                                                          ▼
+                                                        root:
+                                      dequantize → weight-normalize →
+                                      central DP noise (once) → server opt
+
+Every leaf runs the SAME row pipeline as the single-host engines
+(``aggregation.encode_and_sum_rows`` — including the fused Pallas
+``weighted_quantize_accum``/PRF mask lanes, pointed at its global slot
+range via ``slot_offset``), so the sharded flush is bit-identical to the
+single-host ``AsyncServer`` with ``buffer_size = num_leaves * leaf_buffer``
+for ALL mask modes ("off" streamed / "client" / "tee" / "tee_stream"),
+ring and random k-regular mask graphs, with and without dropout — enforced
+by tests/test_hierarchy.py under 8 forced host devices.
+
+``ShardedAsyncServer`` is the facade: a device-resident
+(num_leaves, leaf_buffer, D) buffer sharded over the leaf axis
+(launch/sharding.hierarchy_shardings), batched arrival ingestion — a (K,)
+batch of pushes is encoded with one vmapped jitted call and routed to
+leaves in ONE jitted scatter, no per-push Python loop — and the sharded
+flush steps above.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+from jax.sharding import PartitionSpec as P
+
+try:  # moved out of experimental on newer jax
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    shard_map = jax.shard_map
+
+from repro.core.fl import aggregation as agg
+from repro.core.fl import secure_agg as sa
+from repro.core.fl.async_fl import ClientPush, staleness_weight
+from repro.core.fl.server_opt import build_server_opt
+from repro.launch.mesh import LEAF_AXIS, make_agg_mesh
+from repro.launch.sharding import hierarchy_shardings
+
+
+def _partition_edges(num_slots: int, degree: int, perm, num_leaves: int):
+    """Split the session mask graph's edge list into ``num_leaves`` shards.
+
+    Returns (lo, hi, w) each (num_leaves * per_leaf,): equal-size chunks
+    padded with weight-0 edges so every leaf sweeps an identically-shaped
+    block.  Any partition of the edge set yields the same recovery term
+    (int32 partial sums commute mod 2^32), so a flat split is exact.
+    """
+    lo, hi = sa.session_pairs(num_slots, degree, perm)
+    E = int(lo.shape[0])
+    per = max(1, -(-E // num_leaves))
+    pad = num_leaves * per - E
+    w = jnp.concatenate([jnp.ones((E,), jnp.int32),
+                         jnp.zeros((pad,), jnp.int32)])
+    lo = jnp.concatenate([lo, jnp.zeros((pad,), jnp.int32)])
+    hi = jnp.concatenate([hi, jnp.zeros((pad,), jnp.int32)])
+    return lo, hi, w
+
+
+def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
+                              leaf_buffer: int, recover: bool = True,
+                              masked: bool = True, mesh=None):
+    """The sharded flush of the STREAMED engines (off / client / tee_stream).
+
+    Returns jitted ``step(params, opt_state, mbuf, present, weights,
+    staleness, norms, clips, session_key, rng)`` over the
+    (num_leaves, leaf_buffer, D) int32 buffer of already-encoded (masked or
+    plain) rows — the sharded analogue of
+    ``async_fl.build_masked_async_buffer_step`` with
+    ``buffer_size = num_leaves * leaf_buffer``, bit-identical to it.
+
+    Leaf tier (shard_map): each leaf modular-sums its own present-gated
+    slots and, under ``recover`` + ``masked``, sweeps ITS shard of the
+    session graph's mixed edges (``secure_agg.recovery_sweep`` over a
+    ``_partition_edges`` chunk) — cross-shard dropout recovery, since an
+    edge's endpoints may live on different leaves while the sweep needs
+    only the replicated (B,) present vector.  Root tier: one field-modulus
+    ``psum`` (int32, mod 2^32) of the leaf partials, then decode /
+    weight-normalize / central DP noise (drawn ONCE) / server optimizer.
+    """
+    B = num_leaves * leaf_buffer
+    spec = agg.make_spec(fl_cfg, B)
+    if not spec.use_secure_agg:
+        raise ValueError("the sharded tier aggregates in the secure-agg "
+                         "integer field: set secure_agg_bits > 0")
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+    if mesh is None:
+        mesh = make_agg_mesh(num_leaves)
+
+    def step(params, opt_state, mbuf, present, weights, staleness, norms,
+             clips, session_key, rng):
+        L, Bl, D = mbuf.shape
+        rows = mbuf.reshape(B, D)  # global slot s = leaf * leaf_buffer + local
+        pres_full = present.reshape(B)
+
+        if recover and masked:
+            perm = agg.mask_graph_perm(spec, session_key)
+            lo, hi, ew = _partition_edges(B, spec.mask_degree, perm,
+                                          num_leaves)
+
+            def leaf_fn(rows_l, pres_l, pres_all, lo_l, hi_l, ew_l, skey):
+                acc = jnp.sum(rows_l * pres_l.astype(jnp.int32)[:, None],
+                              axis=0)  # int32, wraps mod 2^32
+                acc = acc + sa.recovery_sweep((D,), pres_all, lo_l, hi_l,
+                                              skey, ew_l)
+                return jax.lax.psum(acc, LEAF_AXIS)  # field-modulus combine
+
+            acc = shard_map(
+                leaf_fn, mesh=mesh,
+                in_specs=(P(LEAF_AXIS), P(LEAF_AXIS), P(), P(LEAF_AXIS),
+                          P(LEAF_AXIS), P(LEAF_AXIS), P()),
+                out_specs=P(), check_rep=False,
+            )(rows, pres_full, pres_full, lo, hi, ew, session_key)
+        elif recover:  # streamed-unmasked partial flush: gate, no shares
+
+            def leaf_fn(rows_l, pres_l):
+                acc = jnp.sum(rows_l * pres_l.astype(jnp.int32)[:, None],
+                              axis=0)
+                return jax.lax.psum(acc, LEAF_AXIS)
+
+            acc = shard_map(
+                leaf_fn, mesh=mesh, in_specs=(P(LEAF_AXIS), P(LEAF_AXIS)),
+                out_specs=P(), check_rep=False)(rows, pres_full)
+        else:  # complete session: masks provably cancel in the plain sum
+
+            def leaf_fn(rows_l):
+                return jax.lax.psum(jnp.sum(rows_l, axis=0), LEAF_AXIS)
+
+            acc = shard_map(leaf_fn, mesh=mesh, in_specs=(P(LEAF_AXIS),),
+                            out_specs=P(), check_rep=False)(rows)
+
+        w = weights.reshape(B) * pres_full
+        w_total = w.sum()
+        mean_flat = agg.finalize_aggregate(acc, w_total, spec,
+                                           jax.random.fold_in(rng, 0xDEE))
+        mean_delta = unravel(mean_flat)
+        new_params, new_opt = server.apply(params, opt_state, mean_delta)
+        denom = jnp.maximum(w_total, 1e-9)
+        metrics = {
+            "update_norm": (norms.reshape(B) * w).sum() / denom,
+            "clip_fraction": (clips.reshape(B) * w).sum() / denom,
+            "weight_total": w_total,
+            "staleness_mean": (staleness.reshape(B) * pres_full).sum()
+            / jnp.maximum(pres_full.sum(), 1.0),
+        }
+        return new_params, new_opt, metrics
+
+    return jax.jit(step)
+
+
+def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
+                              leaf_buffer: int,
+                              staleness_mode: str = "polynomial",
+                              staleness_exponent: float = 0.5,
+                              mask_mode: str = "off", mesh=None,
+                              use_pallas: Optional[bool] = None):
+    """The sharded BATCHED engine (raw f32 rows; "off" batched or "tee").
+
+    The sharded analogue of ``async_fl.build_async_buffer_step``: returns
+    jitted ``step(params, opt_state, buf, staleness, valid, rng)`` over a
+    (num_leaves, leaf_buffer, D) f32 buffer.  Each leaf runs the full
+    clip / weight / [device-noise] / stochastic-encode [/ in-enclave mask]
+    row pipeline over its slot shard — ``aggregation.encode_and_sum_rows``
+    with ``slot_offset = leaf * leaf_buffer``, i.e. the same fused Pallas
+    ``weighted_quantize_accum``/PRF mask lanes as the single-host engine,
+    pointed at the leaf's global slot range — and the root combines with a
+    field-modulus psum + decode + one central noise draw + server opt.
+    Session-wide stochastic draws are generated ONCE at the global (B, D)
+    shape and sliced per leaf, so results are bit-identical to the
+    single-host step at ``buffer_size = num_leaves * leaf_buffer``.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if mask_mode not in ("off", "tee"):
+        raise ValueError(f"mask_mode {mask_mode!r}: expected 'off' or 'tee'")
+    B = num_leaves * leaf_buffer
+    spec = agg.make_spec(fl_cfg, B)
+    if not spec.use_secure_agg:
+        raise ValueError("the sharded tier aggregates in the secure-agg "
+                         "integer field: set secure_agg_bits > 0")
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+    if mesh is None:
+        mesh = make_agg_mesh(num_leaves)
+    has_noise = spec.dev_noise > 0.0
+    is_masked = mask_mode == "tee"
+
+    def step(params, opt_state, buf, staleness, valid, rng):
+        L, Bl, D = buf.shape
+        rows = buf.reshape(B, D)
+        w_full = staleness_weight(staleness.reshape(B), staleness_mode,
+                                  staleness_exponent) * valid.reshape(B)
+        noise, uniforms = agg.buffer_noise_and_uniforms(rng, B, D, spec)
+        if noise is not None:
+            noise = noise * (spec.dev_noise * w_full)[:, None]
+        skey = jax.random.fold_in(rng, 0x7EE) if is_masked else None
+
+        def leaf_fn(rows_l, w_l, u_l, *rest):
+            rest = list(rest)
+            n_l = rest.pop(0) if has_noise else None
+            skey_l = rest.pop(0) if is_masked else None
+            offset = jax.lax.axis_index(LEAF_AXIS) * Bl
+            acc, nrm, clipped = agg.encode_and_sum_rows(
+                rows_l, w_l, u_l, n_l, spec, mask_key=skey_l,
+                slot_offset=offset, num_slots=B, use_pallas=use_pallas)
+            return jax.lax.psum(acc, LEAF_AXIS), nrm, clipped
+
+        args = [rows, w_full, uniforms]
+        in_specs = [P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
+        if has_noise:
+            args.append(noise)
+            in_specs.append(P(LEAF_AXIS))
+        if is_masked:
+            args.append(skey)
+            in_specs.append(P())
+        acc, nrm, was_clipped = shard_map(
+            leaf_fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(P(), P(LEAF_AXIS), P(LEAF_AXIS)), check_rep=False,
+        )(*args)
+
+        w_total = w_full.sum()
+        mean_flat = agg.finalize_aggregate(acc, w_total, spec,
+                                           jax.random.fold_in(rng, 0xDEE))
+        mean_delta = unravel(mean_flat)
+        new_params, new_opt = server.apply(params, opt_state, mean_delta)
+        denom = jnp.maximum(w_total, 1e-9)
+        valid_full = valid.reshape(B)
+        metrics = {
+            "update_norm": (nrm * w_full).sum() / denom,
+            "clip_fraction": (was_clipped * w_full).sum() / denom,
+            "weight_total": w_total,
+            "staleness_mean": (staleness.reshape(B) * valid_full).sum()
+            / jnp.maximum(valid_full.sum(), 1.0),
+        }
+        return new_params, new_opt, metrics
+
+    return jax.jit(step)
+
+
+class ShardedAsyncServer:
+    """Buffered asynchronous aggregation over the leaf/root tier.
+
+    The "Meta scale" facade: one pairwise-mask session spans
+    ``num_leaves * leaf_buffer`` global slots; slot ``s`` lives on leaf
+    ``s // leaf_buffer`` in a device-resident (num_leaves, leaf_buffer, D)
+    buffer physically sharded over the leaf mesh axis
+    (``launch.sharding.hierarchy_shardings``), so no single host ever
+    materializes the whole round.
+
+    Arrival ingestion is BATCHED: ``push_batch`` takes a (K,)-stacked batch
+    of raw deltas, encodes all K with one vmapped jitted call (identical
+    per-row bits to K sequential ``AsyncServer`` pushes — same per-slot PRF
+    streams) and lands them with ONE jitted scatter into the sharded
+    buffer; ``push_encoded_batch`` does the same for client-encoded
+    ``ClientPush`` rows.  No per-push Python loop touches row data.
+
+    mask_mode semantics match ``AsyncServer`` ("off" always streams here —
+    the tier requires the integer field anyway); the flush is
+    ``build_sharded_masked_step`` (streamed modes) or
+    ``build_sharded_buffer_step`` ("tee"), both bit-identical to the
+    single-host engines at ``buffer_size = num_leaves * leaf_buffer``.
+    """
+
+    def __init__(self, params, fl_cfg, *, num_leaves: int, leaf_buffer: int,
+                 staleness_exponent: float = 0.5,
+                 staleness_mode: str = "polynomial",
+                 mask_mode: str = "off", session_seed: int = 0x5A5E,
+                 mesh=None, use_pallas: Optional[bool] = None):
+        if mask_mode not in ("off", "tee", "tee_stream", "client"):
+            raise ValueError(f"mask_mode {mask_mode!r}")
+        self.params = params
+        self.fl_cfg = fl_cfg
+        self.num_leaves = num_leaves
+        self.leaf_buffer = leaf_buffer
+        self.buffer_size = B = num_leaves * leaf_buffer
+        self.staleness_exponent = staleness_exponent
+        self.staleness_mode = staleness_mode
+        self.mask_mode = mask_mode
+        self.version = 0
+        self.last_metrics: Optional[dict] = None
+        self._applied_updates = 0
+        self._fill = 0
+        self._session_base = jax.random.PRNGKey(session_seed)
+        self._push_base = jax.random.PRNGKey(0xA5)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.mesh = make_agg_mesh(num_leaves) if mesh is None else mesh
+        shardings = hierarchy_shardings(self.mesh)
+        s_buf, s_slot = shardings["buffer"], shardings["per_slot"]
+
+        spec = agg.make_spec(fl_cfg, B)
+        if not spec.use_secure_agg:
+            raise ValueError("the sharded tier aggregates in the secure-agg "
+                             "integer field: set secure_agg_bits > 0")
+        self._spec = spec
+        flat, _ = ravel_pytree(params)
+        D = flat.shape[0]
+        self._opt_state = build_server_opt(fl_cfg).init(params)
+        L, Bl = num_leaves, leaf_buffer
+        zslot = lambda: jax.device_put(jnp.zeros((L, Bl), jnp.float32),
+                                       s_slot)
+        self._stal = zslot()
+        # per-GLOBAL-slot presence (host metadata): sessions fill out of
+        # order — concurrent clients push for assigned slots on any leaf
+        self._present = [False] * B
+        self._streaming = mask_mode != "tee"
+        s_mode, s_exp = staleness_mode, staleness_exponent
+
+        if self._streaming:
+            masked = mask_mode != "off"
+            self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.int32),
+                                       s_buf)
+            self._wts, self._norms, self._clips = zslot(), zslot(), zslot()
+            self._step = build_sharded_masked_step(
+                params, fl_cfg, num_leaves=L, leaf_buffer=Bl, recover=False,
+                masked=masked, mesh=self.mesh)
+            self._flush_step = None
+            self._build_flush_step = lambda: build_sharded_masked_step(
+                self.params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
+                recover=True, masked=masked, mesh=self.mesh)
+
+            @jax.jit
+            def _encode_batch(deltas, slots, stals, session_key, push_key):
+                """One vmapped encode of a (K,) arrival batch.
+
+                Per-row PRF streams are keyed exactly as K sequential
+                single pushes (``fold_in(push_key, slot)``), so batched
+                and sequential ingestion write bit-identical rows.
+                """
+
+                def one(delta, slot, s):
+                    rng = jax.random.fold_in(push_key, slot)
+                    flat_d, _ = ravel_pytree(delta)
+                    w = staleness_weight(s, s_mode, s_exp)
+                    if masked:
+                        row, nrm, clipped = agg.encode_masked_contribution(
+                            flat_d, w, slot, spec, session_key, rng,
+                            use_pallas=use_pallas)
+                    else:
+                        row, nrm, clipped = agg.encode_contribution(
+                            flat_d, w, spec, rng)
+                    return row, w, nrm, clipped
+
+                return jax.vmap(one)(deltas, slots, stals)
+
+            @jax.jit
+            def _scatter_rows(buf, wts, norms, clips, stal, leaf, local,
+                              rows, w, nrm, clipped, s):
+                """Route a (K,) batch of encoded rows to its leaves: ONE
+                jitted scatter into the sharded (L, Bl, D) buffer."""
+                return (buf.at[leaf, local].set(rows),
+                        wts.at[leaf, local].set(w),
+                        norms.at[leaf, local].set(nrm),
+                        clips.at[leaf, local].set(clipped),
+                        stal.at[leaf, local].set(s))
+
+            self._encode_batch = _encode_batch
+            self._scatter_rows = _scatter_rows
+        else:  # "tee": raw rows, the batched in-enclave mask lane at flush
+            self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.float32),
+                                       s_buf)
+            self._valid = zslot()
+            self._step = build_sharded_buffer_step(
+                params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
+                staleness_mode=staleness_mode,
+                staleness_exponent=staleness_exponent, mask_mode="tee",
+                mesh=self.mesh, use_pallas=use_pallas)
+
+            @jax.jit
+            def _scatter_raw(buf, stal, valid, leaf, local, deltas, s):
+                rows = jax.vmap(lambda d: ravel_pytree(d)[0].astype(
+                    jnp.float32))(deltas)
+                return (buf.at[leaf, local].set(rows),
+                        stal.at[leaf, local].set(s),
+                        valid.at[leaf, local].set(jnp.ones_like(s)))
+
+            self._scatter_raw = _scatter_raw
+
+    # -- session bookkeeping ------------------------------------------------
+    def _session_key(self):
+        """PRNG key of the current pairwise-mask session (= buffer round)."""
+        return jax.random.fold_in(self._session_base, self.version)
+
+    def _take_slots(self, k: int) -> List[int]:
+        free = [s for s, p in enumerate(self._present) if not p]
+        if len(free) < k:
+            raise ValueError(
+                f"batch of {k} exceeds the session's {len(free)} open slots "
+                f"(route arrival batches per session)")
+        return free[:k]
+
+    def _check_slots(self, slots) -> None:
+        """Every batch slot must be a distinct OPEN session position —
+        a repeat would overwrite a row while ``_fill`` still counts it,
+        silently corrupting the session's modular sum."""
+        if len(set(slots)) != len(slots):
+            raise ValueError(f"duplicate slots in batch: {list(slots)}")
+        for s in slots:
+            if not 0 <= s < self.buffer_size or self._present[s]:
+                raise ValueError(
+                    f"slot {s} is not an open position of session "
+                    f"{self.version}")
+
+    def _leaf_local(self, slots: Sequence[int]):
+        s = jnp.asarray(slots, jnp.int32)
+        return s // self.leaf_buffer, s % self.leaf_buffer
+
+    # -- client protocol ----------------------------------------------------
+    def pull(self) -> Tuple[Any, int]:
+        return self.params, self.version
+
+    def encode_push(self, delta, client_version: int,
+                    slot: Optional[int] = None) -> ClientPush:
+        """The CLIENT half of mask_mode='client' (one delta; see
+        ``AsyncServer.encode_push``) against a GLOBAL session slot."""
+        cps = self.encode_push_batch(
+            jax.tree.map(lambda x: x[None], delta), client_version,
+            slots=None if slot is None else [slot])
+        return cps[0]
+
+    def encode_push_batch(self, deltas, client_version: int,
+                          slots: Optional[Sequence[int]] = None
+                          ) -> List[ClientPush]:
+        """Encode a (K,)-stacked batch of deltas as the session's clients
+        would — one vmapped jitted call, pure w.r.t. server state."""
+        if self.mask_mode != "client":
+            raise ValueError(
+                f"encode_push is the client half of mask_mode='client' "
+                f"(server is in mask_mode={self.mask_mode!r})")
+        K = jax.tree.leaves(deltas)[0].shape[0]
+        if slots is None:
+            slots = self._take_slots(K)
+        staleness = self.version - client_version
+        stals = jnp.full((K,), float(staleness), jnp.float32)
+        rows, w, nrm, clipped = self._encode_batch(
+            deltas, jnp.asarray(slots, jnp.int32), stals,
+            self._session_key(),
+            jax.random.fold_in(self._push_base, self.version))
+        return [ClientPush(rows[i], w[i], nrm[i], clipped[i], staleness,
+                           self.version, int(s))
+                for i, s in enumerate(slots)]
+
+    def push_encoded(self, cp: ClientPush, rng=None) -> None:
+        self.push_encoded_batch([cp], rng=rng)
+
+    def push_encoded_batch(self, cps: Sequence[ClientPush],
+                           rng=None) -> None:
+        """The SERVER half: land a batch of masked rows in one scatter."""
+        if self.mask_mode != "client":
+            raise ValueError(
+                f"push_encoded is the server half of mask_mode='client' "
+                f"(server is in mask_mode={self.mask_mode!r})")
+        slots = [cp.slot for cp in cps]
+        for cp in cps:
+            if cp.version != self.version:
+                raise ValueError(
+                    f"stale ClientPush (session {cp.version} slot {cp.slot}; "
+                    f"server at session {self.version}): the pairwise mask "
+                    "no longer matches an open session position")
+        self._check_slots(slots)
+        self._ingest(slots,
+                     jnp.stack([cp.row for cp in cps]),
+                     jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
+                     jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
+                     jnp.stack([jnp.asarray(cp.clipped) for cp in cps]),
+                     jnp.asarray([cp.staleness for cp in cps], jnp.float32),
+                     rng)
+
+    def push(self, delta, client_version: int, rng=None) -> None:
+        """Single-arrival convenience wrapper over ``push_batch``."""
+        self.push_batch(jax.tree.map(lambda x: x[None], delta),
+                        client_version, rng=rng)
+
+    def push_batch(self, deltas, client_version, rng=None,
+                   slots: Optional[Sequence[int]] = None) -> None:
+        """Vectorized multi-push: a (K,)-stacked batch of raw deltas.
+
+        ``client_version`` may be a scalar or a (K,) sequence (mixed
+        staleness within one arrival batch).  The whole batch is encoded
+        with one vmapped jitted call and routed to its leaves in one
+        jitted scatter — bit-identical rows to K sequential pushes.
+        """
+        if self.mask_mode == "client":
+            self.push_encoded_batch(
+                self.encode_push_batch(deltas, client_version, slots=slots),
+                rng=rng)
+            return
+        K = jax.tree.leaves(deltas)[0].shape[0]
+        if slots is None:
+            slots = self._take_slots(K)
+        else:
+            self._check_slots(slots)
+        if jnp.ndim(client_version) == 0:
+            stals = jnp.full((K,), float(self.version - client_version),
+                             jnp.float32)
+        else:
+            stals = self.version - jnp.asarray(client_version, jnp.float32)
+        leaf, local = self._leaf_local(slots)
+        if not self._streaming:  # "tee": store raw rows, mask lane at flush
+            self._buf, self._stal, self._valid = self._scatter_raw(
+                self._buf, self._stal, self._valid, leaf, local, deltas,
+                stals)
+            self._mark(slots, rng)
+            return
+        rows, w, nrm, clipped = self._encode_batch(
+            deltas, jnp.asarray(slots, jnp.int32), stals,
+            self._session_key(),
+            jax.random.fold_in(self._push_base, self.version))
+        self._ingest(slots, rows, w, nrm, clipped, stals, rng,
+                     leaf_local=(leaf, local))
+
+    def _ingest(self, slots, rows, w, nrm, clipped, stals, rng,
+                leaf_local=None) -> None:
+        leaf, local = (self._leaf_local(slots) if leaf_local is None
+                       else leaf_local)
+        (self._buf, self._wts, self._norms, self._clips,
+         self._stal) = self._scatter_rows(
+            self._buf, self._wts, self._norms, self._clips, self._stal,
+            leaf, local, rows, w, nrm, clipped, stals)
+        self._mark(slots, rng)
+
+    def _mark(self, slots, rng) -> None:
+        for s in slots:
+            self._present[s] = True
+        self._fill += len(slots)
+        if self._fill >= self.buffer_size:
+            self._apply(rng)
+
+    def flush(self, rng=None) -> None:
+        """Apply a partially-filled session (deadline / end of run) — the
+        cross-shard dropout-recovery path for the masked modes."""
+        if self._fill > 0:
+            self._apply(rng)
+
+    # -- server step --------------------------------------------------------
+    def _apply(self, rng=None) -> None:
+        if rng is None:  # deterministic per-version stream for rounding/noise
+            rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
+        L, Bl = self.num_leaves, self.leaf_buffer
+        if self._streaming:
+            present = jnp.asarray(
+                [1.0 if p else 0.0 for p in self._present],
+                jnp.float32).reshape(L, Bl)
+            if self._fill >= self.buffer_size:
+                step = self._step  # complete session: no recovery needed
+            else:
+                if self._flush_step is None:
+                    self._flush_step = self._build_flush_step()
+                step = self._flush_step  # cross-shard dropout recovery
+            self.params, self._opt_state, self.last_metrics = step(
+                self.params, self._opt_state, self._buf, present, self._wts,
+                self._stal, self._norms, self._clips, self._session_key(),
+                rng)
+        else:
+            self.params, self._opt_state, self.last_metrics = self._step(
+                self.params, self._opt_state, self._buf, self._stal,
+                self._valid, rng)
+            self._valid = jnp.zeros_like(self._valid)
+        self._present = [False] * self.buffer_size
+        self.version += 1
+        self._applied_updates += self._fill
+        self._fill = 0

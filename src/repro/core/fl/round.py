@@ -127,6 +127,9 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         slots = jnp.arange(cohort_size, dtype=jnp.int32).reshape(
             m, n_chunks).swapaxes(0, 1)
         skey = jax.random.fold_in(rng, 0x5E55) if masked else None
+        # random k-regular session graph: ONE permutation per round, shared
+        # by every chunk's mask (cancellation needs one consistent graph)
+        perm = agg.mask_graph_perm(spec, skey) if masked else None
 
         deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
         if deferred:
@@ -154,7 +157,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                         enc = jax.tree.map(
                             lambda e, mk: e + mk, enc,
                             agg.mask_tree(params, cslot[0], cohort_size, skey,
-                                          spec.mask_degree))
+                                          spec.mask_degree, perm))
                 else:
                     enc = delta
                 acc = jax.tree.map(lambda a, e: a + e, acc, enc)
@@ -171,8 +174,8 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                     if masked:
                         mks = jax.vmap(
                             lambda s: agg.mask_tree(params, s, cohort_size,
-                                                    skey,
-                                                    spec.mask_degree))(cslot)
+                                                    skey, spec.mask_degree,
+                                                    perm))(cslot)
                         encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
                 else:
                     encs = deltas
@@ -208,6 +211,123 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         return FLState(new_params, new_opt, state.round_idx + 1), metrics
 
     return round_step
+
+
+# ---------------------------------------------------------------------------
+# Cohort-sharded synchronous rounds — the aggregation tier's sync path
+# ---------------------------------------------------------------------------
+def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
+                             num_leaves: int, mesh=None) -> Callable:
+    """A synchronous round sharded over the aggregation tier's leaf mesh.
+
+    The cohort splits into ``num_leaves`` contiguous shards; each leaf
+    trains its ``cohort_size / num_leaves`` clients (vmapped), clips,
+    encodes (+ adds each GLOBAL slot's pairwise session mask under
+    ``fl_cfg.secure_agg_masked`` — one session spans the whole cohort, so
+    masks pair ACROSS leaves) and modular-sums a per-leaf partial; the root
+    combines partials with one field-modulus ``psum`` (int32, mod 2^32),
+    decodes, draws central noise once, and applies the server optimizer.
+
+    Because the int32 accumulation is exact, the masked sharded round is
+    BIT-identical to the unmasked sharded round (cross-leaf masks cancel
+    through the psum) — the same guarantee the single-host round makes,
+    test-enforced.  Per-client keys follow the fully-vmapped single-chunk
+    schedule (``split(rng, cohort_size)``), so per-client arithmetic
+    matches ``build_round_step(clients_per_chunk=cohort_size)``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    try:  # moved out of experimental on newer jax
+        from jax.experimental.shard_map import shard_map
+    except ImportError:  # pragma: no cover
+        shard_map = jax.shard_map
+    from repro.launch.mesh import LEAF_AXIS, make_agg_mesh
+
+    assert cohort_size % num_leaves == 0
+    m = cohort_size // num_leaves
+    client_update = build_client_update(loss_fn, fl_cfg)
+    server = build_server_opt(fl_cfg)
+    spec = agg.make_spec(fl_cfg, cohort_size)
+    if not spec.use_secure_agg:
+        raise ValueError("the sharded tier aggregates in the secure-agg "
+                         "integer field: set secure_agg_bits > 0")
+    masked = getattr(fl_cfg, "secure_agg_masked", False)
+    if mesh is None:
+        mesh = make_agg_mesh(num_leaves)
+    sa_scale = spec.sa_scale
+
+    def round_step(state: FLState, batch, rng):
+        params = state.params
+        weights = batch.get("weight")
+        if weights is None:
+            weights = jnp.ones((cohort_size,), jnp.float32)
+        batch = {k: v for k, v in batch.items() if k != "weight"}
+        rngs = jax.random.split(rng, cohort_size)  # client c -> rngs[c]
+        skey = jax.random.fold_in(rng, 0x5E55) if masked else None
+        perm = agg.mask_graph_perm(spec, skey) if masked else None
+
+        def leaf_fn(params, cbatch_l, rngs_l, w_l, *mask_args):
+            slot0 = jax.lax.axis_index(LEAF_AXIS) * m
+
+            def one_client(cb, crng):
+                delta, loss = client_update(params, cb, crng)
+                delta, nrm, clipped = agg.privatize_contribution(
+                    delta, spec, crng)
+                return delta, loss, nrm, clipped
+
+            deltas, losses, nrms, clips = jax.vmap(one_client)(cbatch_l,
+                                                               rngs_l)
+            deltas = jax.tree.map(
+                lambda d: d * w_l.reshape((m,) + (1,) * (d.ndim - 1)),
+                deltas)
+            encs = jax.vmap(agg.encode_tree, in_axes=(0, None, 0))(
+                deltas, sa_scale, rngs_l)
+            if masked:
+                skey_l, perm_l = mask_args
+                slots = slot0 + jnp.arange(m, dtype=jnp.int32)
+                mks = jax.vmap(
+                    lambda s: agg.mask_tree(params, s, cohort_size, skey_l,
+                                            spec.mask_degree, perm_l))(slots)
+                encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
+            # the root combine: ONE integer all-reduce per round
+            acc = jax.tree.map(
+                lambda e: jax.lax.psum(e.sum(0), LEAF_AXIS), encs)
+            stats = tuple(
+                jax.lax.psum(s, LEAF_AXIS)
+                for s in ((losses * w_l).sum(), (nrms * w_l).sum(),
+                          (clips.astype(jnp.float32) * w_l).sum(),
+                          w_l.sum()))
+            return acc, stats
+
+        args = [params, batch, rngs, weights]
+        in_specs = [P(), P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
+        if masked:
+            # identity permutation == the circulant/complete fallback
+            # (bit-identical through _neighbor_slots), so shard_map always
+            # sees one array argument
+            args += [skey, perm if perm is not None
+                     else jnp.arange(cohort_size, dtype=jnp.int32)]
+            in_specs += [P(), P()]
+        acc, (loss_s, norm_s, clip_s, w_s) = shard_map(
+            leaf_fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(P(), (P(), P(), P(), P())), check_rep=False,
+        )(*args)
+
+        w_total = jnp.maximum(w_s, 1e-9)
+        mean_delta = agg.finalize_aggregate(acc, w_s, spec,
+                                            jax.random.fold_in(rng, 0xDEE))
+        new_params, new_opt = server.apply(params, state.opt_state,
+                                           mean_delta)
+        metrics = {
+            "loss": loss_s / w_total,
+            "update_norm": norm_s / w_total,
+            "clip_fraction": clip_s / w_total,
+            "participation": w_s / cohort_size,
+            "round": state.round_idx,
+        }
+        return FLState(new_params, new_opt, state.round_idx + 1), metrics
+
+    return jax.jit(round_step)
 
 
 def rounds_to_epsilon(fl_cfg, cohort_size: int, population: int, rounds: int) -> float:

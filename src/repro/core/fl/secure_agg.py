@@ -134,9 +134,10 @@ def _size(shape) -> int:
 def effective_degree(num_slots: int, degree: int) -> int:
     """Canonicalize a mask-graph degree: 0 == complete graph.
 
-    A ring degree must be even (each slot pairs with k/2 neighbours on each
-    side) and leave at least one non-neighbour (k <= num_slots - 2);
-    anything denser collapses to the complete graph.
+    A k-regular degree must be even (each slot pairs with k/2 neighbours on
+    each side of the — possibly permuted — ring) and leave at least one
+    non-neighbour (k <= num_slots - 2); anything denser collapses to the
+    complete graph.
     """
     if degree <= 0 or degree >= num_slots - 1:
         return 0
@@ -145,12 +146,36 @@ def effective_degree(num_slots: int, degree: int) -> int:
     return degree
 
 
-def _neighbor_slots(slot, num_slots: int, degree: int) -> jnp.ndarray:
+# fold-in tag deriving the per-session neighbourhood permutation key from the
+# session key (disjoint from the 0x5E55/0x7EE/0xDEE engine stream tags)
+GRAPH_PERM_TAG = 0x6B52
+
+
+def session_perm(num_slots: int, key) -> jnp.ndarray:
+    """The session's random neighbourhood permutation — Bell et al. style.
+
+    SecAgg+ draws a RANDOM k-regular session graph, not a circulant one:
+    our construction relabels the k-ring by a permutation drawn from the
+    session key (edge set {{perm[i], perm[(i+j) % n]}}), which is k-regular
+    for every even k and resampled every session — a colluding server
+    cannot steer who masks with whom.  Traceable (usable inside the jitted
+    engines); the same permutation must be threaded to every consumer of
+    the session's masks (encode, recovery, kernels) for cancellation.
+    """
+    pkey = jax.random.fold_in(key, GRAPH_PERM_TAG)
+    return jax.random.permutation(pkey, num_slots).astype(jnp.int32)
+
+
+def _neighbor_slots(slot, num_slots: int, degree: int,
+                    perm=None) -> jnp.ndarray:
     """The slots ``slot`` shares a pairwise mask with, traceable in slot.
 
     Complete graph (degree 0): all num_slots - 1 other slots, enumerated
-    without the diagonal (``others = arange + (arange >= slot)``).  Ring
-    degree k: the k/2 neighbours on each side, ``(slot +- j) % num_slots``.
+    without the diagonal (``others = arange + (arange >= slot)``).  Degree
+    k: the k/2 neighbours on each side of the ring — circulant
+    ``(slot +- j) % num_slots`` when ``perm`` is None, or the
+    ``session_perm``-relabelled ring ``perm[(perm^-1[slot] +- j) % n]``
+    (the random k-regular graph) when given.
     """
     slot = jnp.asarray(slot, jnp.int32)
     k = effective_degree(num_slots, degree)
@@ -159,41 +184,71 @@ def _neighbor_slots(slot, num_slots: int, degree: int) -> jnp.ndarray:
         return d + (d >= slot).astype(jnp.int32)
     offs = jnp.asarray([j for j in range(1, k // 2 + 1)]
                        + [-j for j in range(1, k // 2 + 1)], jnp.int32)
-    return (slot + offs + num_slots) % num_slots
+    if perm is None:
+        return (slot + offs + num_slots) % num_slots
+    perm = jnp.asarray(perm, jnp.int32)
+    inv = jnp.argsort(perm).astype(jnp.int32)
+    return perm[(inv[slot] + offs + num_slots) % num_slots]
 
 
-def session_pairs(num_slots: int, degree: int = 0):
-    """The mask graph's edge list as static (lo, hi) int32 arrays.
+def neighbor_table(num_slots: int, degree: int, perm=None):
+    """All slots' mask-graph neighbours as one (num_slots, k) int32 table.
 
-    Complete graph: all num_slots*(num_slots-1)/2 unordered pairs.  Ring
-    degree k: the num_slots*k/2 edges {s, (s+j) % num_slots}, j = 1..k/2.
+    ``None`` for complete graphs (degree 0 — static in-kernel enumeration
+    needs no table).  This is the form the Pallas kernels consume for the
+    random k-regular graph: the table is tiny (num_slots * k words) and
+    rides the kernels' scalar meta operand.
+    """
+    k = effective_degree(num_slots, degree)
+    if k == 0:
+        return None
+    slots = jnp.arange(num_slots, dtype=jnp.int32)
+    return jax.vmap(
+        lambda s: _neighbor_slots(s, num_slots, degree, perm))(slots)
+
+
+def session_pairs(num_slots: int, degree: int = 0, perm=None):
+    """The mask graph's edge list as (lo, hi) int32 arrays (static shape).
+
+    Complete graph: all num_slots*(num_slots-1)/2 unordered pairs.  Degree
+    k: the num_slots*k/2 ring edges {s, (s+j) % num_slots}, j = 1..k/2 —
+    relabelled through ``perm`` (the random k-regular session graph) when
+    given, in which case the arrays are traced values of static shape.
     """
     k = effective_degree(num_slots, degree)
     if k == 0:
         lo, hi = jnp.triu_indices(num_slots, k=1)
         return lo.astype(jnp.int32), hi.astype(jnp.int32)
     s = jnp.arange(num_slots, dtype=jnp.int32)
-    edges = jnp.stack([jnp.stack([s, (s + j) % num_slots], axis=1)
-                       for j in range(1, k // 2 + 1)]).reshape(-1, 2)
+    if perm is None:
+        edges = jnp.stack([jnp.stack([s, (s + j) % num_slots], axis=1)
+                           for j in range(1, k // 2 + 1)]).reshape(-1, 2)
+    else:
+        p = jnp.asarray(perm, jnp.int32)
+        edges = jnp.stack([jnp.stack([p[s], p[(s + j) % num_slots]], axis=1)
+                           for j in range(1, k // 2 + 1)]).reshape(-1, 2)
     return jnp.min(edges, axis=1), jnp.max(edges, axis=1)
 
 
-def _edge_chunks(lo: jnp.ndarray, hi: jnp.ndarray, D: int):
+def _edge_chunks(lo: jnp.ndarray, hi: jnp.ndarray, D: int, w=None):
     """Pad an edge list into fixed-size chunks for a lax.scan sweep.
 
     Returns (lo, hi, weight) each shaped (n_chunks, chunk); padded entries
     alias edge (0, 0) and carry weight 0, so every sweep body can neutralize
-    them the same way.  The chunk size balances scan length against cache
-    footprint: at least 16 edges per chunk (short scans — a chunked scatter
-    over few-edge chunks rewrites the whole accumulator per step), at most
-    ~16 MiB of stream words.
+    them the same way.  ``w`` (int32 0/1 per edge, default all-1) lets a
+    caller pass an already-padded edge partition — the hierarchy tier's
+    per-leaf shard of the session edge list.  The chunk size balances scan
+    length against cache footprint: at least 16 edges per chunk (short
+    scans — a chunked scatter over few-edge chunks rewrites the whole
+    accumulator per step), at most ~16 MiB of stream words.
     """
     P = int(lo.shape[0])
     chunk = max(1, min(P, max((1 << 22) // max(D, 1), 16)))
     n_chunks = -(-P // chunk)
     pad = n_chunks * chunk - P
-    w = jnp.concatenate([jnp.ones((P,), jnp.int32),
-                         jnp.zeros((pad,), jnp.int32)])
+    if w is None:
+        w = jnp.ones((P,), jnp.int32)
+    w = jnp.concatenate([w.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
     lo_c = jnp.concatenate([lo, jnp.zeros((pad,), jnp.int32)])
     hi_c = jnp.concatenate([hi, jnp.zeros((pad,), jnp.int32)])
     return (lo_c.reshape(n_chunks, chunk), hi_c.reshape(n_chunks, chunk),
@@ -249,7 +304,7 @@ def aggregate_masked(masked: Sequence[jnp.ndarray]) -> jnp.ndarray:
 # Session masks — the jit-traceable variant used inside the engines
 # ---------------------------------------------------------------------------
 def session_mask(shape, slot, num_slots: int, key,
-                 degree: int = 0) -> jnp.ndarray:
+                 degree: int = 0, perm=None) -> jnp.ndarray:
     """Pairwise mask for session position ``slot`` of ``num_slots``.
 
     Same cancellation identity (and same PRF tree — bit-identical when
@@ -258,16 +313,18 @@ def session_mask(shape, slot, num_slots: int, key,
     fold a per-session id in — and traceable in ``slot``, which is what lets
     the jitted buffer-write path mask a contribution for whatever slot it
     lands in without per-slot recompilation.  ``degree`` selects the mask
-    graph (0 = complete, even k = ring).  This is the host oracle for the
-    in-kernel PRF mask lanes (kernels/secure_agg.py): parity is bit-exact
-    and test-enforced.
+    graph (0 = complete, even k = k-regular); ``perm`` (``session_perm``)
+    relabels the k-ring into the random k-regular graph.  This is the host
+    oracle for the in-kernel PRF mask lanes (kernels/secure_agg.py):
+    parity is bit-exact and test-enforced.
     """
     k0, k1 = prf.key_words(key)
     return _signed_pair_sum(
-        k0, k1, slot, _neighbor_slots(slot, num_slots, degree), shape)
+        k0, k1, slot, _neighbor_slots(slot, num_slots, degree, perm), shape)
 
 
-def session_masks(shape, num_slots: int, key, degree: int = 0) -> jnp.ndarray:
+def session_masks(shape, num_slots: int, key, degree: int = 0,
+                  perm=None) -> jnp.ndarray:
     """All ``num_slots`` session masks at once -> (num_slots, *shape) int32.
 
     Two bit-identical strategies (int32 addition commutes mod 2^32):
@@ -289,7 +346,7 @@ def session_masks(shape, num_slots: int, key, degree: int = 0) -> jnp.ndarray:
             k0, k1, s, _neighbor_slots(jnp.int32(s), num_slots, degree),
             (D,)) for s in range(num_slots)]
         return jnp.stack(rows).reshape((num_slots,) + tuple(shape))
-    lo, hi = session_pairs(num_slots, degree)
+    lo, hi = session_pairs(num_slots, degree, perm)
     out = jnp.zeros((num_slots, D), jnp.int32)
     if int(lo.shape[0]) == 0:
         return out.reshape((num_slots,) + tuple(shape))
@@ -306,31 +363,21 @@ def session_masks(shape, num_slots: int, key, degree: int = 0) -> jnp.ndarray:
     return out.reshape((num_slots,) + tuple(shape))
 
 
-def recovery_mask(shape, present, num_slots: int, key,
-                  degree: int = 0) -> jnp.ndarray:
-    """Sum of the session masks of the ABSENT slots — the dropout shares.
+def recovery_sweep(shape, present, lo, hi, key, w=None) -> jnp.ndarray:
+    """Gated pairwise-stream sweep over an EXPLICIT edge list.
 
-    ``present``: (num_slots,) 1/0 (or bool) per slot — 1 for contributors
-    whose masked vector made it into the aggregate.  Since all ``num_slots``
-    masks sum to zero, the surviving contributions carry exactly
-    ``-sum_{absent} mask_s`` of un-cancelled mask; adding this recovery term
-    to the modular sum restores the true sum of the survivors.  In the real
-    protocol the surviving clients reconstruct these shares from the dropped
-    clients' Shamir-shared seeds; in the simulator the server (which knows
-    the session key) stands in for them.
-
-    One gated edge sweep instead of the old num_slots nested
-    ``session_mask`` calls: an edge (lo, hi) with both endpoints present or
-    both absent cancels out of the recovery term, so its gate
-    ``present[hi] - present[lo]`` is zero and only mixed edges contribute —
-    every edge stream is generated exactly once.  Edge chunks are bounded
-    to ~16 MiB of stream; peak memory is O(num_slots * D) and trace size is
-    O(1) in the session size.
+    The recovery primitive: sums ``(present[hi] - present[lo]) *
+    stream(lo, hi)`` over the given edges — an edge with both endpoints
+    present or both absent gates itself to zero, so only mixed edges
+    contribute, and each contributing edge stream is generated exactly
+    once.  ``w`` (0/1 per edge) neutralizes padding edges; partial sums
+    over disjoint edge partitions add up (mod 2^32) to the full sweep
+    bit-exactly, which is what lets the hierarchy tier split one session's
+    recovery across leaves and ``psum`` the partials.
     """
     present = jnp.asarray(present).astype(jnp.int32).reshape(-1)
     D = _size(shape)
     k0, k1 = prf.key_words(key)
-    lo, hi = session_pairs(num_slots, degree)
     if int(lo.shape[0]) == 0:
         return jnp.zeros(shape, jnp.int32)
 
@@ -344,8 +391,30 @@ def recovery_mask(shape, present, num_slots: int, key,
         return acc + jnp.sum(gate[:, None] * m, axis=0, dtype=jnp.int32), None
 
     total, _ = jax.lax.scan(body, jnp.zeros((D,), jnp.int32),
-                            _edge_chunks(lo, hi, D))
+                            _edge_chunks(lo, hi, D, w))
     return total.reshape(shape)
+
+
+def recovery_mask(shape, present, num_slots: int, key,
+                  degree: int = 0, perm=None) -> jnp.ndarray:
+    """Sum of the session masks of the ABSENT slots — the dropout shares.
+
+    ``present``: (num_slots,) 1/0 (or bool) per slot — 1 for contributors
+    whose masked vector made it into the aggregate.  Since all ``num_slots``
+    masks sum to zero, the surviving contributions carry exactly
+    ``-sum_{absent} mask_s`` of un-cancelled mask; adding this recovery term
+    to the modular sum restores the true sum of the survivors.  In the real
+    protocol the surviving clients reconstruct these shares from the dropped
+    clients' Shamir-shared seeds; in the simulator the server (which knows
+    the session key) stands in for them.
+
+    One gated edge sweep (``recovery_sweep``) over the session graph's
+    edges instead of the old num_slots nested ``session_mask`` calls.
+    Edge chunks are bounded to ~16 MiB of stream; peak memory is
+    O(num_slots * D) and trace size is O(1) in the session size.
+    """
+    lo, hi = session_pairs(num_slots, degree, perm)
+    return recovery_sweep(shape, present, lo, hi, key)
 
 
 def secure_aggregate(updates: Sequence[jnp.ndarray], bits: int,

@@ -73,26 +73,35 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
 # core/fl/secure_agg.py are both checked against the same spec:
 #   word(session_key, lo, hi, e) = threefry(pair_key(lo, hi), (e>>1, tag))[e&1]
 
-def mask_graph_neighbors(slot: int, num_slots: int, degree: int = 0):
+def mask_graph_neighbors(slot: int, num_slots: int, degree: int = 0,
+                         perm=None):
     """The slots ``slot`` shares a pairwise mask with (static Python form).
 
     degree 0 = complete graph; even k = ring ((slot +- j) % num_slots,
-    j = 1..k/2) — the SecAgg+-style sparse session graph.
+    j = 1..k/2) — the SecAgg+-style sparse session graph.  ``perm`` (a
+    host-readable permutation of range(num_slots)) relabels the ring into
+    the random k-regular session graph: the neighbours of ``slot`` become
+    ``perm[(perm^-1[slot] +- j) % num_slots]``.
     """
     if degree <= 0 or degree >= num_slots - 1:
         return [d for d in range(num_slots) if d != slot]
     assert degree % 2 == 0, degree
-    return [(slot + j) % num_slots for j in range(1, degree // 2 + 1)] \
-        + [(slot - j) % num_slots for j in range(1, degree // 2 + 1)]
+    if perm is None:
+        pos, vert = slot, list(range(num_slots))
+    else:
+        vert = [int(v) for v in perm]
+        pos = vert.index(slot)
+    return [vert[(pos + j) % num_slots] for j in range(1, degree // 2 + 1)] \
+        + [vert[(pos - j) % num_slots] for j in range(1, degree // 2 + 1)]
 
 
 def prf_session_mask(D: int, slot: int, num_slots: int, mask_key_words,
-                     degree: int = 0) -> jnp.ndarray:
+                     degree: int = 0, perm=None) -> jnp.ndarray:
     """The pairwise session mask of ``slot``, one pair stream at a time."""
     k0, k1 = jnp.asarray(mask_key_words, prf.U32)
     e = jnp.arange(D)
     total = jnp.zeros((D,), jnp.int32)
-    for d in mask_graph_neighbors(slot, num_slots, degree):
+    for d in mask_graph_neighbors(slot, num_slots, degree, perm):
         lo, hi = min(slot, d), max(slot, d)
         pk0, pk1 = prf.pair_keys(k0, k1, jnp.uint32(lo), jnp.uint32(hi))
         m = prf.stream_at(pk0, pk1, e)
@@ -109,7 +118,7 @@ def prf_uniforms(D: int, uniform_key_words) -> jnp.ndarray:
 
 def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
                       num_slots: int, mask_key_words, uniform_key_words,
-                      degree: int = 0) -> jnp.ndarray:
+                      degree: int = 0, perm=None) -> jnp.ndarray:
     """Oracle for the fused masked-push kernel: q(x * scale) + mask[slot]."""
     (D,) = x.shape
     xf = x.astype(jnp.float32) * scale
@@ -117,20 +126,29 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
     bit = (prf_uniforms(D, uniform_key_words) < (xf - floor)).astype(
         jnp.float32)
     q = (floor + bit).astype(jnp.int32)
-    return q + prf_session_mask(D, slot, num_slots, mask_key_words, degree)
+    return q + prf_session_mask(D, slot, num_slots, mask_key_words, degree,
+                                perm)
 
 
 def weighted_quantize_accum_prf(x: jnp.ndarray, weights: jnp.ndarray,
                                 uniforms: jnp.ndarray, scale: float,
                                 mask_key_words, num_slots: int = None,
-                                degree: int = 0) -> jnp.ndarray:
-    """Oracle for the in-kernel PRF mask lane of the fused accumulation."""
+                                degree: int = 0, perm=None,
+                                slot_offset: int = 0) -> jnp.ndarray:
+    """Oracle for the in-kernel PRF mask lane of the fused accumulation.
+
+    ``slot_offset`` places row c at global session slot ``slot_offset + c``
+    (the sharded-tier case where one leaf holds a contiguous slice of a
+    larger session's slots).
+    """
     C, D = x.shape
     if num_slots is None:
         num_slots = C
     masks = jnp.stack([
-        prf_session_mask(D, s, num_slots, mask_key_words, degree)
-        if s < num_slots else jnp.zeros((D,), jnp.int32) for s in range(C)])
+        prf_session_mask(D, slot_offset + s, num_slots, mask_key_words,
+                         degree, perm)
+        if slot_offset + s < num_slots else jnp.zeros((D,), jnp.int32)
+        for s in range(C)])
     return weighted_quantize_accum(x, weights, uniforms, scale, masks=masks)
 
 

@@ -99,16 +99,41 @@ def _neighbor_list(num_slots: int, degree: int):
             for o in offs]
 
 
+def _table_gather(col, idx):
+    """``col[idx]`` for a tiny in-kernel table, without a dynamic gather.
+
+    A select-sum over the (small) table length works on any ``idx`` tile
+    shape inside a Pallas body; ``col`` is (n,) int32 from the scalar meta
+    operand, n = num_slots of the session.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    n = col.shape[0]
+    tgt = idx[..., None]
+    iota = jax.lax.broadcasted_iota(jnp.int32, tgt.shape[:-1] + (n,),
+                                    tgt.ndim - 1)
+    sel = col.reshape((1,) * (tgt.ndim - 1) + (n,))
+    return jnp.sum(jnp.where(iota == tgt, sel, 0), axis=-1)
+
+
 def _session_mask_tile(k0, k1, slot, e, num_slots: int,
-                       degree: int = 0) -> jnp.ndarray:
+                       degree: int = 0, nbrs=None) -> jnp.ndarray:
     """In-kernel pairwise mask words for ``slot`` at element positions ``e``.
 
     Statically unrolled over the slot's mask-graph neighbours; each pair's
     stream words are regenerated from (session key, pair, position) — pure
-    VPU work on whatever tile shape ``e`` has, nothing read from memory.
+    VPU work on whatever tile shape ``e`` has.  ``nbrs`` — the (num_slots,
+    k) neighbour table of a RANDOM k-regular session graph (see
+    ``core.fl.secure_agg.neighbor_table``) riding the scalar meta operand —
+    replaces the static circulant enumeration when given; nothing
+    mask-shaped is read from memory either way.
     """
     mask = jnp.int32(0)  # broadcasts against any (slot, e) tile shape
-    for nb in _neighbor_list(num_slots, degree):
+    if nbrs is not None:
+        neighbor_cols = [(lambda s, j=j: _table_gather(nbrs[:, j], s))
+                         for j in range(nbrs.shape[1])]
+    else:
+        neighbor_cols = _neighbor_list(num_slots, degree)
+    for nb in neighbor_cols:
         d = nb(slot)
         lo = jnp.minimum(slot, d).astype(prf.U32)
         hi = jnp.maximum(slot, d).astype(prf.U32)
@@ -119,11 +144,15 @@ def _session_mask_tile(k0, k1, slot, e, num_slots: int,
 
 
 def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
-                              num_slots: int, degree: int, block: int):
-    # meta: (5,) uint32 = mask key words, uniform key words, slot id
+                              num_slots: int, degree: int, block: int,
+                              n_nbrs: int):
+    # meta: (5 [+ num_slots*n_nbrs],) uint32 = mask key words, uniform key
+    # words, slot id [, flattened random-graph neighbour table]
     k0, k1 = meta_ref[0], meta_ref[1]
     u0, u1 = meta_ref[2], meta_ref[3]
     slot = meta_ref[4].astype(jnp.int32)
+    nbrs = (meta_ref[5:5 + num_slots * n_nbrs].astype(jnp.int32)
+            .reshape(num_slots, n_nbrs) if n_nbrs else None)
     e = (pl.program_id(0) * block).astype(prf.U32) + _iota_u32(block)
 
     xf = x_ref[...].astype(jnp.float32) * scale
@@ -131,19 +160,24 @@ def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
     u = prf.bits_to_uniform(prf.stream_at(u0, u1, e, tag=prf.TAG_UNIFORM))
     bit = (u < (xf - floor)).astype(jnp.float32)
     q = (floor + bit).astype(jnp.int32)
-    out_ref[...] = q + _session_mask_tile(k0, k1, slot, e, num_slots, degree)
+    out_ref[...] = q + _session_mask_tile(k0, k1, slot, e, num_slots, degree,
+                                          nbrs)
 
 
 def quantize_mask_prf(x: jnp.ndarray, scale: float, slot, num_slots: int,
                       mask_key_words, uniform_key_words, *,
-                      degree: int = 0, block: int = DEFAULT_BLOCK,
+                      degree: int = 0, neighbors=None,
+                      block: int = DEFAULT_BLOCK,
                       interpret: bool = False) -> jnp.ndarray:
     """The fused masked-push hot loop: out = q(x * scale) + mask[slot].
 
     x: (D,) f32 already clipped/weighted/noised (the client pipeline's
     pre-encode value); ``mask_key_words`` / ``uniform_key_words``: (2,)
     uint32 PRF keys (see ``prf.key_words``); ``slot``: traced session
-    position; ``degree``: mask-graph degree (0 = complete).  Stochastic-
+    position; ``degree``: mask-graph degree (0 = complete).  ``neighbors``:
+    optional (num_slots, degree) table selecting a RANDOM k-regular session
+    graph (``secure_agg.neighbor_table``) instead of the static circulant
+    ring — it rides the scalar meta operand into the kernel.  Stochastic-
     rounding uniforms AND the slot's pairwise session mask are generated
     in-kernel from counters — neither ever exists in HBM.  Bit-identical to
     the host oracle ``ref.quantize_mask_prf``.
@@ -151,17 +185,25 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot, num_slots: int,
     (D,) = x.shape
     block = min(block, D)
     xp = _pad1(x.astype(jnp.float32), block)
-    meta = jnp.concatenate([
+    meta_parts = [
         jnp.asarray(mask_key_words, prf.U32).reshape(2),
         jnp.asarray(uniform_key_words, prf.U32).reshape(2),
-        jnp.asarray(slot, prf.U32).reshape(1)])
+        jnp.asarray(slot, prf.U32).reshape(1)]
+    n_nbrs = 0
+    if neighbors is not None:
+        n_nbrs = int(neighbors.shape[1])
+        meta_parts.append(
+            jnp.asarray(neighbors, prf.U32).reshape(num_slots * n_nbrs))
+    meta = jnp.concatenate(meta_parts)
     kern = functools.partial(_quantize_mask_prf_kernel, scale=scale,
-                             num_slots=num_slots, degree=degree, block=block)
+                             num_slots=num_slots, degree=degree, block=block,
+                             n_nbrs=n_nbrs)
+    meta_len = int(meta.shape[0])
     out = pl.pallas_call(
         kern,
         grid=(xp.shape[0] // block,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
-                  pl.BlockSpec((5,), lambda i: (0,))],
+                  pl.BlockSpec((meta_len,), lambda i: (0,))],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
         interpret=interpret,
@@ -210,7 +252,8 @@ def _masked_weighted_quantize_accum_kernel(x_ref, w_ref, u_ref, m_ref,
 
 def _prf_masked_weighted_quantize_accum_kernel(
         x_ref, w_ref, u_ref, meta_ref, out_ref, *, scale: float,
-        num_slots: int, degree: int, block_c: int, block_d: int):
+        num_slots: int, degree: int, block_c: int, block_d: int,
+        valid_rows: int, n_nbrs: int):
     """The in-kernel PRF mask lane: pairwise session masks are generated
     from counters while each (client, d) tile sits in VMEM — per-client
     encoded ints exist only as VMEM tiles with their mask already added.
@@ -225,6 +268,9 @@ def _prf_masked_weighted_quantize_accum_kernel(
         out_ref[...] = jnp.zeros_like(out_ref)
 
     k0, k1 = meta_ref[0], meta_ref[1]
+    offset = meta_ref[2].astype(jnp.int32)  # shard's first global slot
+    nbrs = (meta_ref[3:3 + num_slots * n_nbrs].astype(jnp.int32)
+            .reshape(num_slots, n_nbrs) if n_nbrs else None)
     x = x_ref[...].astype(jnp.float32)  # (block_c, block_d)
     w = w_ref[...].astype(jnp.float32)  # (block_c,)
     xf = x * w[:, None] * scale
@@ -232,15 +278,17 @@ def _prf_masked_weighted_quantize_accum_kernel(
     bit = (u_ref[...] < (xf - floor)).astype(jnp.float32)
     q = (floor + bit).astype(jnp.int32)
 
-    rows = (i * block_c + jax.lax.broadcasted_iota(
-        jnp.int32, (block_c, 1), 0))  # session slots of this client block
+    local = (i * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (block_c, 1), 0))  # row index within this shard
+    rows = offset + local  # global session slots of this client block
     e = (j * block_d + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_d), 1)).astype(prf.U32)
-    mask = _session_mask_tile(k0, k1, rows, e, num_slots, degree)
-    # padded client rows (slot >= num_slots) are not session members: their
-    # masks would not cancel, so the lane gates them to zero (their weight
-    # is already zero, so q is zero too)
-    mask = jnp.where(rows < num_slots, mask, 0)
+    mask = _session_mask_tile(k0, k1, rows, e, num_slots, degree, nbrs)
+    # padded client rows (local >= valid_rows) and rows beyond the session
+    # (global slot >= num_slots) are not session members: their masks would
+    # not cancel, so the lane gates them to zero (their weight is already
+    # zero, so q is zero too)
+    mask = jnp.where((local < valid_rows) & (rows < num_slots), mask, 0)
     out_ref[...] += jnp.sum(q + mask, axis=0)  # int32 add wraps mod 2^32
 
 
@@ -248,7 +296,8 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                             uniforms: jnp.ndarray, scale: float, *,
                             masks: jnp.ndarray = None,
                             mask_key_words=None, num_slots: int = None,
-                            mask_degree: int = 0,
+                            mask_degree: int = 0, slot_offset=0,
+                            neighbors=None,
                             block_c: int = DEFAULT_BLOCK_C,
                             block_d: int = DEFAULT_BLOCK_D,
                             interpret: bool = False) -> jnp.ndarray:
@@ -267,7 +316,12 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                        IN-KERNEL per tile (no HBM mask traffic at all).
                        ``num_slots`` bounds the session (default C); slots
                        beyond it (padding) are excluded from the lane.
-                       ``mask_degree`` selects the mask graph (0=complete).
+                       ``mask_degree`` selects the mask graph (0=complete),
+                       ``neighbors`` an optional (num_slots, degree) random
+                       k-regular table (``secure_agg.neighbor_table``), and
+                       ``slot_offset`` (traced ok) places row c at global
+                       session slot ``slot_offset + c`` — the hierarchy
+                       tier's per-leaf shard of one large session.
 
     Ragged C or D are padded up to tile multiples (padded rows carry zero
     weight) and the output is sliced back to (D,).
@@ -290,13 +344,20 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
     cd_spec = pl.BlockSpec((block_c, block_d), lambda j, i: (i, j))
     c_spec = pl.BlockSpec((block_c,), lambda j, i: (i,))
     if mask_key_words is not None:
+        n_nbrs = 0 if neighbors is None else int(neighbors.shape[1])
         kern = functools.partial(
             _prf_masked_weighted_quantize_accum_kernel, scale=scale,
             num_slots=num_slots, degree=mask_degree, block_c=block_c,
-            block_d=block_d)
-        meta = jnp.asarray(mask_key_words, prf.U32).reshape(2)
+            block_d=block_d, valid_rows=C, n_nbrs=n_nbrs)
+        meta_parts = [jnp.asarray(mask_key_words, prf.U32).reshape(2),
+                      jnp.asarray(slot_offset, prf.U32).reshape(1)]
+        if neighbors is not None:
+            meta_parts.append(
+                jnp.asarray(neighbors, prf.U32).reshape(num_slots * n_nbrs))
+        meta = jnp.concatenate(meta_parts)
+        meta_len = int(meta.shape[0])
         in_specs = [cd_spec, c_spec, cd_spec,
-                    pl.BlockSpec((2,), lambda j, i: (0,))]
+                    pl.BlockSpec((meta_len,), lambda j, i: (0,))]
         args = (x, weights, uniforms, meta)
     elif masks is not None:
         kern = functools.partial(_masked_weighted_quantize_accum_kernel,

@@ -31,6 +31,32 @@ def make_host_mesh(data: int = 2, model: int = 2):
     return make_mesh_compat((data, model), ("data", "model"))
 
 
+LEAF_AXIS = "leaf"
+
+
+def make_agg_mesh(num_leaves: int, devices=None):
+    """1-D mesh over the aggregation tier's leaf axis.
+
+    Each device on the axis is one LEAF aggregator of the hierarchical
+    tier (core/fl/hierarchy.py): it owns a contiguous shard of session
+    slots and produces a partial modular sum; the root combine is a psum
+    over this axis.  ``devices`` pins an explicit device list (e.g. one
+    TPU slice per leaf); default takes the first ``num_leaves`` of
+    ``jax.devices()``.
+    """
+    if devices is None:
+        avail = jax.devices()
+        if num_leaves > len(avail):
+            raise ValueError(
+                f"aggregation tier wants {num_leaves} leaves but only "
+                f"{len(avail)} devices are visible (force host devices with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        return make_mesh_compat((num_leaves,), (LEAF_AXIS,))
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(num_leaves),
+                             (LEAF_AXIS,))
+
+
 def axis_size(mesh, name: str) -> int:
     return mesh.shape.get(name, 1)
 

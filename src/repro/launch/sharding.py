@@ -183,3 +183,27 @@ def cache_specs(cache_sds, mesh, *, shard_seq: bool = False):
 def to_shardings(specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation-tier shardings (core/fl/hierarchy.py)
+# ---------------------------------------------------------------------------
+def hierarchy_specs(leaf_axis: str = "leaf"):
+    """PartitionSpecs of the sharded aggregation tier's session state.
+
+    The (num_leaves, leaf_buffer, D) contribution buffer and every
+    (num_leaves, leaf_buffer) per-slot scalar shard their LEADING axis over
+    the leaf mesh axis — each leaf aggregator holds exactly its own slots'
+    rows; model params, optimizer state and session-wide scalars replicate.
+    """
+    return {
+        "buffer": P(leaf_axis),    # (L, B_leaf, D): one leaf per device
+        "per_slot": P(leaf_axis),  # (L, B_leaf) staleness/weights/present
+        "replicated": P(),         # params / opt state / session scalars
+    }
+
+
+def hierarchy_shardings(mesh, leaf_axis: str = "leaf"):
+    """NamedShardings for ``ShardedAsyncServer``'s device-resident state."""
+    return {k: NamedSharding(mesh, s)
+            for k, s in hierarchy_specs(leaf_axis).items()}

@@ -65,14 +65,15 @@ def _max_diff(a, b):
 @pytest.mark.parametrize("mask_mode", ["tee", "tee_stream", "client"])
 def test_masked_async_matches_unmasked_at_staleness_zero(setup, mask_mode):
     """The issue's acceptance bar: the masked async buffer path agrees with
-    the unmasked engine at staleness 0 — bit-exact for the in-TEE fused mask
-    lane (masks cancel inside the accumulator), and to stochastic-rounding
-    tolerance for the streaming-TEE and client-side encode paths
-    (independent rounding draws)."""
+    the BATCHED unmasked engine at staleness 0 — bit-exact for the in-TEE
+    fused mask lane (masks cancel inside the accumulator), and to
+    stochastic-rounding tolerance for the streaming-TEE and client-side
+    encode paths (independent rounding draws)."""
     model, params, batch = setup
     rng = jax.random.PRNGKey(3)
     srv_off = _push_clients(
-        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant"),
+        AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                    stream_encode=False),
         model, params, batch, rng, 8)
     srv_m = _push_clients(
         AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
@@ -87,6 +88,36 @@ def test_masked_async_matches_unmasked_at_staleness_zero(setup, mask_mode):
     for k in ("update_norm", "clip_fraction", "weight_total"):
         assert float(srv_m.last_metrics[k]) == pytest.approx(
             float(srv_off.last_metrics[k]), abs=1e-5)
+
+
+def test_streamed_off_engine_matches_batched_off(setup):
+    """mask_mode='off' streams its encode per arrival by default now (the
+    ROADMAP item the tee_stream restructuring exposed): the buffer holds
+    int32 encodings, the flush is a plain modular sum, and the result
+    agrees with the batched engine to stochastic-rounding tolerance —
+    including a partial flush, which must gate out never-filled slots."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(4)
+    for n in (8, 5):  # full session + partial flush
+        srv_b = _push_clients(
+            AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                        stream_encode=False),
+            model, params, batch, rng, n)
+        srv_s = _push_clients(
+            AsyncServer(params, FL, buffer_size=8, staleness_mode="constant"),
+            model, params, batch, rng, n)
+        assert srv_s._streaming and not srv_b._streaming
+        assert srv_s._buf.dtype == jnp.int32  # encodings, not raw deltas
+        frng = jax.random.fold_in(rng, 77)
+        srv_b.flush(rng=frng)
+        srv_s.flush(rng=frng)
+        assert _max_diff(srv_b.params, srv_s.params) < 2e-5
+        assert float(srv_s.last_metrics["weight_total"]) == pytest.approx(n)
+    # no integer field -> the streamed engine cannot exist
+    fl0 = dataclasses.replace(FL, secure_agg_bits=0)
+    with pytest.raises(ValueError):
+        AsyncServer(params, fl0, buffer_size=4, stream_encode=True)
+    assert not AsyncServer(params, fl0, buffer_size=4)._streaming
 
 
 @pytest.mark.parametrize("drop", [1, 3, 7])

@@ -128,6 +128,119 @@ def test_ring_degree_validation():
     assert sa.effective_degree(8, 4) == 4
 
 
+# --- random k-regular session graphs (Bell et al.) ---------------------------
+@pytest.mark.parametrize("B,degree", [(8, 4), (12, 6), (9, 2)])
+def test_random_graph_masks_match_oracle_and_cancel(B, degree):
+    """The permuted-ring construction: host session_mask == the ref oracle
+    under the same permutation, every slot is exactly degree-regular, the
+    graph differs from the circulant ring, and all masks still cancel."""
+    D, key = 513, jax.random.PRNGKey(31)
+    perm = sa.session_perm(B, key)
+    assert sorted(np.asarray(perm).tolist()) == list(range(B))
+    kw = jnp.stack(prf.key_words(key))
+    rows = []
+    for s in range(B):
+        got = sa.session_mask((D,), s, B, key, degree, perm)
+        want = ref.prf_session_mask(D, s, B, kw, degree,
+                                    np.asarray(perm))
+        assert bool(jnp.all(got == want)), s
+        rows.append(got)
+        nbrs = ref.mask_graph_neighbors(s, B, degree, np.asarray(perm))
+        assert len(set(nbrs)) == degree and s not in nbrs
+        for d in nbrs:  # symmetry: the edge exists from both endpoints
+            assert s in ref.mask_graph_neighbors(d, B, degree,
+                                                 np.asarray(perm))
+    assert bool(jnp.all(sum(rows) == 0))  # cancellation, mod 2^32
+    # a different session key draws a different graph
+    perm2 = sa.session_perm(B, jax.random.PRNGKey(32))
+    assert not bool(jnp.all(perm == perm2))
+
+
+@pytest.mark.parametrize("degree", [4, 6])
+def test_random_graph_batched_paths_and_recovery(degree):
+    """session_masks / recovery_mask / neighbor_table agree with the
+    per-slot host path under one session permutation."""
+    B, D, key = 12, 257, jax.random.PRNGKey(33)
+    perm = sa.session_perm(B, key)
+    Mb = sa.session_masks((D,), B, key, degree, perm)
+    for s in (0, 5, B - 1):
+        assert bool(jnp.all(Mb[s] == sa.session_mask((D,), s, B, key,
+                                                     degree, perm)))
+    assert bool(jnp.all(Mb.sum(0) == 0))
+    present = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1, 0, 1, 1, 1], jnp.float32)
+    got = sa.recovery_mask((D,), present, B, key, degree, perm)
+    want = sum(Mb[s] for s in (1, 4, 8))
+    assert bool(jnp.all(got == want))
+    tbl = sa.neighbor_table(B, degree, perm)
+    assert tbl.shape == (B, degree)
+    for s in range(B):
+        assert sorted(np.asarray(tbl[s]).tolist()) == sorted(
+            ref.mask_graph_neighbors(s, B, degree, np.asarray(perm)))
+
+
+@pytest.mark.parametrize("D,block", [(1234, 512), (777, 4096)])
+def test_random_graph_kernel_lanes_bit_exact(D, block):
+    """The in-kernel mask lanes consume the (B, k) neighbour table and
+    reproduce the host/ref random-graph masks bit-exactly — push kernel and
+    fused accumulation lane, ragged shapes included."""
+    B, degree = 8, 4
+    key = jax.random.PRNGKey(D)
+    perm = sa.session_perm(B, key)
+    tbl = sa.neighbor_table(B, degree, perm)
+    mkw, ukw = _kw(1), _kw(2)
+    x = jax.random.normal(key, (D,)) * 2.0
+    for slot in (0, 3, B - 1):
+        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
+                                    degree=degree, neighbors=tbl,
+                                    block=block, interpret=True)
+        want = ref.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
+                                     degree, np.asarray(perm))
+        assert bool(jnp.all(got == want)), slot
+    xb = jax.random.normal(jax.random.fold_in(key, 1), (B, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (B,))
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (B, D))
+    got = ksa.weighted_quantize_accum(xb, w, u, float(1 << 20),
+                                      mask_key_words=mkw, mask_degree=degree,
+                                      neighbors=tbl, interpret=True)
+    want = ref.weighted_quantize_accum_prf(xb, w, u, float(1 << 20), mkw,
+                                           degree=degree,
+                                           perm=np.asarray(perm))
+    assert bool(jnp.all(got == want))
+    # full session: random-graph masks cancel inside the accumulator too
+    plain = ksa.weighted_quantize_accum(xb, w, u, float(1 << 20),
+                                        interpret=True)
+    assert bool(jnp.all(got == plain))
+
+
+@pytest.mark.parametrize("offset,C,B", [(2, 3, 8), (4, 4, 8), (0, 8, 8)])
+def test_accum_kernel_slot_offset_shards_one_session(offset, C, B):
+    """slot_offset places a row shard inside a LARGER session (the
+    hierarchy tier's per-leaf lane): kernel == oracle at every offset, and
+    shard partials sum to the full-session accumulation bit-exactly."""
+    D = 700
+    key = jax.random.PRNGKey(offset + C)
+    x = jax.random.normal(key, (B, D))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (B, D))
+    mkw = _kw(7)
+    got = ksa.weighted_quantize_accum(
+        x[offset:offset + C], w[offset:offset + C], u[offset:offset + C],
+        float(1 << 20), mask_key_words=mkw, num_slots=B, slot_offset=offset,
+        interpret=True)
+    want = ref.weighted_quantize_accum_prf(
+        x[offset:offset + C], w[offset:offset + C], u[offset:offset + C],
+        float(1 << 20), mkw, num_slots=B, slot_offset=offset)
+    assert bool(jnp.all(got == want))
+    # disjoint shards covering the whole session == one full-session call
+    parts = sum(ksa.weighted_quantize_accum(
+        x[o:o + 4], w[o:o + 4], u[o:o + 4], float(1 << 20),
+        mask_key_words=mkw, num_slots=B, slot_offset=o, interpret=True)
+        for o in (0, 4))
+    full = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
+                                       mask_key_words=mkw, interpret=True)
+    assert bool(jnp.all(parts == full))
+
+
 def test_pairwise_mask_batched_trace_is_constant_size():
     """The vectorized host path: trace size does not grow with the peer
     count (the old per-peer fold-in loop emitted O(B) PRF ops)."""
