@@ -1,30 +1,37 @@
-"""Aggregation-tier scaling: leaves x buffer x dim over a device mesh.
+"""Aggregation-tier scaling: leaves x buffer x dim x topology over a mesh.
 
 The paper scales FL by fanning clients over many aggregators whose partial
 sums combine hierarchically before the main aggregator applies the server
-step.  This sweep drives ``ShardedAsyncServer`` with a SIMULATED
-MILLION-CLIENT ARRIVAL STREAM — arrivals drawn from a configurable client
-population land in (K,)-batches via the vectorized multi-push — and
-measures, per (num_leaves, leaf_buffer, dim, mask_mode) point, the wall
-clock of one full session on the SERVER TIER's critical path:
+step.  This sweep drives ``ShardedAsyncServer`` — in BOTH session
+topologies: the flat sharded global session (``two_level=False``) and the
+session tree (``two_level=True``, per-leaf local sessions feeding a root
+session; logical leaves multiplex onto the mesh when leaves > devices) —
+with a SIMULATED MILLION-CLIENT ARRIVAL STREAM, and measures per
+(num_leaves, leaf_buffer, dim, mask_mode, topology) point:
 
   encode_ms   — mask_mode="client" only: the batched client-side encode.
                 In a fleet this runs concurrently on the clients' own
                 devices, so it is reported but NOT charged to the tier;
-  ingest_ms   — median cost of landing one NON-final arrival batch (one
-                vmapped encode for the enclave modes + one jitted scatter
-                routing rows to leaves).  Streamed into the gaps between
-                arrivals — off the round's critical path, exactly the
-                accounting bench_async.py established;
+  ingest_ms   — median cost of landing one NON-final arrival batch (the
+                destination-sharded encode + write).  Streamed into the
+                gaps between arrivals — off the round's critical path;
   flush_ms    — the final arrival batch plus the session apply: leaf
                 partial modular sums, the field-modulus psum, root
                 decode / central noise / server optimizer — the
                 aggregation work no round can avoid paying serially;
-  updates_per_s — session slots aggregated per second of flush time: the
-                tier's per-round aggregation throughput.  Work per LEAF
-                stays constant as leaves multiply the session, so this is
-                the column that must scale (``scaling_vs_base``, against
-                the smallest leaf count in the sweep — 1 by default).
+  dead_leaf_flush_ms — the FAULT-ISOLATION column: one whole leaf never
+                delivers (a straggler/dead aggregator) and the partial
+                session is flushed through the dropout-recovery path.
+                The flat topology pays a gated sweep over its shard of
+                the GLOBAL session graph on every leaf against a
+                replicated (B,) present vector; the session tree pays
+                per-leaf local sweeps plus one num_leaves-slot root
+                sweep.  This measures (rather than asserts) the
+                two-level fault-isolation win;
+  updates_per_s — session slots aggregated per second of (full) flush
+                time: the tier's per-round aggregation throughput
+                (``scaling_vs_base``, against the smallest leaf count in
+                the sweep per (mode, topology)).
 
 Configurations are interleaved round-robin (every configuration sees the
 same machine conditions, so the RATIOS are stable on a noisy host).
@@ -33,15 +40,17 @@ The sweep defaults to ``--degree 4`` (a SecAgg+-style sparse session
 graph): complete-graph pairwise masking is O(B^2) PRF streams per session,
 so it cannot scale with session size by construction — Bell et al.'s
 O(log n)-degree random graphs are the production configuration the tier
-targets, and the fixed degree keeps per-slot mask cost constant as leaves
-multiply the session.
+targets.  (Per-LEAF sessions of the tree re-canonicalize the degree
+against ``leaf_buffer``; see the README's small-B collusion note.)
 
 Run under a real mesh, or force host devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src:. python benchmarks/bench_hierarchy.py \\
       --leaves 1 --leaves 2 --leaves 4 --leaves 8 --dim 65536
 
-Writes results/hierarchy_scaling.csv.
+Flat points whose leaf count exceeds the visible device count are skipped
+(one leaf per device there); tree points multiplex.  Writes
+results/hierarchy_scaling.csv.
 """
 from __future__ import annotations
 
@@ -107,41 +116,79 @@ def _one_session(srv, payloads, mode):
     return enc, ingest, time.perf_counter() - t0
 
 
+def _dead_leaf_session(srv, payloads, mode):
+    """One session where the LAST leaf never delivers -> recovery flush_s.
+
+    All slots of leaves 0..L-2 arrive; the final leaf is a dead
+    aggregator.  The flush runs the dropout-recovery path (flat: gated
+    global-graph edge sweep on every leaf; tree: per-leaf local sweeps +
+    one root sweep for the absent root slot)."""
+    B, Bl = srv.buffer_size, srv.leaf_buffer
+    live = list(range(B - Bl))  # the last leaf's slots stay empty
+    s0 = 0
+    for p in payloads:
+        k = jax.tree.leaves(p)[0].shape[0]
+        take = [s for s in live[s0:s0 + k]]
+        if not take:
+            break
+        p = jax.tree.map(lambda x: x[:len(take)], p)
+        if mode == "client":
+            srv.push_encoded_batch(
+                srv.encode_push_batch(p, srv.version, slots=take))
+        else:
+            srv.push_batch(p, srv.version, slots=take)
+        s0 += len(take)
+    jax.block_until_ready(srv._buf)
+    t0 = time.perf_counter()
+    srv.flush()
+    jax.block_until_ready(srv.params["w"])
+    return time.perf_counter() - t0
+
+
 def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
                   population: int):
-    """All (mode, leaves, leaf_buffer) points at one dim, interleaved."""
+    """All (mode, topology, leaves, leaf_buffer) points at one dim."""
     fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32,
                   secure_agg_degree=degree)
     servers, streams = [], []
-    for mode, L, Bl in configs:
+    for mode, topo, L, Bl in configs:
         srv = ShardedAsyncServer({"w": jnp.zeros((D,), jnp.float32)}, fl,
                                  num_leaves=L, leaf_buffer=Bl,
-                                 mask_mode=mode, staleness_mode="constant")
+                                 mask_mode=mode, staleness_mode="constant",
+                                 two_level=(topo == "tree"))
         B = L * Bl
         assert B % batch == 0, (B, batch)
         per_round = B // batch
-        stream = _arrival_batches(population, (rounds + 1) * per_round,
+        stream = _arrival_batches(population, 2 * (rounds + 1) * per_round,
                                   batch, D, seed=L)
         servers.append(srv)
         streams.append(lambda s=stream, n=per_round:
                        [{"w": next(s)} for _ in range(n)])
-        _one_session(srv, streams[-1](), mode)  # compile round
+        _one_session(srv, streams[-1](), mode)  # compile the steady round
+        if L > 1:
+            _dead_leaf_session(srv, streams[-1](), mode)  # compile recovery
 
     samples = [[] for _ in configs]
+    dead = [[] for _ in configs]
     for _ in range(rounds):  # interleaved: drift hits all configs equally
-        for i, ((mode, L, Bl), srv) in enumerate(zip(configs, servers)):
+        for i, ((mode, topo, L, Bl), srv) in enumerate(
+                zip(configs, servers)):
             samples[i].append(_one_session(srv, streams[i](), mode))
+            if L > 1:
+                dead[i].append(
+                    _dead_leaf_session(srv, streams[i](), mode))
 
     out = []
     med = lambda v: float(np.median(v)) * 1e3
-    for (mode, L, Bl), rows in zip(configs, samples):
+    for (mode, topo, L, Bl), rows, drows in zip(configs, samples, dead):
         B = L * Bl
         flush_ms = med([f for _, _, f in rows])
-        out.append((mode, L, Bl, {
+        out.append((mode, topo, L, Bl, {
             "encode_ms": med([e for e, _, _ in rows]),
             "ingest_ms": med([float(np.median(a)) if a else 0.0
                               for _, a, _ in rows]),
             "flush_ms": flush_ms,
+            "dead_leaf_flush_ms": med(drows) if drows else 0.0,
             "updates_per_s": B / (flush_ms / 1e3),
         }))
     return out
@@ -151,13 +198,19 @@ def run(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--leaves", type=int, action="append", default=None,
                    help="leaf counts to sweep (repeatable; default 1,2,4,8 "
-                        "capped at the visible device count)")
+                        "capped at the device count for the flat topology; "
+                        "tree points multiplex past it)")
     p.add_argument("--leaf-buffer", type=int, default=8,
                    help="session slots per leaf")
     p.add_argument("--dim", type=int, action="append", default=None,
                    help="flattened model dim(s) (default 65536)")
     p.add_argument("--mode", action="append", default=None,
                    help="mask modes (default client and tee_stream)")
+    p.add_argument("--topology", action="append", default=None,
+                   choices=["flat", "tree"],
+                   help="session topologies (default both: flat = one "
+                        "sharded global session, tree = two-level leaf/"
+                        "root sessions)")
     p.add_argument("--degree", type=int, default=4,
                    help="mask-graph degree (default 4: SecAgg+-style sparse "
                         "random graph; 0 = complete, O(B^2) per session)")
@@ -173,36 +226,43 @@ def run(argv=None) -> None:
     leaves = args.leaves or [x for x in (1, 2, 4, 8) if x <= n_dev]
     dims = args.dim or [65_536]
     modes = args.mode or ["client", "tee_stream"]
+    topos = args.topology or ["flat", "tree"]
     batch = args.batch or args.leaf_buffer
     base_leaves = min(leaves)  # the scaling baseline is the SMALLEST sweep
     rows = []                  # point (1 leaf in the default sweep)
     for Dd in dims:
-        grid = [(mode, L, args.leaf_buffer) for mode in modes
-                for L in leaves]
+        grid = [(mode, topo, L, args.leaf_buffer)
+                for mode in modes for topo in topos for L in leaves
+                # flat = one leaf per device; tree multiplexes freely
+                if topo == "tree" or L <= n_dev]
         measured = _measure_grid(grid, Dd, args.degree, args.rounds, batch,
                                  args.population)
-        base = {mode: r["updates_per_s"]
-                for mode, L, _, r in measured if L == base_leaves}
-        for mode, L, Bl, r in measured:
-            r["scaling_vs_base"] = r["updates_per_s"] / base[mode]
-            rows.append((mode, L, Bl, Dd, batch, r))
-            emit(f"hierarchy/{mode}_L{L}_updates_per_s",
+        base = {(mode, topo): r["updates_per_s"]
+                for mode, topo, L, _, r in measured if L == base_leaves}
+        for mode, topo, L, Bl, r in measured:
+            r["scaling_vs_base"] = (r["updates_per_s"]
+                                    / base[(mode, topo)])
+            rows.append((mode, topo, L, Bl, Dd, batch, r))
+            emit(f"hierarchy/{mode}_{topo}_L{L}_updates_per_s",
                  r["updates_per_s"],
                  f"D={Dd};flush={r['flush_ms']:.1f}ms;"
+                 f"dead_leaf={r['dead_leaf_flush_ms']:.1f}ms;"
                  f"x{r['scaling_vs_base']:.2f} vs {base_leaves} "
                  f"leaf/leaves")
 
     os.makedirs(os.path.dirname(RESULTS_CSV), exist_ok=True)
     with open(RESULTS_CSV, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["mask_mode", "graph_degree", "num_leaves", "leaf_buffer",
-                    "session_slots", "dim", "arrival_batch", "encode_ms",
-                    "ingest_ms", "flush_ms", "updates_per_s",
-                    "base_leaves", "scaling_vs_base"])
-        for mode, L, Bl, Dd, bt, r in rows:
-            w.writerow([mode, args.degree, L, Bl, L * Bl, Dd, bt,
+        w.writerow(["mask_mode", "topology", "graph_degree", "num_leaves",
+                    "leaf_buffer", "session_slots", "dim", "arrival_batch",
+                    "encode_ms", "ingest_ms", "flush_ms",
+                    "dead_leaf_flush_ms", "updates_per_s", "base_leaves",
+                    "scaling_vs_base"])
+        for mode, topo, L, Bl, Dd, bt, r in rows:
+            w.writerow([mode, topo, args.degree, L, Bl, L * Bl, Dd, bt,
                         f"{r['encode_ms']:.3f}", f"{r['ingest_ms']:.3f}",
                         f"{r['flush_ms']:.3f}",
+                        f"{r['dead_leaf_flush_ms']:.3f}",
                         f"{r['updates_per_s']:.1f}", base_leaves,
                         f"{r['scaling_vs_base']:.3f}x"])
     emit("hierarchy/results_csv", 0.0, RESULTS_CSV)

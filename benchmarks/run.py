@@ -8,6 +8,8 @@
   bench_comm            Secure-agg bytes vs quantization width
   bench_fa_bits         FA bit-protocol estimator error scaling
   bench_kernels         Kernel micro-timings + TPU roofline context
+  bench_hierarchy       Aggregation-tier scaling (leaves x buffer x dim,
+                        flat vs two-level session tree, dead-leaf flush)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -26,9 +28,10 @@ def main() -> None:
     import benchmarks.bench_comm as b5
     import benchmarks.bench_fa_bits as b6
     import benchmarks.bench_kernels as b7
+    import benchmarks.bench_hierarchy as b8
 
     failures = 0
-    for mod in (b1, b2, b3, b4, b5, b6, b7):
+    for mod in (b1, b2, b3, b4, b5, b6, b7, b8):
         try:
             mod.run()
         except Exception:

@@ -256,6 +256,21 @@ class FLConfig:
     # know every session's mask partners in advance).  True falls back to
     # the deterministic circulant ring of PR 3.
     secure_agg_circulant: bool = False
+    # --- hierarchical aggregation tier (core/fl/hierarchy.py) ---
+    # number of leaf aggregators and session slots per leaf.  0 = unset:
+    # ShardedAsyncServer then requires explicit constructor arguments.
+    # num_leaves may EXCEED the visible device count — logical leaves are
+    # multiplexed onto the leaf mesh axis (launch.mesh.make_leaf_mesh).
+    num_leaves: int = 0
+    leaf_buffer: int = 0
+    # session topology of the tier: False = one global mask session sharded
+    # across leaves (the PR 4 layout — recovery edges cross leaves); True =
+    # a SESSION TREE: every leaf runs its own local mask session over its
+    # leaf_buffer slots and flushes a masked partial into a root session
+    # over num_leaves slots.  Fault-isolated: one leaf's dropout recovery
+    # sweeps only that leaf's edges, and a whole dead leaf is recovered at
+    # the root with one num_leaves-slot sweep.
+    two_level: bool = False
     server_opt: str = "fedavg"  # fedavg | fedadam | fedadagrad | fedavgm
     server_lr: float = 1.0
     server_beta1: float = 0.9

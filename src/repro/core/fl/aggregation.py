@@ -19,7 +19,11 @@ buffer) is the same pointwise pipeline:
 engines share the exact arithmetic; the tree-shaped helpers serve the sync
 round's chunked scan (core/fl/round.py) and the flat ``aggregate_buffer``
 serves the async engine's stacked (B, D) device buffer (core/fl/async_fl.py),
-optionally through the fused Pallas kernels in repro/kernels.
+optionally through the fused Pallas kernels in repro/kernels.  Pairwise
+masking always travels as a first-class ``secure_agg.MaskSession``
+(built here via ``make_mask_session`` so the graph degree/permutation stay
+aligned with the spec); kernels consume it through ``_kernel_session``'s
+``SessionMeta`` view.
 """
 from __future__ import annotations
 
@@ -51,6 +55,10 @@ class AggregationSpec(NamedTuple):
     # sparse-graph topology: random k-regular neighbourhoods drawn per
     # session from the session key (Bell et al.), vs the circulant ring
     random_graph: bool = False
+    # the secure-agg field of a full aggregate (power of two dividing
+    # 2^32) — travels with every MaskSession so reduced-field transports
+    # know the session's wire residue width
+    field_modulus: int = 1 << 32
 
 
 def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
@@ -80,22 +88,45 @@ def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
         mask_degree=degree,
         random_graph=(degree > 0
                       and not getattr(fl_cfg, "secure_agg_circulant", False)),
+        field_modulus=sa.field_modulus(fl_cfg.secure_agg_bits,
+                                       num_contributors)
+        if use_sa else 1 << 32,
     )
 
 
-def mask_graph_perm(spec: AggregationSpec, session_key):
-    """The session's mask-graph permutation, or None.
+def make_mask_session(spec: AggregationSpec, key, *,
+                      num_slots: Optional[int] = None,
+                      slot_offset=0) -> Optional[sa.MaskSession]:
+    """The :class:`secure_agg.MaskSession` of one aggregation, or None.
 
-    Random k-regular sessions (``spec.random_graph``) relabel the k-ring
-    through a ``secure_agg.session_perm`` drawn from the session key; the
-    complete graph and the circulant fallback need none.  Every consumer
-    of one session's masks (client encode, tee lanes, recovery) must use
-    the SAME permutation or cancellation breaks — deriving it from the
-    session key here is what keeps them aligned.
+    One construction point keeps every consumer of a session's masks
+    (client encode, tee lanes, recovery, kernels) aligned: the graph
+    degree is canonicalized against the session size (``num_slots``
+    defaults to the spec's contributor count; a leaf session of the
+    two-level tier passes its own, smaller size) and the random k-regular
+    relabelling (``spec.random_graph``) is drawn from the session key —
+    so any two holders of the same key derive the SAME graph, which is
+    what cancellation needs.  Traceable in ``key``/``slot_offset``.
     """
-    if spec.mask_degree <= 0 or not spec.random_graph or session_key is None:
+    if key is None:
         return None
-    return sa.session_perm(spec.num_contributors, session_key)
+    n = spec.num_contributors if num_slots is None else num_slots
+    # the field is the ENGINE's (a leaf partial still combines into the
+    # full aggregate at the root), so it does not shrink with num_slots
+    return sa.make_session(key, n, degree=spec.mask_degree,
+                           random_graph=spec.random_graph,
+                           slot_offset=slot_offset,
+                           modulus=spec.field_modulus)
+
+
+def _kernel_session(session: sa.MaskSession):
+    """The kernels' ``SessionMeta`` view of a protocol-layer session."""
+    from repro.kernels import secure_agg as _ksa
+    return _ksa.SessionMeta(
+        key_words=jnp.stack(session.key_words()),
+        num_slots=session.num_slots, degree=session.degree,
+        slot_offset=session.slot_offset,
+        neighbors=session.neighbor_table())
 
 
 # ---------------------------------------------------------------------------
@@ -124,34 +155,38 @@ def decode_tree(tree, scale: float):
 # ---------------------------------------------------------------------------
 # Pairwise session masking (the in-engine secure-aggregation hot path)
 # ---------------------------------------------------------------------------
-def mask_tree(tree, slot, num_slots: int, key, degree: int = 0, perm=None):
+def mask_tree(tree, slot, session: sa.MaskSession):
     """Session masks shaped like ``tree`` for one contributor slot.
 
-    Each leaf gets an independent pairwise mask stream (key folded by leaf
-    index); summed over all ``num_slots`` slots every leaf cancels to zero
-    mod 2^32, so adding these to the encoded int32 tree leaves the round's
-    modular sum bit-identical.  ``perm`` selects the random k-regular
-    session graph (shared by all leaves — the graph is per session, the
-    streams per leaf).
+    Each pytree leaf gets an independent pairwise mask stream (session key
+    folded by leaf index); summed over all of the session's slots every
+    leaf cancels to zero mod 2^32, so adding these to the encoded int32
+    tree leaves the round's modular sum bit-identical.  The session's
+    graph (degree, permutation) is shared by all pytree leaves — the graph
+    is per session, the streams per leaf.
     """
     leaves, treedef = jax.tree.flatten(tree)
     return jax.tree.unflatten(treedef, [
-        sa.session_mask(x.shape, slot, num_slots,
-                        jax.random.fold_in(key, i), degree, perm)
+        sa.session_mask(x.shape, slot, session.num_slots,
+                        jax.random.fold_in(session.key, i), session.degree,
+                        session.perm)
         for i, x in enumerate(leaves)])
 
 
-def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSpec,
-                               session_key, rng, *, use_pallas: bool = False):
+def encode_masked_contribution(x: jnp.ndarray, weight, slot,
+                               spec: AggregationSpec,
+                               session: sa.MaskSession, rng, *,
+                               use_pallas: bool = False):
     """The CLIENT side of the in-path masked protocol, on a flat delta.
 
     clip -> weight -> [device noise] -> stochastic fixed-point encode -> add
-    the slot's pairwise session mask.  This is the exact arithmetic of the
-    unmasked ``aggregate_buffer`` row pipeline, so a masked buffer decodes to
-    the same aggregate (up to independent stochastic-rounding draws).  The
-    server only ever receives the returned masked int32 vector; the norm /
-    clip indicator are client-side metrics (in production they ride the same
-    secure channel as aggregated scalars).
+    the pairwise mask of ``slot`` (an ABSOLUTE position) in ``session``.
+    This is the exact arithmetic of the unmasked ``aggregate_buffer`` row
+    pipeline, so a masked buffer decodes to the same aggregate (up to
+    independent stochastic-rounding draws).  The server only ever receives
+    the returned masked int32 vector; the norm / clip indicator are
+    client-side metrics (in production they ride the same secure channel as
+    aggregated scalars).
 
     The encode+mask tail is one pass of the counter-based PRF pipeline:
     stochastic-rounding uniforms and the slot's pairwise session mask both
@@ -163,23 +198,16 @@ def encode_masked_contribution(x: jnp.ndarray, weight, slot, spec: AggregationSp
     Returns (masked int32 (D,), pre-clip norm, was_clipped in {0., 1.}).
     """
     xw, nrm, was_clipped = _clip_weight_noise(x, weight, spec, rng)
-    perm = mask_graph_perm(spec, session_key)
     if use_pallas:
         from repro.kernels import secure_agg as _ksa
         u_words = prf.key_words(jax.random.fold_in(rng, 2))
         masked = _ksa.quantize_mask_prf(
-            xw, spec.sa_scale, slot, spec.num_contributors,
-            jnp.stack(prf.key_words(session_key)), jnp.stack(u_words),
-            degree=spec.mask_degree,
-            neighbors=sa.neighbor_table(spec.num_contributors,
-                                        spec.mask_degree, perm)
-            if perm is not None else None,
+            xw, spec.sa_scale, slot, jnp.stack(u_words),
+            _kernel_session(session),
             interpret=jax.default_backend() != "tpu")
     else:
         q = _stream_quantize(xw, spec.sa_scale, rng)
-        masked = q + sa.session_mask(xw.shape, slot, spec.num_contributors,
-                                     session_key, spec.mask_degree,
-                                     perm)  # wraps mod 2^32
+        masked = q + session.mask(xw.shape, slot)  # wraps mod 2^32
     return masked, nrm, was_clipped
 
 
@@ -235,8 +263,8 @@ def encode_contribution(x: jnp.ndarray, weight, spec: AggregationSpec, rng):
 
 def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
                             total_weight, spec: AggregationSpec,
-                            session_key, rng, *, recover: bool = True,
-                            masked: bool = True):
+                            session: Optional[sa.MaskSession], rng, *,
+                            recover: bool = True, masked: bool = True):
     """The SERVER side of the in-path masked protocol: modular sum + decode.
 
     mbuf:    (B, D) int32 — per-slot MASKED fixed-point contributions (what
@@ -244,8 +272,10 @@ def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
              anything else.
     present: (B,) 1/0 — slots whose contributor delivered.  Absent slots are
              gated out and their un-cancelled mask shares are re-added via
-             ``recovery_mask`` (dropout recovery), so the decode yields the
-             exact sum of the survivors.
+             the session's recovery sweep (dropout recovery), so the decode
+             yields the exact sum of the survivors.
+    session: the rows' :class:`secure_agg.MaskSession` (None allowed only
+             when ``masked=False`` — there are no shares to recover).
     recover: static.  A session the caller KNOWS is complete (every slot
              delivered — the steady-state buffer apply) can skip both the
              present-gating and the recovery sweep: all pairwise masks
@@ -263,9 +293,7 @@ def aggregate_masked_buffer(mbuf: jnp.ndarray, present: jnp.ndarray,
         pres_i = jnp.asarray(present).astype(jnp.int32)
         acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # int32, wraps mod 2^32
         if masked:
-            acc = acc + sa.recovery_mask((D,), present, B, session_key,
-                                         spec.mask_degree,
-                                         mask_graph_perm(spec, session_key))
+            acc = acc + session.recovery((D,), present)
     else:
         acc = jnp.sum(mbuf, axis=0)  # full session: masks cancel exactly
     # same TEE-noise stream derivation as aggregate_buffer
@@ -318,18 +346,17 @@ def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
 # ---------------------------------------------------------------------------
 def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
                         uniforms, noise, spec: AggregationSpec, *,
-                        mask_key=None, slot_offset=0,
-                        num_slots: Optional[int] = None,
+                        session: Optional[sa.MaskSession] = None,
                         use_pallas: bool = False):
     """Clip/weight/[noise]/encode[+mask] a block of rows and modular-sum it.
 
     The per-contribution half of ``aggregate_buffer``, factored out so a
-    SHARD of a larger session can run it: the rows of ``buf`` occupy global
-    session slots ``slot_offset .. slot_offset + B - 1`` of a
-    ``num_slots``-slot mask session (defaults: one whole session).  Because
-    the int32 accumulation wraps mod 2^32, partial sums over disjoint row
-    shards combine (``psum``) to the full buffer's accumulator bit-exactly —
-    the identity the hierarchical tier is built on.
+    SHARD of a larger session can run it: the rows of ``buf`` occupy
+    session slots ``session.slot_offset .. slot_offset + B - 1`` of the
+    ``session.num_slots``-slot mask session (``session=None`` = unmasked).
+    Because the int32 accumulation wraps mod 2^32, partial sums over
+    disjoint row shards combine (``psum``) to the full buffer's accumulator
+    bit-exactly — the identity the hierarchical tier is built on.
 
     ``uniforms`` / ``noise`` are the PRE-SLICED (B, D) blocks of the
     session-wide draws (or None), so a shard consumes exactly the rows of
@@ -337,12 +364,10 @@ def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
 
     Returns (acc (D,) int32|f32, pre-clip norms (B,), was_clipped (B,)).
     """
-    if mask_key is not None and not spec.use_secure_agg:
+    if session is not None and not spec.use_secure_agg:
         raise ValueError("pairwise masks require the secure-agg integer field "
                          "(spec.use_secure_agg)")
     B, D = buf.shape
-    if num_slots is None:
-        num_slots = B
     interpret = jax.default_backend() != "tpu"
     if use_pallas:
         from repro.kernels import dp_clip as _kclip
@@ -364,35 +389,28 @@ def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
         else:  # noise folded in pre-quantization; weights already applied
             qx = buf.astype(jnp.float32) * row_w[:, None] + noise
             qw = jnp.ones((B,), jnp.float32)
-        perm = mask_graph_perm(spec, mask_key)
         if use_pallas:
             from repro.kernels import secure_agg as _ksa
-            mkw = (None if mask_key is None
-                   else jnp.stack(prf.key_words(mask_key)))
             acc = _ksa.weighted_quantize_accum(
                 qx, qw, uniforms, spec.sa_scale,
-                mask_key_words=mkw, num_slots=num_slots,
-                mask_degree=spec.mask_degree, slot_offset=slot_offset,
-                neighbors=sa.neighbor_table(num_slots, spec.mask_degree, perm)
-                if (mkw is not None and perm is not None) else None,
+                session=None if session is None else _kernel_session(session),
                 interpret=interpret)
         else:
             xf = qx * qw[:, None] * spec.sa_scale
             floor = jnp.floor(xf)
             bit = (uniforms < (xf - floor)).astype(jnp.float32)
             q = (floor + bit).astype(jnp.int32)
-            if mask_key is not None:
-                if num_slots == B and isinstance(slot_offset, int) \
-                        and slot_offset == 0:
+            if session is not None:
+                if session.num_slots == B \
+                        and isinstance(session.slot_offset, int) \
+                        and session.slot_offset == 0:
                     # one deduplicated edge sweep for the whole session
-                    masks = sa.session_masks((D,), B, mask_key,
-                                             spec.mask_degree, perm)
+                    masks = session.masks((D,))
                 else:  # a shard of the session: this block's rows only
-                    slots = slot_offset + jnp.arange(B, dtype=jnp.int32)
+                    slots = session.slot_offset + jnp.arange(B,
+                                                             dtype=jnp.int32)
                     masks = jax.vmap(
-                        lambda s: sa.session_mask((D,), s, num_slots,
-                                                  mask_key, spec.mask_degree,
-                                                  perm))(slots)
+                        lambda s: session.mask((D,), s))(slots)
                 q = q + masks  # wraps mod 2^32
             acc = q.sum(0)  # wraps mod 2^32
     else:
@@ -421,22 +439,21 @@ def buffer_noise_and_uniforms(rng, B: int, D: int, spec: AggregationSpec):
 
 def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
                      spec: AggregationSpec, rng, *,
-                     mask_key=None,
+                     session: Optional[sa.MaskSession] = None,
                      use_pallas: bool = False):
     """One batched on-device aggregation of a stacked contribution buffer.
 
     buf:      (B, D) f32 — raw (unclipped) flattened contributions.
     weights:  (B,) f32 — per-contribution weight (staleness discount x
               validity mask); zero rows are excluded from the aggregate.
-    mask_key: optional pairwise-session PRNGKey — every row of the session
+    session:  optional pairwise :class:`secure_agg.MaskSession` — every row
               gets its slot's pairwise PRF mask added to its encoded ints
               inside the fused accumulation (the in-TEE masked path).  The
               masks cancel in the modular sum, and on the Pallas path they
               are generated IN-KERNEL per VMEM tile from counters
               (``prf`` streams) — no (B, D) mask array ever exists in HBM.
               The jnp fallback materializes them via one deduplicated
-              ``secure_agg.session_masks`` sweep.  Requires
-              ``spec.use_secure_agg``.
+              ``session.masks`` sweep.  Requires ``spec.use_secure_agg``.
 
     Returns (mean_delta_flat (D,), stats dict). The whole computation is
     traceable: clip scales from per-row squared norms, weighting, stochastic
@@ -450,7 +467,7 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
     if noise is not None:
         noise = noise * (spec.dev_noise * weights)[:, None]
     acc, nrm, was_clipped = encode_and_sum_rows(
-        buf, weights, uniforms, noise, spec, mask_key=mask_key,
+        buf, weights, uniforms, noise, spec, session=session,
         use_pallas=use_pallas)
 
     w_total = weights.sum()

@@ -91,8 +91,9 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
         w = staleness_weight(staleness, staleness_mode, staleness_exponent)
         w = w * valid  # empty slots contribute nothing
         skey = jax.random.fold_in(rng, 0x7EE) if mask_mode == "tee" else None
+        sess = agg.make_mask_session(spec, skey)
         mean_flat, stats = agg.aggregate_buffer(buf, w, spec, rng,
-                                                mask_key=skey,
+                                                session=sess,
                                                 use_pallas=use_pallas)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
@@ -146,9 +147,9 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
              clips, session_key, rng):
         w = weights * present
         w_total = w.sum()
+        sess = agg.make_mask_session(spec, session_key) if masked else None
         mean_flat = agg.aggregate_masked_buffer(mbuf, present, w_total, spec,
-                                                session_key, rng,
-                                                recover=recover,
+                                                sess, rng, recover=recover,
                                                 masked=masked)
         mean_delta = unravel(mean_flat)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
@@ -315,8 +316,9 @@ class AsyncServer:
                 flat_d, _ = ravel_pytree(delta)
                 w = staleness_weight(s, s_mode, s_exp)
                 if masked:
+                    sess = agg.make_mask_session(spec, session_key)
                     row, nrm, clipped = agg.encode_masked_contribution(
-                        flat_d, w, slot, spec, session_key, rng,
+                        flat_d, w, slot, spec, sess, rng,
                         use_pallas=use_pallas)
                 else:
                     row, nrm, clipped = agg.encode_contribution(

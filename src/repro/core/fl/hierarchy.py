@@ -1,45 +1,63 @@
-"""Sharded hierarchical aggregation tier — masked rounds across a device mesh.
+"""Hierarchical aggregation tier — masked rounds across a device mesh.
 
 The paper's production architecture scales FL by fanning clients out over
 MANY aggregators that combine partial sums hierarchically before the main
 aggregator applies the server step; a single host's buffer caps round size
 otherwise.  Because masked secure aggregation is a MODULAR sum (int32
 addition wraps mod 2^32, associative and commutative *exactly*), partial
-sums commute across shards: a leaf/root tier preserves bit-exactness while
-multiplying ingest and flush throughput.
+sums commute across shards: any leaf/root tier preserves bit-exactness
+while multiplying ingest and flush throughput.
 
-Topology (one session = ``num_leaves * leaf_buffer`` global slots):
+Two session topologies share the tier's state layout (a device-resident
+(num_leaves, leaf_buffer, D) buffer sharded over the "leaf" mesh axis):
 
-                 clients ──► batched ingest (one jitted scatter)
+**One sharded global session** (``two_level=False``, the PR 4 layout):
+``num_leaves * leaf_buffer`` slots of ONE mask session; each leaf runs the
+single-host row pipeline over its contiguous slot shard plus its shard of
+the gated recovery edge sweep — recovery edges CROSS leaves, so a dropout
+anywhere sweeps a partition of the whole session graph.
+
+**A session tree** (``two_level=True``, the paper's tiered service): every
+leaf runs its OWN local mask session over its ``leaf_buffer`` slots and
+flushes a still-masked partial into a ROOT session over ``num_leaves``
+slots:
+
+                 clients ──► destination-sharded ingest (encode per leaf)
                      │
       ┌──────────────┼──────────────────┐
       ▼              ▼                  ▼
-   leaf 0         leaf 1    ...      leaf L-1      (shard_map over "leaf")
-   slots [0,Bl)   [Bl,2Bl)           [.., L*Bl)
-   local modular  partial sums  +  its shard of the gated
-   recovery-edge sweep (cross-shard dropout recovery)
-      │              │                  │
+   leaf 0         leaf 1    ...      leaf L-1      (shard_map over "leaf";
+   LOCAL session  LOCAL session      LOCAL session  several logical leaves
+   over Bl slots  over Bl slots      over Bl slots  per device when
+   gated Σ + own  gated Σ + own      gated Σ + own  L > device count)
+   recovery       recovery           recovery
+   + root mask[0] + root mask[1]     + root mask[L-1]   (root session,
+      │              │                  │                L slots)
       └─────── field-modulus psum (int32, mod 2^32) ──────┐
                                                           ▼
-                                                        root:
-                                      dequantize → weight-normalize →
-                                      central DP noise (once) → server opt
+                                root: + root recovery for DEAD leaves →
+                                dequantize → weight-normalize →
+                                central DP noise (once) → server opt
 
-Every leaf runs the SAME row pipeline as the single-host engines
-(``aggregation.encode_and_sum_rows`` — including the fused Pallas
-``weighted_quantize_accum``/PRF mask lanes, pointed at its global slot
-range via ``slot_offset``), so the sharded flush is bit-identical to the
-single-host ``AsyncServer`` with ``buffer_size = num_leaves * leaf_buffer``
-for ALL mask modes ("off" streamed / "client" / "tee" / "tee_stream"),
-ring and random k-regular mask graphs, with and without dropout — enforced
-by tests/test_hierarchy.py under 8 forced host devices.
+The tree is FAULT-ISOLATED: a client dropout inside leaf l is recovered by
+sweeping only leaf l's local session edges (an O(Bl * k) sweep over the
+leaf's own present vector — no global state), and a whole dead leaf is one
+absent slot of the L-slot root session, recovered with a single root
+sweep.  In the sharded-global-session layout the same dropout gates a
+partition of an O(B * k) edge list on EVERY leaf against a replicated
+(B,) present vector.  Decoded results are bit-identical either way — and
+bit-identical to the single-host engines at
+``buffer_size = num_leaves * leaf_buffer`` for all four mask modes
+("off" streamed / "client" / "tee" / "tee_stream"), with and without
+client and whole-leaf dropout — enforced by tests/test_hierarchy.py.
 
-``ShardedAsyncServer`` is the facade: a device-resident
-(num_leaves, leaf_buffer, D) buffer sharded over the leaf axis
-(launch/sharding.hierarchy_shardings), batched arrival ingestion — a (K,)
-batch of pushes is encoded with one vmapped jitted call and routed to
-leaves in ONE jitted scatter, no per-push Python loop — and the sharded
-flush steps above.
+``ShardedAsyncServer`` is the facade.  Batched arrival ingestion is
+DESTINATION-SHARDED: a (K,) batch of pushes is routed (a host-side index
+shuffle, no row math) to its destination leaves and the
+clip/weight/encode[+mask] pipeline runs INSIDE a shard_map, each leaf
+encoding only the rows addressed to it — no central (K, D) encode precedes
+the scatter, so ingest bandwidth scales with the leaf count.  Rows are
+bit-identical to sequential single pushes (same per-slot PRF streams).
 """
 from __future__ import annotations
 
@@ -47,6 +65,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
@@ -59,11 +78,42 @@ from repro.core.fl import aggregation as agg
 from repro.core.fl import secure_agg as sa
 from repro.core.fl.async_fl import ClientPush, staleness_weight
 from repro.core.fl.server_opt import build_server_opt
-from repro.launch.mesh import LEAF_AXIS, make_agg_mesh
+from repro.launch.mesh import (LEAF_AXIS, leaves_per_device, make_agg_mesh,
+                               make_leaf_mesh)
 from repro.launch.sharding import hierarchy_shardings
 
+# fold-in tags deriving the session tree's keys from one round key
+# (disjoint from the 0x5E55/0x7EE/0xDEE engine stream tags and from
+# secure_agg.GRAPH_PERM_TAG)
+LEAF_SESSION_TAG = 0x1EAF
+ROOT_SESSION_TAG = 0x4007
 
-def _partition_edges(num_slots: int, degree: int, perm, num_leaves: int):
+
+def leaf_session(spec, session_key, leaf, leaf_buffer: int) -> sa.MaskSession:
+    """Leaf ``leaf``'s LOCAL mask session of the session tree.
+
+    Keyed by (round session key, leaf index) — disjoint leaves draw
+    disjoint pair streams (and, for random k-regular graphs, independent
+    per-leaf permutations), which is exactly what makes the tree
+    fault-isolated: no stream is shared across leaves, so no recovery
+    sweep ever crosses a leaf boundary.  Traceable in ``leaf``.
+    """
+    key = jax.random.fold_in(
+        jax.random.fold_in(session_key, LEAF_SESSION_TAG), leaf)
+    return agg.make_mask_session(spec, key, num_slots=leaf_buffer)
+
+
+def root_session(spec, session_key, num_leaves: int) -> sa.MaskSession:
+    """The ROOT session over ``num_leaves`` slots: each alive leaf adds the
+    mask of its root slot to the partial it flushes upward, so the root
+    combine only ever sees masked leaf partials; a dead leaf is one absent
+    root slot, recovered by a single ``num_leaves``-sized sweep."""
+    return agg.make_mask_session(
+        spec, jax.random.fold_in(session_key, ROOT_SESSION_TAG),
+        num_slots=num_leaves)
+
+
+def _partition_edges(session: sa.MaskSession, num_leaves: int):
     """Split the session mask graph's edge list into ``num_leaves`` shards.
 
     Returns (lo, hi, w) each (num_leaves * per_leaf,): equal-size chunks
@@ -71,7 +121,7 @@ def _partition_edges(num_slots: int, degree: int, perm, num_leaves: int):
     block.  Any partition of the edge set yields the same recovery term
     (int32 partial sums commute mod 2^32), so a flat split is exact.
     """
-    lo, hi = sa.session_pairs(num_slots, degree, perm)
+    lo, hi = session.edges()
     E = int(lo.shape[0])
     per = max(1, -(-E // num_leaves))
     pad = num_leaves * per - E
@@ -82,10 +132,41 @@ def _partition_edges(num_slots: int, degree: int, perm, num_leaves: int):
     return lo, hi, w
 
 
+def _finalize_root(params, opt_state, acc, w, norms, clips, staleness,
+                   participation, spec, server, unravel, rng):
+    """The root tail every tier flush shares: decode the combined modular
+    sum into the noised mean, apply the server optimizer, assemble the
+    round metrics.
+
+    ``w``: (B,) effective per-slot weights (staleness discount x
+    present/valid gate); ``participation``: (B,) 1/0 present (streamed
+    engines) or valid (batched engines) vector — the staleness_mean
+    denominator.
+    """
+    w_total = w.sum()
+    mean_flat = agg.finalize_aggregate(acc, w_total, spec,
+                                       jax.random.fold_in(rng, 0xDEE))
+    new_params, new_opt = server.apply(params, opt_state,
+                                       unravel(mean_flat))
+    denom = jnp.maximum(w_total, 1e-9)
+    metrics = {
+        "update_norm": (norms * w).sum() / denom,
+        "clip_fraction": (clips * w).sum() / denom,
+        "weight_total": w_total,
+        "staleness_mean": (staleness * participation).sum()
+        / jnp.maximum(participation.sum(), 1.0),
+    }
+    return new_params, new_opt, metrics
+
+
+# ---------------------------------------------------------------------------
+# One sharded global session (two_level=False) — the PR 4 tier
+# ---------------------------------------------------------------------------
 def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
                               leaf_buffer: int, recover: bool = True,
                               masked: bool = True, mesh=None):
-    """The sharded flush of the STREAMED engines (off / client / tee_stream).
+    """The sharded flush of the STREAMED engines (off / client / tee_stream)
+    over ONE GLOBAL mask session.
 
     Returns jitted ``step(params, opt_state, mbuf, present, weights,
     staleness, norms, clips, session_key, rng)`` over the
@@ -102,6 +183,8 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
     only the replicated (B,) present vector.  Root tier: one field-modulus
     ``psum`` (int32, mod 2^32) of the leaf partials, then decode /
     weight-normalize / central DP noise (drawn ONCE) / server optimizer.
+    For the fault-isolated session-tree variant see
+    ``build_two_level_masked_step``.
     """
     B = num_leaves * leaf_buffer
     spec = agg.make_spec(fl_cfg, B)
@@ -120,9 +203,8 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
         pres_full = present.reshape(B)
 
         if recover and masked:
-            perm = agg.mask_graph_perm(spec, session_key)
-            lo, hi, ew = _partition_edges(B, spec.mask_degree, perm,
-                                          num_leaves)
+            sess = agg.make_mask_session(spec, session_key)
+            lo, hi, ew = _partition_edges(sess, num_leaves)
 
             def leaf_fn(rows_l, pres_l, pres_all, lo_l, hi_l, ew_l, skey):
                 acc = jnp.sum(rows_l * pres_l.astype(jnp.int32)[:, None],
@@ -156,20 +238,9 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
                             out_specs=P(), check_rep=False)(rows)
 
         w = weights.reshape(B) * pres_full
-        w_total = w.sum()
-        mean_flat = agg.finalize_aggregate(acc, w_total, spec,
-                                           jax.random.fold_in(rng, 0xDEE))
-        mean_delta = unravel(mean_flat)
-        new_params, new_opt = server.apply(params, opt_state, mean_delta)
-        denom = jnp.maximum(w_total, 1e-9)
-        metrics = {
-            "update_norm": (norms.reshape(B) * w).sum() / denom,
-            "clip_fraction": (clips.reshape(B) * w).sum() / denom,
-            "weight_total": w_total,
-            "staleness_mean": (staleness.reshape(B) * pres_full).sum()
-            / jnp.maximum(pres_full.sum(), 1.0),
-        }
-        return new_params, new_opt, metrics
+        return _finalize_root(params, opt_state, acc, w, norms.reshape(B),
+                              clips.reshape(B), staleness.reshape(B),
+                              pres_full, spec, server, unravel, rng)
 
     return jax.jit(step)
 
@@ -180,14 +251,16 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
                               staleness_exponent: float = 0.5,
                               mask_mode: str = "off", mesh=None,
                               use_pallas: Optional[bool] = None):
-    """The sharded BATCHED engine (raw f32 rows; "off" batched or "tee").
+    """The sharded BATCHED engine (raw f32 rows; "off" batched or "tee")
+    over ONE GLOBAL mask session.
 
     The sharded analogue of ``async_fl.build_async_buffer_step``: returns
     jitted ``step(params, opt_state, buf, staleness, valid, rng)`` over a
     (num_leaves, leaf_buffer, D) f32 buffer.  Each leaf runs the full
     clip / weight / [device-noise] / stochastic-encode [/ in-enclave mask]
     row pipeline over its slot shard — ``aggregation.encode_and_sum_rows``
-    with ``slot_offset = leaf * leaf_buffer``, i.e. the same fused Pallas
+    with a :class:`secure_agg.MaskSession` view of the GLOBAL session at
+    ``slot_offset = leaf * leaf_buffer``, i.e. the same fused Pallas
     ``weighted_quantize_accum``/PRF mask lanes as the single-host engine,
     pointed at the leaf's global slot range — and the root combines with a
     field-modulus psum + decode + one central noise draw + server opt.
@@ -226,9 +299,13 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
             n_l = rest.pop(0) if has_noise else None
             skey_l = rest.pop(0) if is_masked else None
             offset = jax.lax.axis_index(LEAF_AXIS) * Bl
+            # every leaf derives the same GLOBAL session from the
+            # replicated key; only its slot-offset view differs
+            sess = (agg.make_mask_session(spec, skey_l, slot_offset=offset)
+                    if is_masked else None)
             acc, nrm, clipped = agg.encode_and_sum_rows(
-                rows_l, w_l, u_l, n_l, spec, mask_key=skey_l,
-                slot_offset=offset, num_slots=B, use_pallas=use_pallas)
+                rows_l, w_l, u_l, n_l, spec, session=sess,
+                use_pallas=use_pallas)
             return jax.lax.psum(acc, LEAF_AXIS), nrm, clipped
 
         args = [rows, w_full, uniforms]
@@ -244,21 +321,189 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
             out_specs=(P(), P(LEAF_AXIS), P(LEAF_AXIS)), check_rep=False,
         )(*args)
 
-        w_total = w_full.sum()
-        mean_flat = agg.finalize_aggregate(acc, w_total, spec,
-                                           jax.random.fold_in(rng, 0xDEE))
-        mean_delta = unravel(mean_flat)
-        new_params, new_opt = server.apply(params, opt_state, mean_delta)
-        denom = jnp.maximum(w_total, 1e-9)
-        valid_full = valid.reshape(B)
-        metrics = {
-            "update_norm": (nrm * w_full).sum() / denom,
-            "clip_fraction": (was_clipped * w_full).sum() / denom,
-            "weight_total": w_total,
-            "staleness_mean": (staleness.reshape(B) * valid_full).sum()
-            / jnp.maximum(valid_full.sum(), 1.0),
-        }
-        return new_params, new_opt, metrics
+        return _finalize_root(params, opt_state, acc, w_full, nrm,
+                              was_clipped, staleness.reshape(B),
+                              valid.reshape(B), spec, server, unravel, rng)
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# The session tree (two_level=True): leaf sessions -> root session
+# ---------------------------------------------------------------------------
+def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
+                                leaf_buffer: int, recover: bool = True,
+                                masked: bool = True, mesh=None):
+    """The session-tree flush of the STREAMED engines (off/client/tee_stream).
+
+    Same signature and buffer layout as ``build_sharded_masked_step``, but
+    the (num_leaves, leaf_buffer, D) buffer holds rows masked under
+    PER-LEAF local sessions (``leaf_session``), and the flush is a true
+    two-level aggregation:
+
+      leaf tier (shard_map; several logical leaves per device when
+      num_leaves > mesh size):  gated modular partial sum over the leaf's
+      own present slots  +  the leaf's OWN recovery sweep (its local
+      session's edges, gated by its local (Bl,) present vector — one
+      leaf's dropout recovery never touches another leaf's edges)  +  the
+      leaf's ROOT-session mask when the leaf is alive (the root only ever
+      combines masked partials);
+
+      root tier:  field-modulus psum  +  root recovery for DEAD leaves
+      (one ``num_leaves``-slot sweep)  →  decode / weight-normalize /
+      central DP noise (once) / server optimizer.
+
+    Bit-identical to the single-host engines at
+    ``buffer_size = num_leaves * leaf_buffer`` (the encoded q-streams are
+    identical; each level's masks cancel or are recovered exactly), and
+    the partial-flush decode equals the flat survivor aggregate under
+    client dropout, whole-leaf dropout, and both combined — test-enforced.
+    """
+    B = num_leaves * leaf_buffer
+    spec = agg.make_spec(fl_cfg, B)
+    if not spec.use_secure_agg:
+        raise ValueError("the sharded tier aggregates in the secure-agg "
+                         "integer field: set secure_agg_bits > 0")
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+    if mesh is None:
+        mesh = make_leaf_mesh(num_leaves)
+    lpd = leaves_per_device(num_leaves, mesh)
+
+    def step(params, opt_state, mbuf, present, weights, staleness, norms,
+             clips, session_key, rng):
+        L, Bl, D = mbuf.shape
+
+        def dev_fn(rows_b, pres_b, skey):
+            # rows_b: (lpd, Bl, D); pres_b: (lpd, Bl) — THIS device's leaves
+            dev = jax.lax.axis_index(LEAF_AXIS)
+            gleaves = dev * lpd + jnp.arange(lpd, dtype=jnp.int32)
+            # the root session is leaf-independent: derive it once per
+            # device, not once per vmapped logical leaf
+            rsess = (root_session(spec, skey, L)
+                     if recover and masked else None)
+
+            def one_leaf(g, rows_l, pres_l):
+                if not recover:  # complete session: local masks cancel
+                    return jnp.sum(rows_l, axis=0)
+                pres_i = pres_l.astype(jnp.int32)
+                acc = jnp.sum(rows_l * pres_i[:, None], axis=0)  # mod 2^32
+                alive = (pres_i.sum() > 0).astype(jnp.int32)
+                if masked:
+                    # fault isolation: ONLY this leaf's session edges,
+                    # gated by ONLY this leaf's present vector
+                    lsess = leaf_session(spec, skey, g, Bl)
+                    acc = acc + lsess.recovery((D,), pres_l)
+                    acc = acc + alive * rsess.mask((D,), g)
+                return acc
+
+            accs = jax.vmap(one_leaf)(gleaves, rows_b, pres_b)
+            return jax.lax.psum(
+                jnp.sum(accs, axis=0, dtype=accs.dtype), LEAF_AXIS)
+
+        acc = shard_map(
+            dev_fn, mesh=mesh,
+            in_specs=(P(LEAF_AXIS), P(LEAF_AXIS), P()),
+            out_specs=P(), check_rep=False,
+        )(mbuf, present, session_key)
+
+        pres_full = present.reshape(B)
+        if recover and masked:
+            # root tier: a dead leaf is one absent slot of the L-slot root
+            # session — recover its share with a single root sweep
+            alive = (present.reshape(L, Bl).sum(axis=1) > 0)
+            acc = acc + root_session(spec, session_key, L).recovery(
+                (D,), alive.astype(jnp.float32))
+
+        w = weights.reshape(B) * pres_full
+        return _finalize_root(params, opt_state, acc, w, norms.reshape(B),
+                              clips.reshape(B), staleness.reshape(B),
+                              pres_full, spec, server, unravel, rng)
+
+    return jax.jit(step)
+
+
+def build_two_level_buffer_step(params, fl_cfg, *, num_leaves: int,
+                                leaf_buffer: int,
+                                staleness_mode: str = "polynomial",
+                                staleness_exponent: float = 0.5,
+                                mesh=None,
+                                use_pallas: Optional[bool] = None):
+    """The session-tree BATCHED "tee" engine: raw f32 rows, per-leaf
+    in-enclave mask lanes.
+
+    Each leaf runs ``aggregation.encode_and_sum_rows`` under its OWN local
+    :class:`secure_agg.MaskSession` (``num_slots = leaf_buffer``,
+    ``slot_offset = 0`` — the whole-session fast path, per leaf), so the
+    fused Pallas/PRF lane generates only O(Bl * k) streams per leaf and
+    every leaf's masks cancel inside its own accumulator.  Session-wide
+    noise/uniform draws are generated once at the (B, D) shape and sliced
+    per leaf; the root combines with a field-modulus psum.  Bit-identical
+    to the single-host batched "tee" step (identical q-streams; each leaf
+    session's masks cancel exactly as the global session's did).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    B = num_leaves * leaf_buffer
+    spec = agg.make_spec(fl_cfg, B)
+    if not spec.use_secure_agg:
+        raise ValueError("the sharded tier aggregates in the secure-agg "
+                         "integer field: set secure_agg_bits > 0")
+    server = build_server_opt(fl_cfg)
+    _, unravel = ravel_pytree(params)
+    if mesh is None:
+        mesh = make_leaf_mesh(num_leaves)
+    lpd = leaves_per_device(num_leaves, mesh)
+    has_noise = spec.dev_noise > 0.0
+
+    def step(params, opt_state, buf, staleness, valid, rng):
+        L, Bl, D = buf.shape
+        w_full = staleness_weight(staleness.reshape(B), staleness_mode,
+                                  staleness_exponent) * valid.reshape(B)
+        noise, uniforms = agg.buffer_noise_and_uniforms(rng, B, D, spec)
+        if noise is not None:
+            noise = noise * (spec.dev_noise * w_full)[:, None]
+        skey = jax.random.fold_in(rng, 0x7EE)
+        w3 = w_full.reshape(L, Bl)
+        u3 = uniforms.reshape(L, Bl, D)
+        n3 = None if noise is None else noise.reshape(L, Bl, D)
+
+        def dev_fn(rows_b, w_b, u_b, *rest):
+            rest = list(rest)
+            n_b = rest.pop(0) if has_noise else None
+            skey_b = rest.pop(0)
+            dev = jax.lax.axis_index(LEAF_AXIS)
+            gleaves = dev * lpd + jnp.arange(lpd, dtype=jnp.int32)
+
+            def one_leaf(g, rows_l, w_l, u_l, n_l):
+                sess = leaf_session(spec, skey_b, g, Bl)
+                return agg.encode_and_sum_rows(
+                    rows_l, w_l, u_l, n_l, spec, session=sess,
+                    use_pallas=use_pallas)
+
+            # n_b is None when device noise is off — an empty pytree, which
+            # vmap maps over trivially
+            accs, nrm, clipped = jax.vmap(one_leaf)(gleaves, rows_b, w_b,
+                                                    u_b, n_b)
+            return (jax.lax.psum(jnp.sum(accs, axis=0, dtype=accs.dtype),
+                                 LEAF_AXIS), nrm, clipped)
+
+        args = [buf, w3, u3]
+        in_specs = [P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
+        if has_noise:
+            args.append(n3)
+            in_specs.append(P(LEAF_AXIS))
+        args.append(skey)
+        in_specs.append(P())
+        acc, nrm, was_clipped = shard_map(
+            dev_fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=(P(), P(LEAF_AXIS), P(LEAF_AXIS)), check_rep=False,
+        )(*args)
+        nrm, was_clipped = nrm.reshape(B), was_clipped.reshape(B)
+
+        return _finalize_root(params, opt_state, acc, w_full, nrm,
+                              was_clipped, staleness.reshape(B),
+                              valid.reshape(B), spec, server, unravel, rng)
 
     return jax.jit(step)
 
@@ -266,34 +511,57 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
 class ShardedAsyncServer:
     """Buffered asynchronous aggregation over the leaf/root tier.
 
-    The "Meta scale" facade: one pairwise-mask session spans
-    ``num_leaves * leaf_buffer`` global slots; slot ``s`` lives on leaf
-    ``s // leaf_buffer`` in a device-resident (num_leaves, leaf_buffer, D)
-    buffer physically sharded over the leaf mesh axis
-    (``launch.sharding.hierarchy_shardings``), so no single host ever
-    materializes the whole round.
+    The "Meta scale" facade over a device-resident
+    (num_leaves, leaf_buffer, D) buffer physically sharded over the leaf
+    mesh axis (``launch.sharding.hierarchy_shardings``) — no single host
+    ever materializes the whole round.  ``num_leaves``/``leaf_buffer``/
+    ``two_level`` default from ``FLConfig`` (``fl_cfg.num_leaves`` etc.);
+    ``num_leaves`` may exceed the visible device count — logical leaves
+    are multiplexed onto the mesh (``launch.mesh.make_leaf_mesh``).
 
-    Arrival ingestion is BATCHED: ``push_batch`` takes a (K,)-stacked batch
-    of raw deltas, encodes all K with one vmapped jitted call (identical
-    per-row bits to K sequential ``AsyncServer`` pushes — same per-slot PRF
-    streams) and lands them with ONE jitted scatter into the sharded
-    buffer; ``push_encoded_batch`` does the same for client-encoded
-    ``ClientPush`` rows.  No per-push Python loop touches row data.
+    Session topology (``two_level``):
+      False — ONE pairwise-mask session spans all
+              ``num_leaves * leaf_buffer`` global slots (slot ``s`` lives
+              on leaf ``s // leaf_buffer``); recovery edges cross leaves.
+      True  — a SESSION TREE: each leaf masks its rows under its own
+              ``leaf_buffer``-slot local session and flushes a masked
+              partial into a ``num_leaves``-slot root session
+              (fault-isolated recovery; see the module docstring).
+
+    Arrival ingestion is BATCHED and DESTINATION-SHARDED: ``push_batch``
+    takes a (K,)-stacked batch of raw deltas, routes each row to its
+    destination leaf (a host-side index shuffle — no row math), and runs
+    the clip/weight/encode[+mask] pipeline INSIDE a shard_map, each leaf
+    encoding exactly the rows addressed to it — no central (K, D) encode
+    precedes the scatter, so ingest bandwidth scales with the leaf count.
+    Rows are bit-identical to K sequential ``AsyncServer`` pushes (same
+    per-slot PRF streams); ``push_encoded_batch`` lands client-encoded
+    ``ClientPush`` rows with one jitted scatter (the server never encodes
+    in mask_mode="client").
 
     mask_mode semantics match ``AsyncServer`` ("off" always streams here —
-    the tier requires the integer field anyway); the flush is
-    ``build_sharded_masked_step`` (streamed modes) or
-    ``build_sharded_buffer_step`` ("tee"), both bit-identical to the
+    the tier requires the integer field anyway); the flush builders are
+    selected by (mask mode, two_level), all bit-identical to the
     single-host engines at ``buffer_size = num_leaves * leaf_buffer``.
     """
 
-    def __init__(self, params, fl_cfg, *, num_leaves: int, leaf_buffer: int,
+    def __init__(self, params, fl_cfg, *, num_leaves: Optional[int] = None,
+                 leaf_buffer: Optional[int] = None,
                  staleness_exponent: float = 0.5,
                  staleness_mode: str = "polynomial",
                  mask_mode: str = "off", session_seed: int = 0x5A5E,
+                 two_level: Optional[bool] = None,
                  mesh=None, use_pallas: Optional[bool] = None):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
+        num_leaves = num_leaves or fl_cfg.num_leaves
+        leaf_buffer = leaf_buffer or fl_cfg.leaf_buffer
+        if not num_leaves or not leaf_buffer:
+            raise ValueError(
+                "the tier's shape is unset: pass num_leaves/leaf_buffer "
+                "or set FLConfig.num_leaves/leaf_buffer")
+        if two_level is None:
+            two_level = fl_cfg.two_level
         self.params = params
         self.fl_cfg = fl_cfg
         self.num_leaves = num_leaves
@@ -302,6 +570,7 @@ class ShardedAsyncServer:
         self.staleness_exponent = staleness_exponent
         self.staleness_mode = staleness_mode
         self.mask_mode = mask_mode
+        self.two_level = two_level
         self.version = 0
         self.last_metrics: Optional[dict] = None
         self._applied_updates = 0
@@ -310,7 +579,11 @@ class ShardedAsyncServer:
         self._push_base = jax.random.PRNGKey(0xA5)
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
-        self.mesh = make_agg_mesh(num_leaves) if mesh is None else mesh
+        if mesh is None:
+            mesh = (make_leaf_mesh(num_leaves) if two_level
+                    else make_agg_mesh(num_leaves))
+        self.mesh = mesh
+        lpd = leaves_per_device(num_leaves, mesh)
         shardings = hierarchy_shardings(self.mesh)
         s_buf, s_slot = shardings["buffer"], shardings["per_slot"]
 
@@ -331,49 +604,121 @@ class ShardedAsyncServer:
         self._present = [False] * B
         self._streaming = mask_mode != "tee"
         s_mode, s_exp = staleness_mode, staleness_exponent
+        masked = mask_mode not in ("off", "tee")
+
+        def row_session(skey, gslot):
+            """The (session, mask-slot) a row at GLOBAL slot ``gslot`` is
+            masked under — the single construction point both the
+            destination-sharded server ingest and the client-side
+            ``encode_push_batch`` share, so their rows are bit-equal."""
+            if two_level:
+                return (leaf_session(spec, skey, gslot // Bl, Bl),
+                        gslot % Bl)
+            return agg.make_mask_session(spec, skey), gslot
+
+        def encode_row(flat_d, gslot, stal, skey, pkey):
+            """One arrival's jitted encode pipeline, traceable in the slot.
+
+            PRF streams are keyed by the GLOBAL slot
+            (``fold_in(push_key, gslot)``) in both topologies, so encoded
+            q-streams — and therefore decoded aggregates — are
+            bit-identical to sequential single-host pushes.
+            """
+            rng = jax.random.fold_in(pkey, gslot)
+            w = staleness_weight(stal, s_mode, s_exp)
+            if masked:
+                sess, mslot = row_session(skey, gslot)
+                row, nrm, clipped = agg.encode_masked_contribution(
+                    flat_d, w, mslot, spec, sess, rng, use_pallas=use_pallas)
+            else:
+                row, nrm, clipped = agg.encode_contribution(
+                    flat_d, w, spec, rng)
+            return row, w, nrm, clipped
 
         if self._streaming:
-            masked = mask_mode != "off"
             self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.int32),
                                        s_buf)
             self._wts, self._norms, self._clips = zslot(), zslot(), zslot()
-            self._step = build_sharded_masked_step(
+            build_masked = (build_two_level_masked_step if two_level
+                            else build_sharded_masked_step)
+            self._step = build_masked(
                 params, fl_cfg, num_leaves=L, leaf_buffer=Bl, recover=False,
                 masked=masked, mesh=self.mesh)
             self._flush_step = None
-            self._build_flush_step = lambda: build_sharded_masked_step(
+            self._build_flush_step = lambda: build_masked(
                 self.params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
                 recover=True, masked=masked, mesh=self.mesh)
 
             @jax.jit
-            def _encode_batch(deltas, slots, stals, session_key, push_key):
-                """One vmapped encode of a (K,) arrival batch.
+            def _ingest_sharded(buf, wts, norms, clips, stal, deltas, idx,
+                                lslot, valid, stals, session_key, push_key):
+                """Destination-sharded ingest of one routed arrival batch.
 
-                Per-row PRF streams are keyed exactly as K sequential
-                single pushes (``fold_in(push_key, slot)``), so batched
-                and sequential ingestion write bit-identical rows.
+                ``idx``/``lslot``/``valid``/``stals``: (L, kb) per-leaf
+                routing tables (kb = most arrivals any leaf received this
+                batch; padding rows carry valid=0).  The raw rows are
+                gathered to their destination leaves (a memory move), and
+                ALL row math — clip/weight/stochastic-encode[+mask] — runs
+                inside the shard_map, each leaf encoding only its own
+                arrivals.  Padded rows are encoded-and-dropped (their
+                writes target local slot Bl, out of range -> scatter-drop).
                 """
+                rows_raw = jax.vmap(
+                    lambda d: ravel_pytree(d)[0].astype(jnp.float32))(deltas)
+                kb = idx.shape[1]
+                routed = jnp.take(rows_raw, idx.reshape(-1),
+                                  axis=0).reshape(L, kb, -1)
+
+                def dev_fn(buf_b, wts_b, norms_b, clips_b, stal_b, routed_b,
+                           lslot_b, valid_b, stals_b, skey, pkey):
+                    dev = jax.lax.axis_index(LEAF_AXIS)
+                    gleaves = dev * lpd + jnp.arange(lpd, dtype=jnp.int32)
+
+                    def one_leaf(g, buf_l, wts_l, norms_l, clips_l, stal_l,
+                                 raw_l, sl, vld, st):
+                        rows_e, w, nrm, cl = jax.vmap(
+                            lambda r, s, t: encode_row(r, g * Bl + s, t,
+                                                       skey, pkey))(
+                            raw_l, sl, st)
+                        tgt = jnp.where(vld > 0, sl, Bl)  # Bl -> dropped
+                        return (buf_l.at[tgt].set(rows_e, mode="drop"),
+                                wts_l.at[tgt].set(w, mode="drop"),
+                                norms_l.at[tgt].set(nrm, mode="drop"),
+                                clips_l.at[tgt].set(cl, mode="drop"),
+                                stal_l.at[tgt].set(st, mode="drop"))
+
+                    return jax.vmap(one_leaf)(
+                        gleaves, buf_b, wts_b, norms_b, clips_b, stal_b,
+                        routed_b, lslot_b, valid_b, stals_b)
+
+                return shard_map(
+                    dev_fn, mesh=self.mesh,
+                    in_specs=(P(LEAF_AXIS),) * 9 + (P(), P()),
+                    out_specs=(P(LEAF_AXIS),) * 5, check_rep=False,
+                )(buf, wts, norms, clips, stal, routed, lslot, valid, stals,
+                  session_key, push_key)
+
+            self._ingest_sharded = _ingest_sharded
+
+            @jax.jit
+            def _encode_batch(deltas, slots, stals, session_key, push_key):
+                """The CLIENT-side vmapped encode (mask_mode='client'):
+                produces the rows ``encode_push_batch`` hands back to the
+                caller.  Runs the exact ``encode_row`` pipeline of the
+                sharded server ingest, so client-encoded and
+                server-encoded rows are bit-identical."""
 
                 def one(delta, slot, s):
-                    rng = jax.random.fold_in(push_key, slot)
                     flat_d, _ = ravel_pytree(delta)
-                    w = staleness_weight(s, s_mode, s_exp)
-                    if masked:
-                        row, nrm, clipped = agg.encode_masked_contribution(
-                            flat_d, w, slot, spec, session_key, rng,
-                            use_pallas=use_pallas)
-                    else:
-                        row, nrm, clipped = agg.encode_contribution(
-                            flat_d, w, spec, rng)
-                    return row, w, nrm, clipped
+                    return encode_row(flat_d, slot, s, session_key, push_key)
 
                 return jax.vmap(one)(deltas, slots, stals)
 
             @jax.jit
             def _scatter_rows(buf, wts, norms, clips, stal, leaf, local,
                               rows, w, nrm, clipped, s):
-                """Route a (K,) batch of encoded rows to its leaves: ONE
-                jitted scatter into the sharded (L, Bl, D) buffer."""
+                """Land a (K,) batch of ALREADY-ENCODED rows (client pushes)
+                on their leaves: ONE jitted scatter, no row math."""
                 return (buf.at[leaf, local].set(rows),
                         wts.at[leaf, local].set(w),
                         norms.at[leaf, local].set(nrm),
@@ -386,11 +731,18 @@ class ShardedAsyncServer:
             self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.float32),
                                        s_buf)
             self._valid = zslot()
-            self._step = build_sharded_buffer_step(
-                params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
-                staleness_mode=staleness_mode,
-                staleness_exponent=staleness_exponent, mask_mode="tee",
-                mesh=self.mesh, use_pallas=use_pallas)
+            if two_level:
+                self._step = build_two_level_buffer_step(
+                    params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
+                    staleness_mode=staleness_mode,
+                    staleness_exponent=staleness_exponent, mesh=self.mesh,
+                    use_pallas=use_pallas)
+            else:
+                self._step = build_sharded_buffer_step(
+                    params, fl_cfg, num_leaves=L, leaf_buffer=Bl,
+                    staleness_mode=staleness_mode,
+                    staleness_exponent=staleness_exponent, mask_mode="tee",
+                    mesh=self.mesh, use_pallas=use_pallas)
 
             @jax.jit
             def _scatter_raw(buf, stal, valid, leaf, local, deltas, s):
@@ -404,7 +756,7 @@ class ShardedAsyncServer:
 
     # -- session bookkeeping ------------------------------------------------
     def _session_key(self):
-        """PRNG key of the current pairwise-mask session (= buffer round)."""
+        """PRNG key of the current mask session (tree) (= buffer round)."""
         return jax.random.fold_in(self._session_base, self.version)
 
     def _take_slots(self, k: int) -> List[int]:
@@ -431,6 +783,49 @@ class ShardedAsyncServer:
         s = jnp.asarray(slots, jnp.int32)
         return s // self.leaf_buffer, s % self.leaf_buffer
 
+    def _staleness_of(self, client_version, k: int) -> np.ndarray:
+        """(k,) staleness values for a scalar or (k,) ``client_version``."""
+        if jnp.ndim(client_version) == 0:
+            return np.full((k,), float(self.version - client_version),
+                           np.float32)
+        return self.version - np.asarray(client_version, np.float32)
+
+    def _route_by_leaf(self, slots: Sequence[int], stals: np.ndarray):
+        """Group one arrival batch by DESTINATION leaf.
+
+        Returns (idx, lslot, valid, stals) each (num_leaves, kb) — the
+        routing tables the destination-sharded ingest consumes.  Pure
+        index bookkeeping on host ints; no row payload is touched.
+
+        ``kb`` is the most arrivals any single leaf received, rounded up
+        to a power of two (bounds the distinct ingest shapes jit ever
+        sees to log2(leaf_buffer) variants).  Every leaf encodes kb rows
+        — padding rows are encoded-and-dropped — so a batch skewed onto
+        one leaf costs that leaf's kb on every device: the
+        bandwidth-scales-with-leaves property holds for leaf-BALANCED
+        arrival batches, which is what a front-end router feeding the
+        tier produces (and what the default contiguous slot allocation
+        approximates one leaf at a time).
+        """
+        L, Bl = self.num_leaves, self.leaf_buffer
+        per: List[List[int]] = [[] for _ in range(L)]
+        for pos, s in enumerate(slots):
+            per[s // Bl].append(pos)
+        kb = max(1, max(len(p) for p in per))
+        kb = min(Bl, 1 << (kb - 1).bit_length())  # pow2: bounded retraces
+        idx = np.zeros((L, kb), np.int32)
+        lsl = np.zeros((L, kb), np.int32)
+        valid = np.zeros((L, kb), np.float32)
+        st = np.zeros((L, kb), np.float32)
+        for leaf, positions in enumerate(per):
+            for j, pos in enumerate(positions):
+                idx[leaf, j] = pos
+                lsl[leaf, j] = slots[pos] % Bl
+                valid[leaf, j] = 1.0
+                st[leaf, j] = stals[pos]
+        return (jnp.asarray(idx), jnp.asarray(lsl), jnp.asarray(valid),
+                jnp.asarray(st))
+
     # -- client protocol ----------------------------------------------------
     def pull(self) -> Tuple[Any, int]:
         return self.params, self.version
@@ -444,11 +839,15 @@ class ShardedAsyncServer:
             slots=None if slot is None else [slot])
         return cps[0]
 
-    def encode_push_batch(self, deltas, client_version: int,
+    def encode_push_batch(self, deltas, client_version,
                           slots: Optional[Sequence[int]] = None
                           ) -> List[ClientPush]:
         """Encode a (K,)-stacked batch of deltas as the session's clients
-        would — one vmapped jitted call, pure w.r.t. server state."""
+        would — one vmapped jitted call, pure w.r.t. server state.  (This
+        models CLIENT compute: in a fleet it runs on the devices, so it is
+        central here only because the simulator stands in for them.)
+        ``client_version`` may be a scalar or a (K,) sequence (mixed
+        staleness within one batch), as in ``push_batch``."""
         if self.mask_mode != "client":
             raise ValueError(
                 f"encode_push is the client half of mask_mode='client' "
@@ -456,14 +855,13 @@ class ShardedAsyncServer:
         K = jax.tree.leaves(deltas)[0].shape[0]
         if slots is None:
             slots = self._take_slots(K)
-        staleness = self.version - client_version
-        stals = jnp.full((K,), float(staleness), jnp.float32)
+        stals = self._staleness_of(client_version, K)
         rows, w, nrm, clipped = self._encode_batch(
-            deltas, jnp.asarray(slots, jnp.int32), stals,
+            deltas, jnp.asarray(slots, jnp.int32), jnp.asarray(stals),
             self._session_key(),
             jax.random.fold_in(self._push_base, self.version))
-        return [ClientPush(rows[i], w[i], nrm[i], clipped[i], staleness,
-                           self.version, int(s))
+        return [ClientPush(rows[i], w[i], nrm[i], clipped[i],
+                           float(stals[i]), self.version, int(s))
                 for i, s in enumerate(slots)]
 
     def push_encoded(self, cp: ClientPush, rng=None) -> None:
@@ -484,13 +882,17 @@ class ShardedAsyncServer:
                     f"server at session {self.version}): the pairwise mask "
                     "no longer matches an open session position")
         self._check_slots(slots)
-        self._ingest(slots,
-                     jnp.stack([cp.row for cp in cps]),
-                     jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
-                     jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
-                     jnp.stack([jnp.asarray(cp.clipped) for cp in cps]),
-                     jnp.asarray([cp.staleness for cp in cps], jnp.float32),
-                     rng)
+        leaf, local = self._leaf_local(slots)
+        (self._buf, self._wts, self._norms, self._clips,
+         self._stal) = self._scatter_rows(
+            self._buf, self._wts, self._norms, self._clips, self._stal,
+            leaf, local,
+            jnp.stack([cp.row for cp in cps]),
+            jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
+            jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
+            jnp.stack([jnp.asarray(cp.clipped) for cp in cps]),
+            jnp.asarray([cp.staleness for cp in cps], jnp.float32))
+        self._mark(slots, rng)
 
     def push(self, delta, client_version: int, rng=None) -> None:
         """Single-arrival convenience wrapper over ``push_batch``."""
@@ -502,9 +904,12 @@ class ShardedAsyncServer:
         """Vectorized multi-push: a (K,)-stacked batch of raw deltas.
 
         ``client_version`` may be a scalar or a (K,) sequence (mixed
-        staleness within one arrival batch).  The whole batch is encoded
-        with one vmapped jitted call and routed to its leaves in one
-        jitted scatter — bit-identical rows to K sequential pushes.
+        staleness within one arrival batch).  The batch is routed to its
+        destination leaves on host (index bookkeeping only) and encoded
+        INSIDE a shard_map — each leaf runs the jitted
+        clip/weight/encode[+mask] pipeline over exactly the rows addressed
+        to it — then written in place; rows are bit-identical to K
+        sequential pushes.
         """
         if self.mask_mode == "client":
             self.push_encoded_batch(
@@ -516,33 +921,20 @@ class ShardedAsyncServer:
             slots = self._take_slots(K)
         else:
             self._check_slots(slots)
-        if jnp.ndim(client_version) == 0:
-            stals = jnp.full((K,), float(self.version - client_version),
-                             jnp.float32)
-        else:
-            stals = self.version - jnp.asarray(client_version, jnp.float32)
-        leaf, local = self._leaf_local(slots)
+        stals = self._staleness_of(client_version, K)
         if not self._streaming:  # "tee": store raw rows, mask lane at flush
+            leaf, local = self._leaf_local(slots)
             self._buf, self._stal, self._valid = self._scatter_raw(
                 self._buf, self._stal, self._valid, leaf, local, deltas,
-                stals)
+                jnp.asarray(stals))
             self._mark(slots, rng)
             return
-        rows, w, nrm, clipped = self._encode_batch(
-            deltas, jnp.asarray(slots, jnp.int32), stals,
-            self._session_key(),
-            jax.random.fold_in(self._push_base, self.version))
-        self._ingest(slots, rows, w, nrm, clipped, stals, rng,
-                     leaf_local=(leaf, local))
-
-    def _ingest(self, slots, rows, w, nrm, clipped, stals, rng,
-                leaf_local=None) -> None:
-        leaf, local = (self._leaf_local(slots) if leaf_local is None
-                       else leaf_local)
+        idx, lsl, valid, st = self._route_by_leaf(slots, stals)
         (self._buf, self._wts, self._norms, self._clips,
-         self._stal) = self._scatter_rows(
+         self._stal) = self._ingest_sharded(
             self._buf, self._wts, self._norms, self._clips, self._stal,
-            leaf, local, rows, w, nrm, clipped, stals)
+            deltas, idx, lsl, valid, st, self._session_key(),
+            jax.random.fold_in(self._push_base, self.version))
         self._mark(slots, rng)
 
     def _mark(self, slots, rng) -> None:
@@ -554,7 +946,8 @@ class ShardedAsyncServer:
 
     def flush(self, rng=None) -> None:
         """Apply a partially-filled session (deadline / end of run) — the
-        cross-shard dropout-recovery path for the masked modes."""
+        dropout-recovery path: leaf-local sweeps + root recovery in the
+        session tree, the cross-shard edge sweep in the flat layout."""
         if self._fill > 0:
             self._apply(rng)
 
@@ -572,7 +965,7 @@ class ShardedAsyncServer:
             else:
                 if self._flush_step is None:
                     self._flush_step = self._build_flush_step()
-                step = self._flush_step  # cross-shard dropout recovery
+                step = self._flush_step  # dropout recovery
             self.params, self._opt_state, self.last_metrics = step(
                 self.params, self._opt_state, self._buf, present, self._wts,
                 self._stal, self._norms, self._clips, self._session_key(),

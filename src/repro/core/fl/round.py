@@ -126,10 +126,11 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         # (any bijection works — only slot uniqueness matters for cancellation)
         slots = jnp.arange(cohort_size, dtype=jnp.int32).reshape(
             m, n_chunks).swapaxes(0, 1)
-        skey = jax.random.fold_in(rng, 0x5E55) if masked else None
-        # random k-regular session graph: ONE permutation per round, shared
-        # by every chunk's mask (cancellation needs one consistent graph)
-        perm = agg.mask_graph_perm(spec, skey) if masked else None
+        # pairwise-mask session of the round: ONE MaskSession per round
+        # (its graph permutation is derived from the session key, so every
+        # chunk's mask shares one consistent graph — cancellation needs it)
+        sess = agg.make_mask_session(
+            spec, jax.random.fold_in(rng, 0x5E55)) if masked else None
 
         deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
         if deferred:
@@ -156,8 +157,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                     if masked:
                         enc = jax.tree.map(
                             lambda e, mk: e + mk, enc,
-                            agg.mask_tree(params, cslot[0], cohort_size, skey,
-                                          spec.mask_degree, perm))
+                            agg.mask_tree(params, cslot[0], sess))
                 else:
                     enc = delta
                 acc = jax.tree.map(lambda a, e: a + e, acc, enc)
@@ -173,9 +173,7 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                         deltas, sa_scale, crng)
                     if masked:
                         mks = jax.vmap(
-                            lambda s: agg.mask_tree(params, s, cohort_size,
-                                                    skey, spec.mask_degree,
-                                                    perm))(cslot)
+                            lambda s: agg.mask_tree(params, s, sess))(cslot)
                         encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
                 else:
                     encs = deltas
@@ -264,7 +262,6 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         batch = {k: v for k, v in batch.items() if k != "weight"}
         rngs = jax.random.split(rng, cohort_size)  # client c -> rngs[c]
         skey = jax.random.fold_in(rng, 0x5E55) if masked else None
-        perm = agg.mask_graph_perm(spec, skey) if masked else None
 
         def leaf_fn(params, cbatch_l, rngs_l, w_l, *mask_args):
             slot0 = jax.lax.axis_index(LEAF_AXIS) * m
@@ -283,11 +280,14 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
             encs = jax.vmap(agg.encode_tree, in_axes=(0, None, 0))(
                 deltas, sa_scale, rngs_l)
             if masked:
-                skey_l, perm_l = mask_args
+                # every leaf derives the SAME session (incl. the random
+                # k-regular graph) from the replicated session key — no
+                # permutation array needs to be threaded through shard_map
+                (skey_l,) = mask_args
+                sess = agg.make_mask_session(spec, skey_l)
                 slots = slot0 + jnp.arange(m, dtype=jnp.int32)
                 mks = jax.vmap(
-                    lambda s: agg.mask_tree(params, s, cohort_size, skey_l,
-                                            spec.mask_degree, perm_l))(slots)
+                    lambda s: agg.mask_tree(params, s, sess))(slots)
                 encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
             # the root combine: ONE integer all-reduce per round
             acc = jax.tree.map(
@@ -302,12 +302,8 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         args = [params, batch, rngs, weights]
         in_specs = [P(), P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
         if masked:
-            # identity permutation == the circulant/complete fallback
-            # (bit-identical through _neighbor_slots), so shard_map always
-            # sees one array argument
-            args += [skey, perm if perm is not None
-                     else jnp.arange(cohort_size, dtype=jnp.int32)]
-            in_specs += [P(), P()]
+            args.append(skey)
+            in_specs.append(P())
         acc, (loss_s, norm_s, clip_s, w_s) = shard_map(
             leaf_fn, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=(P(), (P(), P(), P(), P())), check_rep=False,

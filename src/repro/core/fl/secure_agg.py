@@ -8,7 +8,10 @@ int32 addition wraps (mod 2^32), the masked sum equals the unmasked sum
 ints directly with a psum while this module exercises the full masked
 protocol end-to-end (tests assert bit-exact agreement).
 
-Three layers live here:
+``MaskSession`` is the first-class session object the engines consume: one
+value carrying (key, slot range, graph degree, permutation, field modulus)
+with traceable mask/recovery methods, so no engine threads those as loose
+arguments.  Under it, three function layers live here:
 
   1. scalar codec — ``quantize`` / ``dequantize`` with a wraparound-window
      re-centering for decoded *sums* (``count``): the secure-agg field is
@@ -42,7 +45,8 @@ over slots, O(num_slots * D) peak memory.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -415,6 +419,101 @@ def recovery_mask(shape, present, num_slots: int, key,
     """
     lo, hi = session_pairs(num_slots, degree, perm)
     return recovery_sweep(shape, present, lo, hi, key)
+
+
+# ---------------------------------------------------------------------------
+# MaskSession — the first-class session object every engine consumes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MaskSession:
+    """One pairwise-mask session, as a value.
+
+    Everything a consumer needs to generate, cancel, or recover this
+    session's masks travels together: the PRNG ``key`` (which roots every
+    pair stream), the session size ``num_slots``, the mask-graph ``degree``
+    (canonical: 0 = complete, even k = k-regular), the optional random
+    k-regular relabelling ``perm`` (``session_perm``; None = circulant /
+    complete), the first slot ``slot_offset`` of the consumer's row range
+    (a SHARD of the session — 0 for whole-session consumers), and the
+    secure-agg field ``modulus``.  Replaces the loose
+    slot_offset/num_slots/mask_key/perm/degree threading that used to run
+    through every engine builder and kernel wrapper.
+
+    Registered as a jax pytree: ``key``/``perm``/``slot_offset`` are traced
+    data (sessions are built inside jitted steps from the round's rng),
+    ``num_slots``/``degree``/``modulus`` are static metadata.  All methods
+    are traceable and bit-identical to the free functions they wrap — the
+    in-kernel PRF lanes (``repro.kernels.secure_agg``) consume the same
+    fields through their ``SessionMeta`` view and are oracle-checked
+    against these.
+    """
+
+    key: Any  # PRNGKey rooting every pair stream of the session
+    num_slots: int  # static session size
+    degree: int = 0  # static canonical graph degree (0 = complete)
+    perm: Optional[jnp.ndarray] = None  # random k-regular relabelling
+    slot_offset: Any = 0  # first slot of this consumer's row range
+    modulus: int = 1 << 32  # secure-agg field (power of two, divides 2^32)
+
+    # -- derived views ------------------------------------------------------
+    def key_words(self):
+        """(k0, k1) uint32 PRF key words (the kernels' wire format)."""
+        return prf.key_words(self.key)
+
+    def neighbor_table(self) -> Optional[jnp.ndarray]:
+        """(num_slots, degree) table for the kernels' scalar-meta lane, or
+        None when the graph is static (complete / circulant ring)."""
+        if self.perm is None:
+            return None
+        return neighbor_table(self.num_slots, self.degree, self.perm)
+
+    def edges(self):
+        """The session graph's (lo, hi) edge list (``session_pairs``)."""
+        return session_pairs(self.num_slots, self.degree, self.perm)
+
+    # -- mask generation ----------------------------------------------------
+    def mask(self, shape, slot) -> jnp.ndarray:
+        """The pairwise mask of ABSOLUTE session position ``slot``."""
+        return session_mask(shape, slot, self.num_slots, self.key,
+                            self.degree, self.perm)
+
+    def masks(self, shape) -> jnp.ndarray:
+        """All ``num_slots`` masks at once (one deduplicated sweep)."""
+        return session_masks(shape, self.num_slots, self.key, self.degree,
+                             self.perm)
+
+    def recovery(self, shape, present) -> jnp.ndarray:
+        """Sum of the ABSENT slots' masks — the dropout-recovery shares."""
+        return recovery_mask(shape, present, self.num_slots, self.key,
+                             self.degree, self.perm)
+
+    def reduce(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Canonical wire residue of ``q`` in this session's field."""
+        return to_field(q, self.modulus)
+
+
+jax.tree_util.register_dataclass(
+    MaskSession,
+    data_fields=("key", "perm", "slot_offset"),
+    meta_fields=("num_slots", "degree", "modulus"))
+
+
+def make_session(key, num_slots: int, *, degree: int = 0,
+                 random_graph: bool = False, slot_offset=0,
+                 modulus: int = 1 << 32) -> MaskSession:
+    """Build a :class:`MaskSession` with canonical graph parameters.
+
+    ``degree`` is canonicalized against ``num_slots``
+    (``effective_degree``: sessions too small for the requested k-regular
+    graph clamp to the complete graph — see the README's small-B collusion
+    note), and the random k-regular relabelling is drawn here from the
+    session key when ``random_graph`` — so every consumer derived from the
+    same key sees the same graph.  Traceable in ``key``/``slot_offset``.
+    """
+    k = effective_degree(num_slots, degree)
+    perm = session_perm(num_slots, key) if (k > 0 and random_graph) else None
+    return MaskSession(key=key, num_slots=num_slots, degree=k, perm=perm,
+                       slot_offset=slot_offset, modulus=modulus)
 
 
 def secure_aggregate(updates: Sequence[jnp.ndarray], bits: int,

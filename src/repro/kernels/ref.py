@@ -117,37 +117,42 @@ def prf_uniforms(D: int, uniform_key_words) -> jnp.ndarray:
 
 
 def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
-                      num_slots: int, mask_key_words, uniform_key_words,
-                      degree: int = 0, perm=None) -> jnp.ndarray:
-    """Oracle for the fused masked-push kernel: q(x * scale) + mask[slot]."""
+                      uniform_key_words, session, perm=None) -> jnp.ndarray:
+    """Oracle for the fused masked-push kernel: q(x * scale) + mask[slot].
+
+    ``session`` is the kernels' session-meta lane (anything with
+    ``key_words`` / ``num_slots`` / ``degree`` fields — e.g. a
+    ``kernels.secure_agg.SessionMeta``); ``perm`` is the host-readable
+    random-graph permutation the kernel's neighbour table was built from
+    (the oracle enumerates neighbours in Python, so it takes the
+    permutation, not the table).
+    """
     (D,) = x.shape
     xf = x.astype(jnp.float32) * scale
     floor = jnp.floor(xf)
     bit = (prf_uniforms(D, uniform_key_words) < (xf - floor)).astype(
         jnp.float32)
     q = (floor + bit).astype(jnp.int32)
-    return q + prf_session_mask(D, slot, num_slots, mask_key_words, degree,
-                                perm)
+    return q + prf_session_mask(D, slot, session.num_slots,
+                                session.key_words, session.degree, perm)
 
 
 def weighted_quantize_accum_prf(x: jnp.ndarray, weights: jnp.ndarray,
                                 uniforms: jnp.ndarray, scale: float,
-                                mask_key_words, num_slots: int = None,
-                                degree: int = 0, perm=None,
-                                slot_offset: int = 0) -> jnp.ndarray:
+                                session, perm=None) -> jnp.ndarray:
     """Oracle for the in-kernel PRF mask lane of the fused accumulation.
 
-    ``slot_offset`` places row c at global session slot ``slot_offset + c``
-    (the sharded-tier case where one leaf holds a contiguous slice of a
-    larger session's slots).
+    ``session.slot_offset`` places row c at global session slot
+    ``slot_offset + c`` (the sharded-tier case where one leaf holds a
+    contiguous slice of a larger session's slots); rows beyond
+    ``session.num_slots`` are not session members and carry no mask.
     """
     C, D = x.shape
-    if num_slots is None:
-        num_slots = C
+    num_slots, offset = session.num_slots, int(session.slot_offset)
     masks = jnp.stack([
-        prf_session_mask(D, slot_offset + s, num_slots, mask_key_words,
-                         degree, perm)
-        if slot_offset + s < num_slots else jnp.zeros((D,), jnp.int32)
+        prf_session_mask(D, offset + s, num_slots, session.key_words,
+                         session.degree, perm)
+        if offset + s < num_slots else jnp.zeros((D,), jnp.int32)
         for s in range(C)])
     return weighted_quantize_accum(x, weights, uniforms, scale, masks=masks)
 

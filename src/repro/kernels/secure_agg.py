@@ -11,9 +11,12 @@ counter-based PRF from ``repro.kernels.prf`` (Threefry-2x32 keyed by
 tile computes its own mask words from its grid offset while the data tile is
 resident in VMEM.  Masks therefore never exist in HBM — the mask lane costs
 zero extra HBM bandwidth and rides the same memory-bound pipeline as the
-encode.  ``repro.kernels.ref`` holds the bit-exact host oracles, and
-``repro.core.fl.secure_agg.session_mask`` is the protocol-layer reference
-the oracles are tested against.
+encode.  Every masked wrapper consumes the session through one
+:class:`SessionMeta` lane (the kernels' view of a protocol-layer
+``core.fl.secure_agg.MaskSession`` — the kernels deliberately never import
+the protocol layer).  ``repro.kernels.ref`` holds the bit-exact host
+oracles, and ``repro.core.fl.secure_agg.session_mask`` is the
+protocol-layer reference the oracles are tested against.
 
 All wrappers pad ragged shapes up to tile multiples and slice the result
 back, so real transformer parameter counts (D % block != 0) work; padded
@@ -23,6 +26,7 @@ lane (``num_slots`` counts only real session positions).
 from __future__ import annotations
 
 import functools
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +35,31 @@ from jax.experimental import pallas as pl
 from repro.kernels import prf
 
 DEFAULT_BLOCK = 4096
+
+
+class SessionMeta(NamedTuple):
+    """The in-kernel view of one pairwise-mask session.
+
+    The session-meta lane of every fused kernel: what actually rides the
+    scalar meta operand into a Pallas body.  Built from a protocol-layer
+    ``core.fl.secure_agg.MaskSession`` (the kernels deliberately do not
+    import the protocol layer — this NamedTuple is the boundary type):
+
+      key_words:   (2,) uint32 PRF key words (``prf.key_words(session.key)``)
+      num_slots:   static session size
+      degree:      static canonical mask-graph degree (0 = complete)
+      slot_offset: first GLOBAL slot of the rows this kernel call encodes —
+                   a shard of a larger session (traced ok; 0 = whole session)
+      neighbors:   optional (num_slots, degree) neighbour table selecting a
+                   RANDOM k-regular session graph instead of the static
+                   circulant enumeration
+    """
+
+    key_words: Any
+    num_slots: int
+    degree: int = 0
+    slot_offset: Any = 0
+    neighbors: Any = None
 
 
 def _pad1(x: jnp.ndarray, mult: int) -> jnp.ndarray:
@@ -164,29 +193,30 @@ def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
                                           nbrs)
 
 
-def quantize_mask_prf(x: jnp.ndarray, scale: float, slot, num_slots: int,
-                      mask_key_words, uniform_key_words, *,
-                      degree: int = 0, neighbors=None,
+def quantize_mask_prf(x: jnp.ndarray, scale: float, slot,
+                      uniform_key_words, session: SessionMeta, *,
                       block: int = DEFAULT_BLOCK,
                       interpret: bool = False) -> jnp.ndarray:
     """The fused masked-push hot loop: out = q(x * scale) + mask[slot].
 
     x: (D,) f32 already clipped/weighted/noised (the client pipeline's
-    pre-encode value); ``mask_key_words`` / ``uniform_key_words``: (2,)
-    uint32 PRF keys (see ``prf.key_words``); ``slot``: traced session
-    position; ``degree``: mask-graph degree (0 = complete).  ``neighbors``:
-    optional (num_slots, degree) table selecting a RANDOM k-regular session
-    graph (``secure_agg.neighbor_table``) instead of the static circulant
-    ring — it rides the scalar meta operand into the kernel.  Stochastic-
-    rounding uniforms AND the slot's pairwise session mask are generated
-    in-kernel from counters — neither ever exists in HBM.  Bit-identical to
-    the host oracle ``ref.quantize_mask_prf``.
+    pre-encode value); ``uniform_key_words``: (2,) uint32 PRF key of the
+    stochastic-rounding stream; ``slot``: traced ABSOLUTE session position;
+    ``session``: the :class:`SessionMeta` lane — session key words, size,
+    graph degree and the optional random-graph neighbour table all ride the
+    scalar meta operand into the kernel (``slot`` is absolute, so
+    ``session.slot_offset`` is ignored here).  Stochastic-rounding uniforms
+    AND the slot's pairwise session mask are generated in-kernel from
+    counters — neither ever exists in HBM.  Bit-identical to the host
+    oracle ``ref.quantize_mask_prf``.
     """
     (D,) = x.shape
+    num_slots, degree = session.num_slots, session.degree
+    neighbors = session.neighbors
     block = min(block, D)
     xp = _pad1(x.astype(jnp.float32), block)
     meta_parts = [
-        jnp.asarray(mask_key_words, prf.U32).reshape(2),
+        jnp.asarray(session.key_words, prf.U32).reshape(2),
         jnp.asarray(uniform_key_words, prf.U32).reshape(2),
         jnp.asarray(slot, prf.U32).reshape(1)]
     n_nbrs = 0
@@ -295,9 +325,7 @@ def _prf_masked_weighted_quantize_accum_kernel(
 def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                             uniforms: jnp.ndarray, scale: float, *,
                             masks: jnp.ndarray = None,
-                            mask_key_words=None, num_slots: int = None,
-                            mask_degree: int = 0, slot_offset=0,
-                            neighbors=None,
+                            session: SessionMeta = None,
                             block_c: int = DEFAULT_BLOCK_C,
                             block_d: int = DEFAULT_BLOCK_D,
                             interpret: bool = False) -> jnp.ndarray:
@@ -310,28 +338,25 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
     zero mod 2^32, so the masked output is bit-identical to the unmasked one.
 
     Mask lanes (mutually exclusive):
-      masks          — precomputed (C, D) int32 masks read from HBM (the
-                       PR 2 path, kept for the explicit-mask oracle tests);
-      mask_key_words — (2,) uint32 session PRF key: masks are generated
-                       IN-KERNEL per tile (no HBM mask traffic at all).
-                       ``num_slots`` bounds the session (default C); slots
-                       beyond it (padding) are excluded from the lane.
-                       ``mask_degree`` selects the mask graph (0=complete),
-                       ``neighbors`` an optional (num_slots, degree) random
-                       k-regular table (``secure_agg.neighbor_table``), and
-                       ``slot_offset`` (traced ok) places row c at global
-                       session slot ``slot_offset + c`` — the hierarchy
-                       tier's per-leaf shard of one large session.
+      masks   — precomputed (C, D) int32 masks read from HBM (the PR 2
+                path, kept for the explicit-mask oracle tests);
+      session — the :class:`SessionMeta` lane: masks are generated
+                IN-KERNEL per tile from the session's (2,)-word PRF key (no
+                HBM mask traffic at all).  ``session.num_slots`` bounds the
+                session; slots beyond it (padding) are excluded from the
+                lane.  ``session.degree`` selects the mask graph
+                (0 = complete), ``session.neighbors`` an optional random
+                k-regular table, and ``session.slot_offset`` (traced ok)
+                places row c at global session slot ``slot_offset + c`` —
+                the hierarchy tier's per-leaf shard of one large session.
 
     Ragged C or D are padded up to tile multiples (padded rows carry zero
     weight) and the output is sliced back to (D,).
     """
-    if masks is not None and mask_key_words is not None:
-        raise ValueError("pass either precomputed `masks` or PRF "
-                         "`mask_key_words`, not both")
+    if masks is not None and session is not None:
+        raise ValueError("pass either precomputed `masks` or a PRF "
+                         "`session` meta, not both")
     C, D = x.shape
-    if num_slots is None:
-        num_slots = C
     block_c = min(block_c, C)
     block_d = min(block_d, D)
     pc, pd = (-C) % block_c, (-D) % block_d
@@ -343,14 +368,15 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
     grid = (Dp // block_d, Cp // block_c)  # clients innermost for accumulation
     cd_spec = pl.BlockSpec((block_c, block_d), lambda j, i: (i, j))
     c_spec = pl.BlockSpec((block_c,), lambda j, i: (i,))
-    if mask_key_words is not None:
+    if session is not None:
+        num_slots, neighbors = session.num_slots, session.neighbors
         n_nbrs = 0 if neighbors is None else int(neighbors.shape[1])
         kern = functools.partial(
             _prf_masked_weighted_quantize_accum_kernel, scale=scale,
-            num_slots=num_slots, degree=mask_degree, block_c=block_c,
+            num_slots=num_slots, degree=session.degree, block_c=block_c,
             block_d=block_d, valid_rows=C, n_nbrs=n_nbrs)
-        meta_parts = [jnp.asarray(mask_key_words, prf.U32).reshape(2),
-                      jnp.asarray(slot_offset, prf.U32).reshape(1)]
+        meta_parts = [jnp.asarray(session.key_words, prf.U32).reshape(2),
+                      jnp.asarray(session.slot_offset, prf.U32).reshape(1)]
         if neighbors is not None:
             meta_parts.append(
                 jnp.asarray(neighbors, prf.U32).reshape(num_slots * n_nbrs))

@@ -57,6 +57,45 @@ def make_agg_mesh(num_leaves: int, devices=None):
                              (LEAF_AXIS,))
 
 
+def make_leaf_mesh(num_leaves: int, devices=None):
+    """Mesh for ``num_leaves`` LOGICAL leaf aggregators, multiplexing when
+    the machine has fewer devices than leaves.
+
+    The two-level aggregation tier (core/fl/hierarchy.py) decouples the
+    leaf count from the device count: each device on the leaf axis hosts
+    ``num_leaves / axis_size`` logical leaves (their buffer rows shard
+    contiguously over the axis, so a P("leaf") spec on a leading
+    ``num_leaves`` dimension folds consecutive leaves onto one device).
+    Picks the largest divisor of ``num_leaves`` that fits the visible
+    device count; with enough devices this is one leaf per device.  A leaf
+    count that divides badly (e.g. a prime count on a smaller machine)
+    still runs, but on fewer devices than available — warned, since the
+    silent throughput cliff is otherwise hard to diagnose.
+    """
+    avail = list(jax.devices()) if devices is None else list(devices)
+    n = min(num_leaves, len(avail))
+    while num_leaves % n:
+        n -= 1
+    if n < min(num_leaves, len(avail)):
+        import warnings
+        warnings.warn(
+            f"{num_leaves} logical leaves only divide onto {n} of the "
+            f"{len(avail)} available devices (largest divisor); pick a "
+            f"leaf count that is a multiple of the device count to use "
+            f"the whole mesh", stacklevel=2)
+    return make_agg_mesh(n, None if devices is None else avail[:n])
+
+
+def leaves_per_device(num_leaves: int, mesh) -> int:
+    """How many logical leaves each device on the leaf axis hosts."""
+    n = axis_size(mesh, LEAF_AXIS)
+    if num_leaves % n:
+        raise ValueError(
+            f"{num_leaves} logical leaves do not divide evenly over the "
+            f"{n}-device leaf mesh axis (use make_leaf_mesh)")
+    return num_leaves // n
+
+
 def axis_size(mesh, name: str) -> int:
     return mesh.shape.get(name, 1)
 

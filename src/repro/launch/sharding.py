@@ -207,3 +207,19 @@ def hierarchy_shardings(mesh, leaf_axis: str = "leaf"):
     """NamedShardings for ``ShardedAsyncServer``'s device-resident state."""
     return {k: NamedSharding(mesh, s)
             for k, s in hierarchy_specs(leaf_axis).items()}
+
+
+def leaf_device_map(num_leaves: int, mesh) -> np.ndarray:
+    """The leaves -> devices map of a (possibly multiplexed) leaf mesh.
+
+    Returns (num_leaves,) int: the position on the leaf mesh axis hosting
+    each LOGICAL leaf.  With ``num_leaves == axis size`` this is the
+    identity; with more leaves than devices (``launch.mesh.make_leaf_mesh``)
+    consecutive leaves fold onto one device — the layout a ``P("leaf")``
+    spec on a leading ``num_leaves`` dimension produces, so the buffer
+    rows of leaf ``l`` physically live on ``mesh axis position
+    leaf_device_map(...)[l]``.
+    """
+    from repro.launch.mesh import LEAF_AXIS, leaves_per_device
+    lpd = leaves_per_device(num_leaves, mesh)  # validates divisibility
+    return np.repeat(np.arange(mesh.shape[LEAF_AXIS]), lpd)

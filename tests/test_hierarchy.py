@@ -1,11 +1,15 @@
-"""The sharded hierarchical aggregation tier (core/fl/hierarchy.py).
+"""The hierarchical aggregation tier (core/fl/hierarchy.py).
 
 The tier's contract: leaf partial modular sums + a field-modulus psum +
 root decode are BIT-identical to the single-host engines at
 ``buffer_size = num_leaves * leaf_buffer`` — for every mask mode, with and
-without dropout (cross-shard recovery), for batched and sequential
-ingestion.  Multi-leaf assertions need real devices on the leaf mesh axis:
-they run in-process when the suite is launched with
+without dropout, for batched and sequential ingestion — in BOTH session
+topologies: the flat sharded global session (``two_level=False``) and the
+session tree (``two_level=True``: per-leaf local sessions flushing masked
+partials into a root session, fault-isolated recovery, and leaf-count >
+device-count multiplexing, which lets the tree tests run multi-leaf even
+on one device).  Multi-device assertions need real devices on the leaf
+mesh axis: they run in-process when the suite is launched with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI multi-device
 lane) and otherwise ride a slow-lane subprocess that forces 8 host devices
 (the test_dryrun pattern; conftest keeps the main process single-device).
@@ -45,7 +49,10 @@ def _deltas(n, seed=0):
 
 
 def _diff(a, b):
-    return float(jnp.abs(a["w"] - b["w"]).max())
+    # compare on host: the two sides may be committed to DIFFERENT meshes
+    # (e.g. a 1-leaf flat tier vs a multiplexed tree on the same machine),
+    # and a jnp subtraction across incompatible device sets raises
+    return float(np.abs(np.asarray(a["w"]) - np.asarray(b["w"])).max())
 
 
 def _pair(fl, mode, num_leaves, leaf_buffer):
@@ -163,6 +170,204 @@ def test_tier_requires_field_and_bounds_batches():
     assert srv._fill == 1  # rejected batches mutated nothing
 
 
+# --- the session tree (two_level=True): leaf sessions -> root session --------
+# Leaf multiplexing decouples leaf count from device count, so the tree's
+# multi-leaf contracts are enforced on ANY machine (all leaves fold onto
+# one device here); the multidev section re-runs them on a real 8-device
+# mesh with 16 logical leaves (2 per device).
+def _tree_pair(fl, mode, num_leaves, leaf_buffer):
+    """A single-host server and a SESSION-TREE tier over the same size."""
+    params = _params()
+    srv1 = AsyncServer(params, fl, buffer_size=num_leaves * leaf_buffer,
+                       mask_mode=mode, staleness_mode="constant")
+    srv2 = ShardedAsyncServer(params, fl, num_leaves=num_leaves,
+                              leaf_buffer=leaf_buffer, mask_mode=mode,
+                              staleness_mode="constant", two_level=True)
+    return srv1, srv2
+
+
+def _flat_tree_pair(fl, mode, num_leaves, leaf_buffer):
+    """The SAME tier shape under both topologies (flat needs 1 leaf/device,
+    so multiplex-only configs pass num_leaves=1 flat equivalents)."""
+    params = _params()
+    flat = ShardedAsyncServer(params, fl, num_leaves=1,
+                              leaf_buffer=num_leaves * leaf_buffer,
+                              mask_mode=mode, staleness_mode="constant",
+                              two_level=False)
+    tree = ShardedAsyncServer(params, fl, num_leaves=num_leaves,
+                              leaf_buffer=leaf_buffer, mask_mode=mode,
+                              staleness_mode="constant", two_level=True)
+    return flat, tree
+
+
+@pytest.mark.parametrize("num_leaves", [2, 4])
+@pytest.mark.parametrize("mode", MODES)
+def test_two_level_bit_identical_no_dropout(mode, num_leaves):
+    """The acceptance bar: the session tree == the single-host engine, bit
+    for bit, for all four mask modes — each level's masks cancel (leaf
+    sessions inside each leaf partial, root masks through the psum), so
+    only the identical q-streams remain.  Runs MULTIPLEXED (leaves >
+    devices) on a single-device suite."""
+    srv1, srv2 = _tree_pair(FL, mode, num_leaves, 2)
+    assert srv2.two_level
+    ds = _deltas(num_leaves * 2)
+    for d in ds:
+        srv1.push({"w": d}, srv1.version)
+    srv2.push_batch({"w": jnp.stack(ds)}, srv2.version)
+    assert srv1.version == srv2.version == 1
+    assert _diff(srv1.params, srv2.params) == 0.0
+    for k in ("update_norm", "clip_fraction", "weight_total"):
+        assert float(srv1.last_metrics[k]) == float(srv2.last_metrics[k])
+
+
+@pytest.mark.parametrize("degree", [0, 4])
+@pytest.mark.parametrize("mode", ["client", "tee_stream", "off"])
+def test_two_level_nested_dropout_equals_flat_survivors(mode, degree):
+    """Nested dropout: one WHOLE leaf dies (slots 4, 5) AND individual
+    clients inside surviving leaves drop (slots 1, 7) — the two-level
+    decode (leaf-local recovery sweeps + root recovery for the dead leaf)
+    equals the flat tier's survivor aggregate bit-exactly."""
+    fl = dataclasses.replace(FL, secure_agg_degree=degree)
+    flat, tree = _flat_tree_pair(fl, mode, 4, 2)
+    ds = _deltas(8)
+    keep = [0, 2, 3, 6]  # leaf 2 fully dead; leaves 0 and 3 lose a client
+    flat.push_batch({"w": jnp.stack([ds[s] for s in keep])}, 0, slots=keep)
+    tree.push_batch({"w": jnp.stack([ds[s] for s in keep])}, 0, slots=keep)
+    frng = jax.random.PRNGKey(17)
+    flat.flush(rng=frng)
+    tree.flush(rng=frng)
+    assert tree.version == 1
+    assert _diff(flat.params, tree.params) == 0.0
+    assert float(tree.last_metrics["weight_total"]) == pytest.approx(
+        len(keep))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_two_level_nested_dropout_property(seed):
+    """Property sweep (seeded): random survivor sets — always including at
+    least one fully-dead leaf and one partially-surviving leaf — decode to
+    the flat survivor aggregate bit-exactly (client mode, random k-regular
+    flat graph at degree 4 vs per-leaf complete graphs)."""
+    rs = np.random.RandomState(seed)
+    L, Bl = 4, 2
+    fl = dataclasses.replace(FL, secure_agg_degree=4)
+    dead_leaf = int(rs.randint(L))
+    keep = [s for s in range(L * Bl)
+            if s // Bl != dead_leaf and rs.uniform() > 0.35]
+    if not keep:
+        keep = [(dead_leaf * Bl + Bl) % (L * Bl)]
+    flat, tree = _flat_tree_pair(fl, "client", L, Bl)
+    ds = _deltas(L * Bl, seed=seed)
+    for s in keep:
+        cp_f = flat.encode_push({"w": ds[s]}, 0, slot=s)
+        cp_t = tree.encode_push({"w": ds[s]}, 0, slot=s)
+        flat.push_encoded(cp_f)
+        tree.push_encoded(cp_t)
+    frng = jax.random.PRNGKey(100 + seed)
+    flat.flush(rng=frng)
+    tree.flush(rng=frng)
+    assert _diff(flat.params, tree.params) == 0.0, (seed, keep)
+
+
+@pytest.mark.parametrize("two_level", [False, True])
+def test_tier_ingest_is_destination_sharded_and_bit_equal(two_level):
+    """push_batch routes by destination leaf and encodes INSIDE the
+    shard_map (no central (K, D) encode) — and lands bit-identical buffer
+    state to sequential single pushes, in both topologies."""
+    params = _params()
+    ds = _deltas(6)
+
+    def mk():
+        # the flat layout needs one device per leaf, so its single-device
+        # variant is 1 leaf; the tree multiplexes 2 leaves onto the device
+        if two_level:
+            return ShardedAsyncServer(params, FL, num_leaves=2,
+                                      leaf_buffer=4, mask_mode="tee_stream",
+                                      staleness_mode="constant",
+                                      two_level=True)
+        return ShardedAsyncServer(params, FL, num_leaves=1, leaf_buffer=8,
+                                  mask_mode="tee_stream",
+                                  staleness_mode="constant")
+
+    srv_a, srv_b = mk(), mk()
+    for d in ds:
+        srv_a.push({"w": d}, 0)
+    srv_b.push_batch({"w": jnp.stack(ds)}, 0)  # one destination-sharded call
+    assert bool(jnp.all(srv_a._buf == srv_b._buf))
+    assert bool(jnp.all(srv_a._wts == srv_b._wts))
+    assert srv_a._fill == srv_b._fill == 6
+
+
+def test_two_level_client_rows_and_root_isolation():
+    """Client-encoded rows for the tree are masked under LEAF sessions:
+    the same delta/slot encodes differently under two_level (different
+    mask) but identical q-streams — and the tree still applies to the
+    same params as the single host over a full session."""
+    fl = FL
+    srv1, srv2 = _tree_pair(fl, "client", 2, 2)
+    ds = _deltas(4)
+    cps1 = [srv1.encode_push({"w": d}, 0, slot=i) for i, d in enumerate(ds)]
+    cps2 = srv2.encode_push_batch({"w": jnp.stack(ds)}, 0)
+    # leaf-session masks differ from the flat session's masks...
+    assert not bool(jnp.all(cps1[0].row == cps2[0].row))
+    # ...but cancellation + decode make the applied rounds bit-identical
+    for cp in cps1:
+        srv1.push_encoded(cp)
+    srv2.push_encoded_batch(cps2)
+    assert srv1.version == srv2.version == 1
+    assert _diff(srv1.params, srv2.params) == 0.0
+
+
+def test_client_mode_mixed_staleness_batch():
+    """push_batch's documented (K,) client_version form must work in
+    mask_mode='client' too (regression: the client-mode branch only
+    handled a scalar): per-row staleness reaches the ClientPush metadata
+    and the staleness weights."""
+    srv = ShardedAsyncServer(_params(), FL, num_leaves=1, leaf_buffer=4,
+                             mask_mode="client")  # polynomial weighting
+    srv.version = 3
+    cps = srv.encode_push_batch({"w": jnp.stack(_deltas(3))},
+                                jnp.asarray([3, 2, 1]))
+    assert [cp.staleness for cp in cps] == [0.0, 1.0, 2.0]
+    ws = [float(cp.weight) for cp in cps]
+    assert ws[0] == pytest.approx(1.0) and ws[1] > ws[2]  # discounting real
+    srv.push_encoded_batch(cps)
+    assert srv._fill == 3
+    srv.push_batch({"w": jnp.stack(_deltas(1))}, [2], slots=[3])
+    assert srv.version == 4  # session applied through the same path
+
+
+def test_config_defaults_drive_the_tier_shape():
+    """FLConfig.num_leaves/leaf_buffer/two_level configure the facade when
+    constructor arguments are omitted; an unset shape is rejected."""
+    fl = dataclasses.replace(FL, num_leaves=2, leaf_buffer=3, two_level=True)
+    srv = ShardedAsyncServer(_params(), fl)
+    assert (srv.num_leaves, srv.leaf_buffer, srv.two_level) == (2, 3, True)
+    assert srv.buffer_size == 6
+    with pytest.raises(ValueError):
+        ShardedAsyncServer(_params(), FL)  # shape unset
+
+
+def test_leaf_multiplexing_maps_leaves_onto_devices():
+    """make_leaf_mesh folds logical leaves onto the available devices and
+    leaf_device_map reports the leaves -> devices layout."""
+    from repro.launch.mesh import leaves_per_device, make_leaf_mesh
+    from repro.launch.sharding import leaf_device_map
+    mesh = make_leaf_mesh(6)  # single-device suite: all 6 leaves on 1 dev
+    n = mesh.shape["leaf"]
+    assert 6 % n == 0
+    assert leaves_per_device(6, mesh) == 6 // n
+    m = leaf_device_map(6, mesh)
+    assert m.shape == (6,) and m[0] == 0
+    assert np.all(np.diff(m) >= 0)  # contiguous fold
+    if jax.device_count() > 1:  # badly-dividing counts warn, not silently
+        import warnings  # degenerate (e.g. prime leaves on a small mesh)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            make_leaf_mesh(jax.device_count() + 1)
+        assert any("divide" in str(x.message) for x in w)
+
+
 # --- multi-leaf: the real mesh (8 forced host devices) -----------------------
 @multidev
 @pytest.mark.parametrize("num_leaves", [2, 4])
@@ -258,6 +463,55 @@ def test_multidev_buffer_is_physically_sharded():
                              mask_mode="tee_stream")
     shards = srv._buf.sharding.device_set
     assert len(shards) == 8
+
+
+@multidev
+@pytest.mark.parametrize("num_leaves", [8, 16])
+@pytest.mark.parametrize("mode", MODES)
+def test_multidev_two_level_multiplexed_bit_identical(num_leaves, mode):
+    """The session tree on a REAL 8-device mesh — including the MULTIPLEXED
+    configuration (16 logical leaves, 2 per device): full sessions apply
+    bit-identically to the single-host engine for all four mask modes."""
+    srv1, srv2 = _tree_pair(FL, mode, num_leaves, 2)
+    assert srv2.mesh.shape["leaf"] == 8  # 8 devices either way
+    ds = _deltas(num_leaves * 2)
+    for d in ds:
+        srv1.push({"w": d}, srv1.version)
+    srv2.push_batch({"w": jnp.stack(ds)}, srv2.version)
+    assert srv1.version == srv2.version == 1
+    assert _diff(srv1.params, srv2.params) == 0.0
+    for k in ("update_norm", "clip_fraction", "weight_total"):
+        assert float(srv1.last_metrics[k]) == float(srv2.last_metrics[k])
+
+
+@multidev
+@pytest.mark.parametrize("degree", [0, 4])
+def test_multidev_two_level_nested_dropout_multiplexed(degree):
+    """16 logical leaves on 8 devices, nested dropout: two whole leaves die
+    (one per device half) and individual clients drop inside surviving
+    leaves — the tree's leaf-local + root recovery equals the flat tier's
+    cross-shard recovery bit-exactly."""
+    fl = dataclasses.replace(FL, secure_agg_degree=degree)
+    params = _params()
+    flat = ShardedAsyncServer(params, fl, num_leaves=8, leaf_buffer=4,
+                              mask_mode="client", staleness_mode="constant",
+                              two_level=False)
+    tree = ShardedAsyncServer(params, fl, num_leaves=16, leaf_buffer=2,
+                              mask_mode="client", staleness_mode="constant",
+                              two_level=True)
+    ds = _deltas(32)
+    dead = {3, 11}  # logical tree leaves 3 and 11 never deliver
+    keep = [s for s in range(32)
+            if s // 2 not in dead and (s % 5 != 4)]  # plus client dropouts
+    for s in keep:
+        flat.push_encoded(flat.encode_push({"w": ds[s]}, 0, slot=s))
+        tree.push_encoded(tree.encode_push({"w": ds[s]}, 0, slot=s))
+    frng = jax.random.PRNGKey(23)
+    flat.flush(rng=frng)
+    tree.flush(rng=frng)
+    assert _diff(flat.params, tree.params) == 0.0
+    assert float(tree.last_metrics["weight_total"]) == pytest.approx(
+        len(keep))
 
 
 # --- slow-lane subprocess: force the 8-device mesh from a 1-device suite -----

@@ -128,6 +128,35 @@ def test_ring_degree_validation():
     assert sa.effective_degree(8, 4) == 4
 
 
+def test_small_session_degree_clamps_to_complete_graph():
+    """The small-B collusion guard (see README "Secure aggregation"): a
+    k-regular request against a session of B <= k+1 slots clamps to the
+    COMPLETE graph — it never silently under-connects a small session,
+    where a sparse graph's k neighbours would be the only parties a
+    colluding server needs to unmask a slot.  Enforced at every layer:
+    effective_degree, MaskSession construction, and the spec-derived leaf
+    sessions of the two-level tier."""
+    for B in (2, 3, 4, 5):
+        assert sa.effective_degree(B, 4) == 0, B  # B <= degree+1 -> complete
+    assert sa.effective_degree(6, 4) == 4  # first size the ring fits
+    # make_session canonicalizes identically (and drops the pointless perm)
+    sess = sa.make_session(jax.random.PRNGKey(0), 4, degree=4,
+                           random_graph=True)
+    assert sess.degree == 0 and sess.perm is None
+    # a two-level LEAF session re-canonicalizes against the LEAF size even
+    # when the engine-wide spec keeps the sparse degree for the full buffer
+    from repro.configs.base import FLConfig
+    from repro.core.fl import aggregation as agg
+    spec = agg.make_spec(
+        FLConfig(secure_agg_bits=32, secure_agg_degree=4), 16)
+    assert spec.mask_degree == 4
+    leaf = agg.make_mask_session(spec, jax.random.PRNGKey(1), num_slots=4)
+    assert leaf.degree == 0 and leaf.perm is None
+    # and the complete small session still cancels
+    rows = [leaf.mask((33,), s) for s in range(4)]
+    assert bool(jnp.all(sum(rows) == 0))
+
+
 # --- random k-regular session graphs (Bell et al.) ---------------------------
 @pytest.mark.parametrize("B,degree", [(8, 4), (12, 6), (9, 2)])
 def test_random_graph_masks_match_oracle_and_cancel(B, degree):
@@ -188,22 +217,21 @@ def test_random_graph_kernel_lanes_bit_exact(D, block):
     perm = sa.session_perm(B, key)
     tbl = sa.neighbor_table(B, degree, perm)
     mkw, ukw = _kw(1), _kw(2)
+    meta = ksa.SessionMeta(key_words=mkw, num_slots=B, degree=degree,
+                           neighbors=tbl)
     x = jax.random.normal(key, (D,)) * 2.0
     for slot in (0, 3, B - 1):
-        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
-                                    degree=degree, neighbors=tbl,
+        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, ukw, meta,
                                     block=block, interpret=True)
-        want = ref.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
-                                     degree, np.asarray(perm))
+        want = ref.quantize_mask_prf(x, float(1 << 20), slot, ukw, meta,
+                                     np.asarray(perm))
         assert bool(jnp.all(got == want)), slot
     xb = jax.random.normal(jax.random.fold_in(key, 1), (B, D))
     w = jax.random.uniform(jax.random.fold_in(key, 2), (B,))
     u = jax.random.uniform(jax.random.fold_in(key, 3), (B, D))
     got = ksa.weighted_quantize_accum(xb, w, u, float(1 << 20),
-                                      mask_key_words=mkw, mask_degree=degree,
-                                      neighbors=tbl, interpret=True)
-    want = ref.weighted_quantize_accum_prf(xb, w, u, float(1 << 20), mkw,
-                                           degree=degree,
+                                      session=meta, interpret=True)
+    want = ref.weighted_quantize_accum_prf(xb, w, u, float(1 << 20), meta,
                                            perm=np.asarray(perm))
     assert bool(jnp.all(got == want))
     # full session: random-graph masks cancel inside the accumulator too
@@ -223,21 +251,22 @@ def test_accum_kernel_slot_offset_shards_one_session(offset, C, B):
     w = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
     u = jax.random.uniform(jax.random.fold_in(key, 2), (B, D))
     mkw = _kw(7)
+    meta = ksa.SessionMeta(key_words=mkw, num_slots=B, slot_offset=offset)
     got = ksa.weighted_quantize_accum(
         x[offset:offset + C], w[offset:offset + C], u[offset:offset + C],
-        float(1 << 20), mask_key_words=mkw, num_slots=B, slot_offset=offset,
-        interpret=True)
+        float(1 << 20), session=meta, interpret=True)
     want = ref.weighted_quantize_accum_prf(
         x[offset:offset + C], w[offset:offset + C], u[offset:offset + C],
-        float(1 << 20), mkw, num_slots=B, slot_offset=offset)
+        float(1 << 20), meta)
     assert bool(jnp.all(got == want))
     # disjoint shards covering the whole session == one full-session call
     parts = sum(ksa.weighted_quantize_accum(
         x[o:o + 4], w[o:o + 4], u[o:o + 4], float(1 << 20),
-        mask_key_words=mkw, num_slots=B, slot_offset=o, interpret=True)
+        session=meta._replace(slot_offset=o), interpret=True)
         for o in (0, 4))
-    full = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
-                                       mask_key_words=mkw, interpret=True)
+    full = ksa.weighted_quantize_accum(
+        x, w, u, float(1 << 20),
+        session=ksa.SessionMeta(key_words=mkw, num_slots=B), interpret=True)
     assert bool(jnp.all(parts == full))
 
 
@@ -265,12 +294,11 @@ def test_quantize_mask_prf_kernel_bit_exact(D, block, degree):
     key = jax.random.PRNGKey(D + degree)
     x = jax.random.normal(key, (D,)) * 2.0
     mkw, ukw = _kw(1), _kw(2)
+    meta = ksa.SessionMeta(key_words=mkw, num_slots=B, degree=degree)
     for slot in (0, 3, B - 1):
-        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
-                                    degree=degree, block=block,
-                                    interpret=True)
-        want = ref.quantize_mask_prf(x, float(1 << 20), slot, B, mkw, ukw,
-                                     degree)
+        got = ksa.quantize_mask_prf(x, float(1 << 20), slot, ukw, meta,
+                                    block=block, interpret=True)
+        want = ref.quantize_mask_prf(x, float(1 << 20), slot, ukw, meta)
         assert got.dtype == jnp.int32
         assert bool(jnp.all(got == want)), (D, block, degree, slot)
 
@@ -284,12 +312,10 @@ def test_weighted_quantize_accum_prf_lane_bit_exact(C, D, degree):
     x = jax.random.normal(key, (C, D))
     w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
     u = jax.random.uniform(jax.random.fold_in(key, 2), (C, D))
-    mkw = _kw(3)
+    meta = ksa.SessionMeta(key_words=_kw(3), num_slots=C, degree=degree)
     got = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
-                                      mask_key_words=mkw, mask_degree=degree,
-                                      interpret=True)
-    want = ref.weighted_quantize_accum_prf(x, w, u, float(1 << 20), mkw,
-                                           degree=degree)
+                                      session=meta, interpret=True)
+    want = ref.weighted_quantize_accum_prf(x, w, u, float(1 << 20), meta)
     assert bool(jnp.all(got == want))
     # full session: the in-kernel masks cancel bit-exactly
     plain = ksa.weighted_quantize_accum(x, w, u, float(1 << 20),
@@ -302,10 +328,11 @@ def test_kernel_mask_lane_matches_session_mask_oracle_tilewise():
     every block size equals the single host ``session_mask`` stream."""
     B, D, key = 8, 4096, jax.random.PRNGKey(21)
     mkw, ukw = jnp.stack(prf.key_words(key)), _kw(9)
+    meta = ksa.SessionMeta(key_words=mkw, num_slots=B)
     want_mask = sa.session_mask((D,), 3, B, key)
     zero = jnp.zeros((D,), jnp.float32)  # q(0) == 0 -> output IS the mask
     for block in (512, 1024, 4096):
-        got = ksa.quantize_mask_prf(zero, 1.0, 3, B, mkw, ukw, block=block,
+        got = ksa.quantize_mask_prf(zero, 1.0, 3, ukw, meta, block=block,
                                     interpret=True)
         assert bool(jnp.all(got == want_mask)), block
 
@@ -330,18 +357,19 @@ def test_padded_wrappers_match_unpadded_semantics(D):
 
 def test_fused_kernels_take_no_mask_arrays():
     """The no-HBM-mask property, enforced at the API level: the PRF lanes
-    consume a (2,)-word key — never a (B, D) mask operand — and reject
-    being given both."""
+    consume a session meta (a (2,)-word key + static graph shape) — never
+    a (B, D) mask operand — and reject being given both."""
     import inspect
     sig = inspect.signature(ksa.quantize_mask_prf)
-    assert "mask" not in sig.parameters  # only key words
+    assert "mask" not in sig.parameters  # only the session-meta lane
     x = jnp.zeros((8, 512), jnp.float32)
     u = jnp.zeros((8, 512), jnp.float32)
     w = jnp.ones((8,), jnp.float32)
     with pytest.raises(ValueError):
         ksa.weighted_quantize_accum(
             x, w, u, 1.0, masks=jnp.zeros((8, 512), jnp.int32),
-            mask_key_words=_kw(0), interpret=True)
+            session=ksa.SessionMeta(key_words=_kw(0), num_slots=8),
+            interpret=True)
 
 
 # --- the host encode pipeline is the kernel pipeline -------------------------
@@ -358,11 +386,11 @@ def test_encode_masked_contribution_host_equals_kernel():
         spec = agg.make_spec(fl, 8)
         assert spec.mask_degree == degree
         x = jax.random.normal(jax.random.PRNGKey(degree), (D,))
-        skey = jax.random.PRNGKey(77)
+        sess = agg.make_mask_session(spec, jax.random.PRNGKey(77))
         rng = jax.random.PRNGKey(88)
-        host = agg.encode_masked_contribution(x, 0.7, 3, spec, skey, rng,
+        host = agg.encode_masked_contribution(x, 0.7, 3, spec, sess, rng,
                                               use_pallas=False)
-        kern = agg.encode_masked_contribution(x, 0.7, 3, spec, skey, rng,
+        kern = agg.encode_masked_contribution(x, 0.7, 3, spec, sess, rng,
                                               use_pallas=True)
         assert bool(jnp.all(host[0] == kern[0])), degree
         assert float(host[1]) == float(kern[1])

@@ -114,6 +114,33 @@ def test_field_modulus_shapes():
     assert bool(jnp.all(sa.to_field(q, 1 << 32) == q))
 
 
+def test_mask_session_carries_field_and_reduces():
+    """MaskSession bundles the session's field modulus: ``reduce`` is the
+    ``to_field`` wire reduction for that session, and masks generated
+    through the session object equal the free-function streams."""
+    key = jax.random.PRNGKey(5)
+    sess = sa.make_session(key, 6, modulus=sa.field_modulus(16, 6))
+    assert sess.modulus == 1 << 19
+    q = jnp.asarray([-5, 0, (1 << 20) + 3], jnp.int32)
+    assert bool(jnp.all(sess.reduce(q) == sa.to_field(q, sess.modulus)))
+    assert int(sess.reduce(q).min()) >= 0
+    # the engines' construction point wires the spec's REAL field through
+    # (and a leaf-sized session keeps the engine-wide field — partials
+    # still combine into the full aggregate at the root)
+    from repro.configs.base import FLConfig
+    from repro.core.fl import aggregation as agg
+    spec = agg.make_spec(FLConfig(secure_agg_bits=16), 8)
+    assert spec.field_modulus == sa.field_modulus(16, 8) == 1 << 19
+    esess = agg.make_mask_session(spec, key)
+    assert esess.modulus == 1 << 19
+    assert agg.make_mask_session(spec, key, num_slots=2).modulus == 1 << 19
+    # session-object mask == free-function mask (same PRF tree)
+    assert bool(jnp.all(sess.mask((17,), 2)
+                        == sa.session_mask((17,), 2, 6, key)))
+    assert bool(jnp.all(sess.recovery((17,), jnp.ones((6,)))
+                        == jnp.zeros((17,), jnp.int32)))
+
+
 def test_field_modulus_2_31_boundary():
     """C == 2^31 must not overflow the int32 scalar path (regression)."""
     bits, count = 24, 128
