@@ -117,7 +117,7 @@ def _one_masked_round(srv, deltas):
         pushes = []
         for slot, d in enumerate(deltas):
             t0 = _time.perf_counter()
-            cp = srv.encode_push({"w": d}, srv.version, slot=slot)
+            cp = srv.encode_push(d, srv.version, slot=slot)
             jax.block_until_ready(cp.row)
             c_times.append(_time.perf_counter() - t0)
             pushes.append(cp)
@@ -126,7 +126,7 @@ def _one_masked_round(srv, deltas):
         if srv.mask_mode == "client":
             srv.push_encoded(p)
         else:
-            srv.push({"w": p}, srv.version)
+            srv.push(p, srv.version)
 
     a_times = []
     for p in pushes[:-1]:
@@ -140,8 +140,14 @@ def _one_masked_round(srv, deltas):
     return c_times, a_times, _time.perf_counter() - t0
 
 
-def _measure_masked_point(B: int, D: int, degrees, rounds: int):
+def _measure_masked_point(B: int, D: int, degrees, rounds: int,
+                          params=None, chunk_elems: int = 0):
     """All mask modes/graphs at one (B, D), rounds interleaved round-robin.
+
+    ``params`` swaps the default flat {"w": (D,)} model for an arbitrary
+    pytree (e.g. a registry transformer) — deltas are pushed as pytrees
+    and, with ``chunk_elems`` > 0, carried through the tier as a
+    multi-chunk ParamPlan (per-layer sessions, no full-model flatten).
 
     Interleaving is load-drift hygiene: every configuration sees the same
     machine conditions, so the medians' RATIOS are stable even when the
@@ -165,10 +171,18 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int):
     from repro.configs.base import FLConfig
     from repro.core.fl.async_fl import AsyncServer
 
-    params = {"w": jnp.zeros((D,), jnp.float32)}
+    if params is None:
+        params = {"w": jnp.zeros((D,), jnp.float32)}
     key = jax.random.PRNGKey(0)
-    deltas = [0.1 * jax.random.normal(jax.random.fold_in(key, i), (D,))
-              for i in range(B)]
+    leaves, treedef = jax.tree.flatten(params)
+    deltas = [
+        treedef.unflatten([
+            0.1 * jax.random.normal(
+                jax.random.fold_in(jax.random.fold_in(key, i), j),
+                l.shape, jnp.float32).astype(l.dtype)
+            for j, l in enumerate(leaves)])
+        for i in range(B)
+    ]
 
     from repro.core.fl import secure_agg as sa
 
@@ -181,12 +195,13 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int):
             if (mode, graph) in configs:
                 continue  # degree collapsed to an already-measured graph
             fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32,
-                          secure_agg_degree=degree)
+                          secure_agg_degree=degree,
+                          param_chunk_elems=chunk_elems)
             srv = AsyncServer(params, fl, buffer_size=B, mask_mode=mode,
                               staleness_mode="constant")
             for _ in range(2):  # compile the push/encode/apply paths
                 for d in deltas:
-                    srv.push({"w": d}, srv.version)
+                    srv.push(d, srv.version)
             jax.block_until_ready(srv.params)
             configs.append((mode, graph))
             servers.append(srv)
@@ -210,9 +225,20 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int):
     return out
 
 
+def _registry_params(arch: str):
+    """Init a reduced registry model; returns (params pytree, total dim)."""
+    from repro.configs import registry
+    from repro.models.model import build_model
+
+    cfg = registry.get_config(arch, reduced=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return params, sum(int(x.size) for x in jax.tree.leaves(params))
+
+
 def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
                      rounds: int = 12, transformer_dim: int = 1_048_576,
-                     roofline: bool = True) -> None:
+                     roofline: bool = True, models=(),
+                     chunk_elems: int = 262_144) -> None:
     """Per-buffer-round cost of in-path masking vs the PR 1 unmasked engine.
 
     Sweeps mask modes x mask-graph degrees over (dim, buffer) points plus
@@ -222,6 +248,11 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
     round-critical-path against the unmasked engine at the same (B, D):
     the per-round overhead a fleet (parallel clients) actually experiences,
     which is the factor the paper's architecture needs to keep negligible.
+
+    ``models`` adds real registry transformer shapes: each arch's reduced
+    params are pushed as a pytree through a multi-chunk ParamPlan
+    (``chunk_elems`` per chunk, per-layer sessions) and land in the CSV
+    with ``model=<arch>``; synthetic flat points carry ``model=flat``.
     """
     points = [(B, D, rounds) for D in dims for B in buffer_sizes]
     if transformer_dim:
@@ -235,20 +266,36 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
             if mode == "off":
                 base = r
             r["overhead_vs_off"] = r["critical_ms"] / base["critical_ms"]
-            results.append((mode, graph, B, D, r))
+            results.append(("flat", mode, graph, B, D, r))
             emit(f"async/masked_{mode}_{graph}_critical_ms",
                  r["critical_ms"],
                  f"B={B};D={D};x{r['overhead_vs_off']:.2f};"
                  f"total={r['total_ms']:.1f}ms")
 
+    for arch in models:
+        params, total = _registry_params(arch)
+        B = max(buffer_sizes)
+        base = None
+        for mode, graph, r in _measure_masked_point(
+                B, total, degrees, max(2, rounds // 4),
+                params=params, chunk_elems=chunk_elems):
+            if mode == "off":
+                base = r
+            r["overhead_vs_off"] = r["critical_ms"] / base["critical_ms"]
+            results.append((arch, mode, graph, B, total, r))
+            emit(f"async/masked_{arch}_{mode}_{graph}_critical_ms",
+                 r["critical_ms"],
+                 f"B={B};D={total};chunk={chunk_elems};"
+                 f"x{r['overhead_vs_off']:.2f}")
+
     os.makedirs(os.path.dirname(MASKED_CSV), exist_ok=True)
     with open(MASKED_CSV, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["mask_mode", "graph", "buffer_size", "dim", "client_ms",
-                    "arrival_ms", "flush_ms", "critical_ms", "total_ms",
-                    "overhead_vs_off"])
-        for mode, graph, B, D, r in results:
-            w.writerow([mode, graph, B, D, f"{r['client_ms']:.3f}",
+        w.writerow(["model", "mask_mode", "graph", "buffer_size", "dim",
+                    "client_ms", "arrival_ms", "flush_ms", "critical_ms",
+                    "total_ms", "overhead_vs_off"])
+        for model, mode, graph, B, D, r in results:
+            w.writerow([model, mode, graph, B, D, f"{r['client_ms']:.3f}",
                         f"{r['arrival_ms']:.3f}", f"{r['flush_ms']:.3f}",
                         f"{r['critical_ms']:.3f}", f"{r['total_ms']:.3f}",
                         f"{r['overhead_vs_off']:.3f}x"])
@@ -286,6 +333,12 @@ def run(argv=None) -> None:
                    help="measured buffer rounds per configuration")
     p.add_argument("--transformer-dim", type=int, default=1_048_576,
                    help="extra transformer-scale dim row (0 disables)")
+    p.add_argument("--model", action="append", default=None,
+                   help="registry arch id(s) to sweep as real pytree "
+                        "models through the chunked masked path "
+                        "(repeatable, e.g. --model qwen2-1.5b)")
+    p.add_argument("--chunk-elems", type=int, default=262_144,
+                   help="ParamPlan chunk budget for --model rows")
     p.add_argument("--masked-only", action="store_true",
                    help="skip the fleet/bytes-model benches (CI smoke)")
     p.add_argument("--no-roofline", action="store_true")
@@ -300,7 +353,9 @@ def run(argv=None) -> None:
                                    else (0, 4)),
                      rounds=args.rounds,
                      transformer_dim=args.transformer_dim,
-                     roofline=not args.no_roofline)
+                     roofline=not args.no_roofline,
+                     models=tuple(args.model or ()),
+                     chunk_elems=args.chunk_elems)
 
 
 if __name__ == "__main__":

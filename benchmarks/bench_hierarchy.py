@@ -95,15 +95,15 @@ def _one_session(srv, payloads, mode):
         batches, s0 = [], 0
         for p in payloads:  # concurrent clients encode for ASSIGNED slots
             k = jax.tree.leaves(p)[0].shape[0]
-            batches.append(srv.encode_push_batch(
-                p, srv.version, slots=list(range(s0, s0 + k))))
+            batches.append(srv.encode_push(
+                p, srv.version, slot=list(range(s0, s0 + k))))
             s0 += k
         jax.block_until_ready(batches[-1][-1].row)
         enc = time.perf_counter() - t0
-        land = srv.push_encoded_batch
+        land = srv.push_encoded
     else:
         batches = payloads
-        land = lambda p: srv.push_batch(p, srv.version)
+        land = lambda p: srv.push(p, srv.version)
     ingest = []
     for b in batches[:-1]:
         t0 = time.perf_counter()
@@ -133,10 +133,10 @@ def _dead_leaf_session(srv, payloads, mode):
             break
         p = jax.tree.map(lambda x: x[:len(take)], p)
         if mode == "client":
-            srv.push_encoded_batch(
-                srv.encode_push_batch(p, srv.version, slots=take))
+            srv.push_encoded(
+                srv.encode_push(p, srv.version, slot=take))
         else:
-            srv.push_batch(p, srv.version, slots=take)
+            srv.push(p, srv.version, slots=take)
         s0 += len(take)
     jax.block_until_ready(srv._buf)
     t0 = time.perf_counter()

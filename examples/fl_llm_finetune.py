@@ -1,14 +1,19 @@
 """End-to-end driver: federated DP training of a transformer LM.
 
-Trains a reduced Qwen2-family model (--size sets width; ~100M with
---size full-ish hardware, ~1-5M for the CPU container default) for a few
+Trains a reduced registry model (any --arch from the model zoo; --d-model
+etc. shrink the default Qwen2 further for the CPU container) for a few
 hundred DP-FL rounds on non-IID client token streams, with checkpointing
 and privacy accounting.  This is the paper's architecture applied to an
 LLM workload — one sequence per device, per-client clipping == per-example
-DP-SGD.
+DP-SGD.  With --masked the cohort aggregate runs through the pairwise-
+masked secure-agg path; --chunk-elems carries the model through the tier
+as a multi-chunk ParamPlan (per-layer sessions, no full-model flatten).
 
 Run (CPU, ~minutes):
   PYTHONPATH=src python examples/fl_llm_finetune.py --rounds 200
+Masked pytree path on a registry arch:
+  PYTHONPATH=src python examples/fl_llm_finetune.py --arch qwen2-1.5b \
+      --rounds 50 --masked --chunk-elems 65536
 Scale up (the same code on a real pod):
   PYTHONPATH=src python examples/fl_llm_finetune.py --d-model 768 \
       --layers 12 --rounds 300 --seq-len 512        # ~100M params
@@ -23,12 +28,15 @@ import numpy as np
 from repro.checkpoint.checkpoint import save
 from repro.configs import registry
 from repro.configs.base import FLConfig
+from repro.core.fl import aggregation as agg
 from repro.core.fl.accountant import RDPAccountant
 from repro.core.fl.round import build_round_step, init_fl_state
 from repro.data.synthetic import fl_token_batch
 from repro.models.model import build_model
 
 ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-1.5b", choices=registry.ARCH_IDS,
+                help="registry architecture (reduced preset)")
 ap.add_argument("--rounds", type=int, default=200)
 ap.add_argument("--cohort", type=int, default=16)
 ap.add_argument("--seq-len", type=int, default=64)
@@ -36,6 +44,11 @@ ap.add_argument("--d-model", type=int, default=128)
 ap.add_argument("--layers", type=int, default=4)
 ap.add_argument("--vocab", type=int, default=2048)
 ap.add_argument("--noise", type=float, default=0.0)
+ap.add_argument("--masked", action="store_true",
+                help="run the cohort aggregate through pairwise masking")
+ap.add_argument("--chunk-elems", type=int, default=0,
+                help="ParamPlan chunk budget; 0 = single flat chunk")
+ap.add_argument("--secure-agg-bits", type=int, default=32)
 ap.add_argument("--checkpoint-dir", default=None)
 args = ap.parse_args()
 
@@ -47,19 +60,31 @@ if args.noise > 0 and args.cohort < 1024:
           f"swamp the update signal at this parameter count; expect no "
           f"convergence (use --noise 0 for the CPU-scale demo)")
 
-cfg = registry.get_config("qwen2-1.5b", reduced=True).with_overrides(
-    num_layers=args.layers, d_model=args.d_model, d_ff=4 * args.d_model,
-    num_heads=max(4, args.d_model // 32), num_kv_heads=2,
-    head_dim=32, vocab_size=args.vocab, max_seq_len=args.seq_len)
+cfg = registry.get_config(args.arch, reduced=True)
+if args.arch == "qwen2-1.5b":
+    # width knobs only make sense on the default family; other archs run
+    # their reduced preset as-is
+    cfg = cfg.with_overrides(
+        num_layers=args.layers, d_model=args.d_model, d_ff=4 * args.d_model,
+        num_heads=max(4, args.d_model // 32), num_kv_heads=2,
+        head_dim=32, vocab_size=args.vocab, max_seq_len=args.seq_len)
 model = build_model(cfg)
 key = jax.random.PRNGKey(0)
 params = model.init(key)
-print(f"arch=qwen2-family  params="
+print(f"arch={args.arch}  params="
       f"{sum(int(x.size) for x in jax.tree.leaves(params)):,}")
 
 fl = FLConfig(cohort_size=args.cohort, local_steps=1, local_lr=0.5,
               clip_norm=4.0, noise_multiplier=args.noise,
-              noise_placement="tee", server_opt="fedavg", server_lr=1.0)
+              noise_placement="tee", server_opt="fedavg", server_lr=1.0,
+              secure_agg_masked=args.masked,
+              secure_agg_bits=args.secure_agg_bits,
+              param_chunk_elems=args.chunk_elems)
+plan = agg.plan_for(params, fl)
+print(f"plan: {plan.num_chunks} chunk(s) over {len(plan.shapes)} leaves, "
+      f"widths={list(plan.chunk_widths)[:8]}"
+      f"{'...' if plan.num_chunks > 8 else ''}  "
+      f"masked={args.masked}  bits={args.secure_agg_bits}")
 step = jax.jit(build_round_step(model.loss_fn, fl, cohort_size=args.cohort,
                                 clients_per_chunk=args.cohort))
 state = init_fl_state(params, fl)

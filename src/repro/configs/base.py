@@ -283,3 +283,44 @@ class FLConfig:
     # and cross-device-reduce ONCE per round (vs once per chunk).  Bit-exact
     # same sum (int32 addition is associative/commutative mod 2^32).
     deferred_agg: bool = False
+    # --- pytree-native aggregation (aggregation.ParamPlan) ---
+    # target flat elements per aggregation chunk.  0 = one chunk spanning
+    # the whole model (the legacy flat engine, unpadded).  > 0 groups
+    # consecutive WHOLE leaves greedily up to this many elements per chunk;
+    # each chunk runs its own mask session and the engines never
+    # materialize the full (D,) concatenation.
+    param_chunk_elems: int = 0
+
+    def __post_init__(self):
+        if self.secure_agg_degree > 0 and self.secure_agg_degree % 2 != 0:
+            raise ValueError(
+                f"secure_agg_degree must be even (each slot pairs with "
+                f"k/2 neighbours on each side of the session ring); got "
+                f"{self.secure_agg_degree}. Round up to "
+                f"{self.secure_agg_degree + 1} or use 0 for the complete "
+                f"graph.")
+        if self.secure_agg_bits > 32:
+            raise ValueError(
+                f"secure_agg_bits={self.secure_agg_bits} exceeds the int32 "
+                f"secure-aggregation field; the fixed-point transport is "
+                f"mod 2^32. Use secure_agg_bits <= 32 (0 disables secure "
+                f"aggregation).")
+        if self.two_level and self.num_leaves == 0:
+            raise ValueError(
+                "two_level=True requires a leaf tier: set num_leaves (> 0) "
+                "and leaf_buffer so the session tree has leaf sessions to "
+                "build (see ShardedAsyncServer).")
+        if self.num_leaves > 0 and self.leaf_buffer == 0:
+            raise ValueError(
+                f"num_leaves={self.num_leaves} but leaf_buffer=0: each leaf "
+                f"aggregator needs a per-leaf slot count. Set leaf_buffer "
+                f"(buffer_size = num_leaves * leaf_buffer).")
+        if self.leaf_buffer > 0 and self.num_leaves == 0:
+            raise ValueError(
+                f"leaf_buffer={self.leaf_buffer} but num_leaves=0: a leaf "
+                f"slot count without leaves is unused. Set num_leaves or "
+                f"drop leaf_buffer.")
+        if self.param_chunk_elems < 0:
+            raise ValueError(
+                f"param_chunk_elems must be >= 0 (0 = single-chunk flat "
+                f"plan); got {self.param_chunk_elems}.")

@@ -24,10 +24,24 @@ masking always travels as a first-class ``secure_agg.MaskSession``
 (built here via ``make_mask_session`` so the graph degree/permutation stay
 aligned with the spec); kernels consume it through ``_kernel_session``'s
 ``SessionMeta`` view.
+
+The engines are PYTREE-NATIVE through a :class:`ParamPlan`: a static,
+hashable description of how a model pytree's leaves map onto flat CHUNKS
+(consecutive whole leaves grouped up to ``FLConfig.param_chunk_elems``
+elements, padded to kernel block multiples).  Every chunk runs its own
+mask session (key derived per chunk by ``fold_in`` from the engine session
+key) and its own slice of the stochastic-rounding uniform stream (global
+flat positions), so a multi-chunk engine never materializes the full (D,)
+concatenation — and the single-chunk plan is the exact legacy flat engine,
+bit for bit.  The global L2 clip still spans all leaves (the ``dp.py``
+left-fold), which is what makes the encode chunk-INVARIANT: the same model
+under any chunking decodes to the same aggregate.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -347,7 +361,8 @@ def finalize_aggregate(acc, total_weight, spec: AggregationSpec, rng):
 def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
                         uniforms, noise, spec: AggregationSpec, *,
                         session: Optional[sa.MaskSession] = None,
-                        use_pallas: bool = False):
+                        use_pallas: bool = False,
+                        row_sq: Optional[jnp.ndarray] = None):
     """Clip/weight/[noise]/encode[+mask] a block of rows and modular-sum it.
 
     The per-contribution half of ``aggregate_buffer``, factored out so a
@@ -362,6 +377,11 @@ def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
     session-wide draws (or None), so a shard consumes exactly the rows of
     the same arrays the single-host engine would.
 
+    ``row_sq`` (optional (B,)) supplies the per-row squared norms instead of
+    computing them from ``buf`` — the pytree-native engines pass the
+    whole-MODEL norms here so a chunk's rows are clipped against the global
+    L2 ball even though ``buf`` holds only this chunk's columns.
+
     Returns (acc (D,) int32|f32, pre-clip norms (B,), was_clipped (B,)).
     """
     if session is not None and not spec.use_secure_agg:
@@ -369,7 +389,9 @@ def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
                          "(spec.use_secure_agg)")
     B, D = buf.shape
     interpret = jax.default_backend() != "tpu"
-    if use_pallas:
+    if row_sq is not None:
+        sq = row_sq
+    elif use_pallas:
         from repro.kernels import dp_clip as _kclip
         pb, pd = (-B) % 8, (-D) % 512  # pad up to kernel tile multiples
         pbuf = jnp.pad(buf.astype(jnp.float32), ((0, pb), (0, pd)))
@@ -421,19 +443,39 @@ def encode_and_sum_rows(buf: jnp.ndarray, weights: jnp.ndarray,
     return acc, nrm, was_clipped
 
 
+def _row_uniform_keys(rng, B: int):
+    """Per-ROW pair keys of the batched TAG_UNIFORM stream.
+
+    One Threefry of the row index under ``fold_in(rng, 2)`` gives every
+    buffer row its own counter-based uniform stream, indexed by global flat
+    element position — so a ParamPlan chunk's columns of the (B, D) uniform
+    block are exactly ``stream_block(..., offset=chunk.offset)``, whatever
+    the chunking.
+    """
+    u0, u1 = prf.key_words(jax.random.fold_in(rng, 2))
+    return prf.threefry2x32(u0, u1, jnp.arange(B, dtype=prf.U32),
+                            jnp.zeros((B,), prf.U32))
+
+
 def buffer_noise_and_uniforms(rng, B: int, D: int, spec: AggregationSpec):
     """The session-wide stochastic draws of one buffered aggregation.
 
     Shared by the single-host engine and the sharded tier (which slices
-    rows per leaf), so both consume bit-identical streams.
+    rows per leaf), so both consume bit-identical streams.  Uniforms are
+    per-row counter-based PRF streams (see ``_row_uniform_keys``), so any
+    column slice of the block is position-consistent.
     """
     if spec.dev_noise > 0.0:
         noise = jax.random.normal(jax.random.fold_in(rng, 1), (B, D),
                                   jnp.float32)
     else:
         noise = None
-    uniforms = (jax.random.uniform(jax.random.fold_in(rng, 2), (B, D))
-                if spec.use_secure_agg else None)
+    if spec.use_secure_agg:
+        r0, r1 = _row_uniform_keys(rng, B)
+        uniforms = prf.bits_to_uniform(
+            prf.stream_block(r0, r1, D, tag=prf.TAG_UNIFORM))
+    else:
+        uniforms = None
     return noise, uniforms
 
 
@@ -478,3 +520,445 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
         "weight_total": w_total,
     }
     return mean, stats
+
+
+# ---------------------------------------------------------------------------
+# ParamPlan — the pytree-native chunk layout
+# ---------------------------------------------------------------------------
+# Chunk session keys: fold_in(fold_in(engine_key, CHUNK_SESSION_TAG), c).
+# Disjoint from every other stream tag in the system (0x5E55 sync session,
+# 0x7EE tee session, 0xDEE tee noise, 0xA5 push base, 0x5A5E session seed,
+# 0x1EAF/0x4007 two-level leaf/root, 0x6B52 graph perm).
+CHUNK_SESSION_TAG = 0xC401
+
+# Multi-chunk plans pad each chunk to this multiple so the fused Pallas
+# kernels see tile-aligned widths (== kernels.secure_agg.DEFAULT_BLOCK_D,
+# kept literal here so building a plan never imports the Pallas stack).
+DEFAULT_CHUNK_BLOCK = 512
+
+
+class ChunkSpec(NamedTuple):
+    """One flat chunk of a :class:`ParamPlan` — consecutive WHOLE leaves.
+
+    ``offset`` is the chunk's start in GLOBAL UNPADDED flat position — the
+    index every counter-based stream (stochastic-rounding uniforms) is
+    keyed by, so a chunk consumes exactly its slice of the model-wide
+    stream regardless of how its storage is padded.
+    """
+
+    leaf_lo: int   # first leaf index (inclusive)
+    leaf_hi: int   # last leaf index (exclusive)
+    size: int      # unpadded element count (sum of member leaf sizes)
+    padded: int    # storage width (kernel-block multiple; == size if 1 chunk)
+    offset: int    # global unpadded flat position of the chunk start
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ParamPlan:
+    """Static layout of a model pytree over flat aggregation chunks.
+
+    Registered as a STATIC pytree node: a plan is hashable metadata (no
+    array data), so it can close over jitted steps or ride through them as
+    an argument without triggering retraces beyond the first.
+
+    The plan is the single source of truth for the pytree-native engines:
+    which leaves live in which chunk (``chunks``), how each chunk's session
+    key is derived from the engine session key (``session_keys``), and how
+    flat chunk arrays map back to the model tree (``unchunk``).  A
+    single-chunk plan is the degenerate case — unpadded, session key used
+    verbatim — which is bit-for-bit the legacy flat (D,) engine.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    chunks: Tuple[ChunkSpec, ...]
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def total(self) -> int:
+        """Unpadded model size D (sum of all leaf sizes)."""
+        return sum(c.size for c in self.chunks)
+
+    @property
+    def leaf_sizes(self) -> Tuple[int, ...]:
+        return tuple(math.prod(s) for s in self.shapes)
+
+    @property
+    def chunk_widths(self) -> Tuple[int, ...]:
+        """Per-chunk STORAGE widths (padded)."""
+        return tuple(c.padded for c in self.chunks)
+
+    def leaves_of(self, tree) -> list:
+        """Flatten ``tree`` and check it has the plan's structure."""
+        leaves, treedef = jax.tree.flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(
+                f"pytree structure does not match the ParamPlan: got "
+                f"{treedef}, plan was built for {self.treedef}")
+        return leaves
+
+    def chunk_arrays(self, tree, *, leading: int = 0,
+                     pad: bool = False) -> Tuple[jnp.ndarray, ...]:
+        """``tree`` -> tuple of per-chunk flat f32 arrays.
+
+        ``leading`` preserves that many leading batch axes on every leaf
+        (0 = a single model delta, 1 = a stacked (K, ...) batch of deltas);
+        ``pad`` zero-pads each chunk to its storage width.  No step ever
+        concatenates these across chunks — that would be the (D,) buffer
+        the plan exists to avoid.
+        """
+        leaves = self.leaves_of(tree)
+        out = []
+        for ck in self.chunks:
+            segs = [
+                leaves[i].reshape(leaves[i].shape[:leading] + (-1,))
+                .astype(jnp.float32)
+                for i in range(ck.leaf_lo, ck.leaf_hi)
+            ]
+            arr = segs[0] if len(segs) == 1 else jnp.concatenate(segs, axis=-1)
+            if pad and ck.padded > ck.size:
+                arr = jnp.pad(arr, [(0, 0)] * leading
+                              + [(0, ck.padded - ck.size)])
+            out.append(arr)
+        return tuple(out)
+
+    def unchunk(self, chunk_arrays: Sequence[jnp.ndarray]):
+        """Per-chunk flat arrays (padded or not) -> the model pytree."""
+        sizes = self.leaf_sizes
+        leaves = []
+        for ck, arr in zip(self.chunks, chunk_arrays):
+            off = 0
+            for i in range(ck.leaf_lo, ck.leaf_hi):
+                leaves.append(arr[off:off + sizes[i]].reshape(self.shapes[i]))
+                off += sizes[i]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def session_keys(self, key) -> Tuple:
+        """Per-chunk mask-session keys derived from the engine session key.
+
+        The single-chunk plan uses the engine key VERBATIM (the legacy
+        contract external reconstructions rely on); multi-chunk plans fold
+        each chunk index under ``CHUNK_SESSION_TAG``.  Each chunk's session
+        is a complete, independent pairwise protocol — masks cancel and
+        dropout recovers per chunk, so the decoded aggregate never depends
+        on the keying split.
+        """
+        if self.num_chunks == 1:
+            return (key,)
+        base = jax.random.fold_in(key, CHUNK_SESSION_TAG)
+        return tuple(jax.random.fold_in(base, c)
+                     for c in range(self.num_chunks))
+
+    def chunk_noise_key(self, rng, c: int):
+        """The ``fold_in(rng, 1)`` device-noise stream, per chunk.
+
+        Single-chunk = the legacy key verbatim (bit-identical noise);
+        multi-chunk folds the chunk index, so chunked device noise is a
+        DIFFERENT (equal-law) draw than the flat engine's — the one
+        documented non-bit-identical stream between chunkings.
+        """
+        k = jax.random.fold_in(rng, 1)
+        return k if self.num_chunks == 1 else jax.random.fold_in(k, c)
+
+
+def make_param_plan(params, *, chunk_elems: int = 0,
+                    block: int = DEFAULT_CHUNK_BLOCK) -> ParamPlan:
+    """Build the chunk layout of a model pytree.
+
+    ``chunk_elems <= 0`` (the default) yields the degenerate single-chunk
+    plan: one unpadded chunk spanning every leaf — the legacy flat engine.
+    Otherwise leaves are grouped greedily in tree order: a chunk closes
+    when admitting the next leaf would exceed ``chunk_elems`` (a leaf
+    larger than ``chunk_elems`` gets a chunk of its own).  Leaves are never
+    split across chunks, which is what keeps per-leaf norms, mask streams
+    and dropout recovery whole-leaf-aligned.  Multi-chunk storage widths
+    are padded up to ``block`` multiples for the fused kernels; padding is
+    excluded from norms by construction and encodes to q == 0.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    if not leaves:
+        raise ValueError("cannot build a ParamPlan for an empty pytree")
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.asarray(x).dtype.name for x in leaves)
+    sizes = [math.prod(s) for s in shapes]
+    if chunk_elems <= 0:
+        groups = [(0, len(leaves))]
+    else:
+        groups, lo, cur = [], 0, 0
+        for i, sz in enumerate(sizes):
+            if cur > 0 and cur + sz > chunk_elems:
+                groups.append((lo, i))
+                lo, cur = i, 0
+            cur += sz
+        groups.append((lo, len(leaves)))
+    multi = len(groups) > 1
+    chunks, off = [], 0
+    for (g_lo, g_hi) in groups:
+        size = sum(sizes[g_lo:g_hi])
+        padded = -(-size // block) * block if multi else size
+        chunks.append(ChunkSpec(g_lo, g_hi, size, padded, off))
+        off += size
+    return ParamPlan(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                     chunks=tuple(chunks))
+
+
+def plan_for(params, fl_cfg) -> ParamPlan:
+    """The plan an engine derives from its config — the one entry point."""
+    return make_param_plan(
+        params, chunk_elems=getattr(fl_cfg, "param_chunk_elems", 0))
+
+
+def plan_sq_norms(plan: ParamPlan, chunk_arrays: Sequence[jnp.ndarray]):
+    """Whole-model squared L2 norms from per-chunk flat arrays.
+
+    The ``dp.global_norm`` left-fold (zero + leaf_0 + leaf_1 + ...) over
+    exact leaf segments, so padding never contributes and the value is
+    chunk-INVARIANT: any chunking of the same model folds the same per-leaf
+    partial sums in the same order.  Arrays may carry leading batch axes
+    (the last axis is the chunk's flat storage).
+    """
+    sizes = plan.leaf_sizes
+    sq = jnp.float32(0.0)
+    for ck, arr in zip(plan.chunks, chunk_arrays):
+        x = arr.astype(jnp.float32)
+        off = 0
+        for i in range(ck.leaf_lo, ck.leaf_hi):
+            seg = x[..., off:off + sizes[i]]
+            sq = sq + jnp.sum(seg * seg, axis=-1)
+            off += sizes[i]
+    return sq
+
+
+def plan_mask_tree(tree, slot, plan: ParamPlan, sessions):
+    """Plan form of :func:`mask_tree`: per-chunk sessions over the model.
+
+    Leaf ``i`` of chunk ``c`` draws its pairwise stream from the CHUNK's
+    session key folded by the chunk-LOCAL leaf index — each chunk is an
+    independent complete session whose masks cancel on their own, exactly
+    as in the streamed engines.  The degenerate single-chunk plan (one
+    session, local == global leaf indices) reproduces :func:`mask_tree`
+    bit-for-bit.
+    """
+    leaves = plan.leaves_of(tree)
+    out = []
+    for c, ck in enumerate(plan.chunks):
+        s = sessions[c]
+        for i in range(ck.leaf_lo, ck.leaf_hi):
+            out.append(sa.session_mask(
+                leaves[i].shape, slot, s.num_slots,
+                jax.random.fold_in(s.key, i - ck.leaf_lo), s.degree,
+                s.perm))
+    return jax.tree.unflatten(plan.treedef, out)
+
+
+def plan_sessions(spec: AggregationSpec, plan: ParamPlan, key, *,
+                  num_slots: Optional[int] = None, slot_offset=0):
+    """One :class:`secure_agg.MaskSession` per chunk (or None if no key)."""
+    if key is None:
+        return None
+    return tuple(
+        make_mask_session(spec, k, num_slots=num_slots,
+                          slot_offset=slot_offset)
+        for k in plan.session_keys(key))
+
+
+def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
+                     spec: AggregationSpec, plan: ParamPlan, sessions, rng, *,
+                     masked: bool = True, use_pallas: bool = False):
+    """The streamed per-arrival encode on PRE-CHUNKED flat arrays.
+
+    ``xs`` is the tuple of UNPADDED per-chunk f32 arrays of one delta (what
+    ``plan.chunk_arrays`` yields).  The pipeline is the legacy
+    ``encode_masked_contribution`` arithmetic lifted over chunks: one
+    GLOBAL clip scale from the whole-model norm, the ``fold_in(rng, 2)``
+    TAG_UNIFORM stream sliced at each chunk's global offset, and each
+    chunk masked under its own session at its own slot-local stream.  The
+    single-chunk plan reproduces the legacy row bit-for-bit.
+
+    Returns (tuple of PADDED (padded_c,) int32 rows, pre-clip norm,
+    was_clipped).
+    """
+    sq = plan_sq_norms(plan, xs)
+    nrm = jnp.sqrt(sq)
+    clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
+    weight = jnp.asarray(weight, jnp.float32)
+    u_words = prf.key_words(jax.random.fold_in(rng, 2))
+    rows = []
+    for c, (ck, x) in enumerate(zip(plan.chunks, xs)):
+        xw = x * (weight * clip_scale)
+        if spec.dev_noise > 0.0:
+            noise = jax.random.normal(plan.chunk_noise_key(rng, c), x.shape,
+                                      jnp.float32)
+            xw = xw + noise * (spec.dev_noise * weight)
+        if masked and use_pallas:
+            from repro.kernels import secure_agg as _ksa
+            row = _ksa.quantize_mask_prf(
+                xw, spec.sa_scale, slot, jnp.stack(u_words),
+                _kernel_session(sessions[c]), u_offset=ck.offset,
+                interpret=jax.default_backend() != "tpu")
+        else:
+            xf = xw * spec.sa_scale
+            floor = jnp.floor(xf)
+            bit = (prf.uniform_block(*u_words, ck.size, offset=ck.offset)
+                   < (xf - floor)).astype(jnp.float32)
+            row = (floor + bit).astype(jnp.int32)
+            if masked:
+                row = row + sessions[c].mask((ck.size,), slot)  # mod 2^32
+        if ck.padded > ck.size:
+            row = jnp.pad(row, (0, ck.padded - ck.size))
+        rows.append(row)
+    return tuple(rows), nrm, (clip_scale < 1.0).astype(jnp.float32)
+
+
+def encode_plan_contribution(delta, weight, slot, spec: AggregationSpec,
+                             plan: ParamPlan, sessions, rng, *,
+                             masked: bool = True, use_pallas: bool = False):
+    """Pytree form of :func:`encode_plan_flat` — the client-side encode."""
+    return encode_plan_flat(plan.chunk_arrays(delta), weight, slot, spec,
+                            plan, sessions, rng, masked=masked,
+                            use_pallas=use_pallas)
+
+
+def aggregate_plan_masked_buffer(bufs: Sequence[jnp.ndarray],
+                                 present: jnp.ndarray, total_weight,
+                                 spec: AggregationSpec, plan: ParamPlan,
+                                 sessions, rng, *, recover: bool = True,
+                                 masked: bool = True):
+    """Plan form of :func:`aggregate_masked_buffer`.
+
+    ``bufs`` is the tuple of per-chunk (B, padded_c) int32 buffers; each
+    chunk gates absent slots and runs ITS session's recovery sweep at the
+    unpadded width (padding carries no mask shares).  Returns the
+    weight-normalized mean delta as a PYTREE shaped like the plan.
+    """
+    pres_i = jnp.asarray(present).astype(jnp.int32)
+    accs = []
+    for c, (ck, mbuf) in enumerate(zip(plan.chunks, bufs)):
+        if recover:
+            acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # mod 2^32
+            if masked:
+                rec = sessions[c].recovery((ck.size,), present)
+                if ck.padded > ck.size:
+                    rec = jnp.pad(rec, (0, ck.padded - ck.size))
+                acc = acc + rec
+        else:
+            acc = jnp.sum(mbuf, axis=0)  # full session: masks cancel exactly
+        accs.append(acc)
+    return finalize_plan_aggregate(accs, total_weight, spec, plan,
+                                   jax.random.fold_in(rng, 0xDEE))
+
+
+def plan_buffer_noise_and_uniforms(rng, B: int, spec: AggregationSpec,
+                                   plan: ParamPlan):
+    """Plan form of :func:`buffer_noise_and_uniforms` — per-chunk tuples.
+
+    Uniforms are the SAME per-row counter streams as the flat draw, sliced
+    at each chunk's global offset (bit-identical columns under any
+    chunking); device noise is chunk-keyed per ``plan.chunk_noise_key``
+    (single-chunk = legacy stream verbatim).  Padded tails draw uniforms
+    too (the stream is position-keyed, cost-free) but zero noise.
+    """
+    if spec.dev_noise > 0.0:
+        noise = []
+        for c, ck in enumerate(plan.chunks):
+            n = jax.random.normal(plan.chunk_noise_key(rng, c), (B, ck.size),
+                                  jnp.float32)
+            if ck.padded > ck.size:
+                n = jnp.pad(n, ((0, 0), (0, ck.padded - ck.size)))
+            noise.append(n)
+        noise = tuple(noise)
+    else:
+        noise = None
+    if spec.use_secure_agg:
+        r0, r1 = _row_uniform_keys(rng, B)
+        uniforms = tuple(
+            prf.bits_to_uniform(
+                prf.stream_block(r0, r1, ck.padded, tag=prf.TAG_UNIFORM,
+                                 offset=ck.offset))
+            for ck in plan.chunks)
+    else:
+        uniforms = None
+    return noise, uniforms
+
+
+def encode_plan_rows(bufs: Sequence[jnp.ndarray], weights: jnp.ndarray,
+                     uniforms, noise, spec: AggregationSpec, plan: ParamPlan,
+                     *, sessions=None, use_pallas: bool = False,
+                     row_sq=None):
+    """Plan form of :func:`encode_and_sum_rows` — per-chunk accumulators.
+
+    The per-row squared norms span the WHOLE model (all chunks), so every
+    chunk clips its columns by the same global scale; stats come out once.
+
+    Returns (tuple of per-chunk accumulators, norms (B,), was_clipped (B,)).
+    """
+    if row_sq is None:
+        row_sq = plan_sq_norms(plan, bufs)
+    accs, nrm, was_clipped = [], None, None
+    for c in range(plan.num_chunks):
+        acc, nrm, was_clipped = encode_and_sum_rows(
+            bufs[c], weights,
+            None if uniforms is None else uniforms[c],
+            None if noise is None else noise[c],
+            spec, session=None if sessions is None else sessions[c],
+            use_pallas=use_pallas, row_sq=row_sq)
+        accs.append(acc)
+    return tuple(accs), nrm, was_clipped
+
+
+def aggregate_plan_buffer(bufs: Sequence[jnp.ndarray], weights: jnp.ndarray,
+                          spec: AggregationSpec, plan: ParamPlan, rng, *,
+                          sessions=None, use_pallas: bool = False):
+    """Plan form of :func:`aggregate_buffer` — the batched tee/off flush.
+
+    ``bufs`` holds per-chunk (B, padded_c) f32 raw contributions.  Masking
+    (``sessions``) runs at the PADDED width per chunk: a complete batched
+    session masks and sums every row, so padded-tail mask shares cancel in
+    the modular sum exactly like real columns.  Returns (mean pytree,
+    stats).
+    """
+    B = bufs[0].shape[0]
+    noise, uniforms = plan_buffer_noise_and_uniforms(rng, B, spec, plan)
+    if noise is not None:
+        noise = tuple(n * (spec.dev_noise * weights)[:, None] for n in noise)
+    accs, nrm, was_clipped = encode_plan_rows(
+        bufs, weights, uniforms, noise, spec, plan, sessions=sessions,
+        use_pallas=use_pallas)
+    w_total = weights.sum()
+    mean = finalize_plan_aggregate(accs, w_total, spec, plan,
+                                   jax.random.fold_in(rng, 0xDEE))
+    stats = {
+        "update_norm": (nrm * weights).sum() / jnp.maximum(w_total, 1e-9),
+        "clip_fraction": (was_clipped * weights).sum()
+        / jnp.maximum(w_total, 1e-9),
+        "weight_total": w_total,
+    }
+    return mean, stats
+
+
+def finalize_plan_aggregate(accs: Sequence[jnp.ndarray], total_weight,
+                            spec: AggregationSpec, plan: ParamPlan, rng):
+    """Plan form of :func:`finalize_aggregate`: decode, mean, TEE noise.
+
+    Slices each chunk's padded tail, decodes, divides by the total weight,
+    reassembles the MODEL PYTREE, and draws TEE noise on the tree
+    (``dp.add_noise`` keys per leaf, so the draw is chunk-invariant — it
+    depends only on the model structure, never on the chunking).
+    """
+    w = jnp.maximum(total_weight, 1e-9)
+    flats = []
+    for ck, acc in zip(plan.chunks, accs):
+        a = acc[:ck.size]
+        if spec.use_secure_agg:
+            a = a.astype(jnp.float32) / spec.sa_scale
+        flats.append(a / w)
+    mean = plan.unchunk(flats)
+    if spec.tee_noise > 0.0:
+        mean = dp.add_noise(mean, rng,
+                            spec.tee_noise * spec.num_contributors / w)
+    return mean

@@ -31,11 +31,36 @@ from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from repro.core.fl import aggregation as agg
 from repro.core.fl import secure_agg as sa
 from repro.core.fl.server_opt import build_server_opt
+
+
+def batch_count(delta, params) -> Optional[int]:
+    """None if ``delta`` is a single model update, else its leading-axis size.
+
+    The unified ``push``/``encode_push`` API accepts either a pytree shaped
+    exactly like the model or a STACKED batch of them (every leaf carrying
+    one extra leading axis of a common size K).  Anything else is an error —
+    ambiguity here would silently mis-aggregate.
+    """
+    p = jax.tree.leaves(params)
+    d = jax.tree.leaves(delta)
+    if len(p) != len(d):
+        raise ValueError(
+            f"delta has {len(d)} leaves, the model has {len(p)}")
+    if all(tuple(x.shape) == tuple(y.shape) for x, y in zip(d, p)):
+        return None
+    if all(jnp.ndim(x) == jnp.ndim(y) + 1
+           and tuple(jnp.shape(x)[1:]) == tuple(y.shape)
+           for x, y in zip(d, p)):
+        sizes = {jnp.shape(x)[0] for x in d}
+        if len(sizes) == 1:
+            return sizes.pop()
+    raise ValueError(
+        "delta leaves match neither the model's shapes nor a stacked "
+        "(K, ...) batch of them")
 
 
 def staleness_weight(staleness, mode: str = "polynomial", a: float = 0.5):
@@ -60,8 +85,11 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
                             use_pallas: Optional[bool] = None) -> Callable:
     """Returns jitted ``step(params, opt_state, buf, staleness, valid, rng)``.
 
-    buf:       (buffer_size, D) f32 — raw flattened client deltas (D is the
-               flattened parameter size of ``params``).
+    buf:       the raw client-delta buffer — a tuple of per-chunk
+               (buffer_size, padded_c) f32 arrays laid out by the model's
+               :class:`aggregation.ParamPlan` (``fl_cfg.param_chunk_elems``).
+               A bare (buffer_size, D) array is accepted for the degenerate
+               single-chunk plan (the legacy flat engine, bit-identical).
     staleness: (buffer_size,) f32 — server_version - pulled_version per slot.
     valid:     (buffer_size,) f32 — 1.0 for filled slots (partial flushes).
 
@@ -85,17 +113,17 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     if mask_mode == "tee" and not spec.use_secure_agg:
         raise ValueError("mask_mode='tee' requires secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
 
     def step(params, opt_state, buf, staleness, valid, rng):
+        bufs = buf if isinstance(buf, (tuple, list)) else (buf,)
         w = staleness_weight(staleness, staleness_mode, staleness_exponent)
         w = w * valid  # empty slots contribute nothing
         skey = jax.random.fold_in(rng, 0x7EE) if mask_mode == "tee" else None
-        sess = agg.make_mask_session(spec, skey)
-        mean_flat, stats = agg.aggregate_buffer(buf, w, spec, rng,
-                                                session=sess,
-                                                use_pallas=use_pallas)
-        mean_delta = unravel(mean_flat)
+        sessions = agg.plan_sessions(spec, plan, skey)
+        mean_delta, stats = agg.aggregate_plan_buffer(
+            bufs, w, spec, plan, rng, sessions=sessions,
+            use_pallas=use_pallas)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
         metrics = {
             "update_norm": stats["update_norm"],
@@ -116,9 +144,13 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
 
     Returns jitted ``step(params, opt_state, mbuf, present, weights,
     staleness, norms, clips, session_key, rng)`` where ``mbuf`` is the
-    (buffer_size, D) **int32** buffer of masked fixed-point contributions
-    written by ``AsyncServer.push`` (mask_mode="client") — the server never
-    holds a raw delta.  ``present`` gates delivered slots; absent slots
+    **int32** buffer of masked fixed-point contributions written by
+    ``AsyncServer.push`` (mask_mode="client") — a tuple of per-chunk
+    (buffer_size, padded_c) arrays laid out by the model's
+    :class:`aggregation.ParamPlan` (a bare (buffer_size, D) array is the
+    degenerate single-chunk form) — the server never holds a raw delta.
+    Each chunk runs its own mask session (key folded per chunk from
+    ``session_key``); recovery sweeps per chunk.  ``present`` gates delivered slots; absent slots
     (dropouts / partial flushes) get their un-cancelled mask shares re-added
     inside the same jitted computation (``recovery_mask``), so the modular
     sum decodes to the exact survivor aggregate.  ``weights`` / ``norms`` /
@@ -141,17 +173,18 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     if not spec.use_secure_agg:
         raise ValueError("client-masked aggregation requires secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
 
     def step(params, opt_state, mbuf, present, weights, staleness, norms,
              clips, session_key, rng):
+        mbufs = mbuf if isinstance(mbuf, (tuple, list)) else (mbuf,)
         w = weights * present
         w_total = w.sum()
-        sess = agg.make_mask_session(spec, session_key) if masked else None
-        mean_flat = agg.aggregate_masked_buffer(mbuf, present, w_total, spec,
-                                                sess, rng, recover=recover,
-                                                masked=masked)
-        mean_delta = unravel(mean_flat)
+        sessions = agg.plan_sessions(spec, plan, session_key) if masked \
+            else None
+        mean_delta = agg.aggregate_plan_masked_buffer(
+            mbufs, present, w_total, spec, plan, sessions, rng,
+            recover=recover, masked=masked)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
         denom = jnp.maximum(w_total, 1e-9)
         metrics = {
@@ -172,7 +205,10 @@ class ClientPush(NamedTuple):
     rides the same channel.  ``version``/``slot`` pin the pairwise session
     and position the encoding was produced for."""
 
-    row: jnp.ndarray  # (D,) int32, masked fixed-point encoding
+    # masked fixed-point encoding: a (D,) int32 array under the single-chunk
+    # plan, a tuple of per-chunk (padded_c,) int32 arrays under a multi-chunk
+    # ParamPlan (one mask session per chunk, same slot)
+    row: Any
     weight: jnp.ndarray  # staleness weight the client applied pre-encode
     norm: jnp.ndarray  # pre-clip L2 norm (client-side metric)
     clipped: jnp.ndarray  # 1.0 if the clip bound was active
@@ -258,8 +294,7 @@ class AsyncServer:
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
 
-        flat, _ = ravel_pytree(params)
-        D = flat.shape[0]
+        self._plan = agg.plan_for(params, fl_cfg)
         self._opt_state = build_server_opt(fl_cfg).init(params)
         self._stal = jnp.zeros((buffer_size,), jnp.float32)
         self._valid = jnp.zeros((buffer_size,), jnp.float32)
@@ -278,12 +313,14 @@ class AsyncServer:
             streaming = mask_mode in ("client", "tee_stream")
         self._streaming = streaming
 
+        plan = self._plan
         if streaming:
             if not spec.use_secure_agg:
                 raise ValueError(
                     f"mask_mode={mask_mode!r} requires secure_agg_bits > 0")
             masked = mask_mode != "off"
-            self._buf = jnp.zeros((buffer_size, D), jnp.int32)
+            self._bufs = tuple(jnp.zeros((buffer_size, ck.padded), jnp.int32)
+                               for ck in plan.chunks)
             self._wts = jnp.zeros((buffer_size,), jnp.float32)
             self._norms = jnp.zeros((buffer_size,), jnp.float32)
             self._clips = jnp.zeros((buffer_size,), jnp.float32)
@@ -312,24 +349,24 @@ class AsyncServer:
                 Runs on the device in mask_mode="client"; inside the
                 enclave, per arriving delta, in mask_mode="tee_stream";
                 and server-side (no mask) for the streamed "off" engine.
+                Pytree-native: the delta is chunked per the ParamPlan,
+                clipped by its whole-model norm, and each chunk is encoded
+                against its own mask session — the full (D,) concatenation
+                is never formed.
                 """
-                flat_d, _ = ravel_pytree(delta)
                 w = staleness_weight(s, s_mode, s_exp)
-                if masked:
-                    sess = agg.make_mask_session(spec, session_key)
-                    row, nrm, clipped = agg.encode_masked_contribution(
-                        flat_d, w, slot, spec, sess, rng,
-                        use_pallas=use_pallas)
-                else:
-                    row, nrm, clipped = agg.encode_contribution(
-                        flat_d, w, spec, rng)
-                return row, w, nrm, clipped
+                sessions = (agg.plan_sessions(spec, plan, session_key)
+                            if masked else None)
+                rows, nrm, clipped = agg.encode_plan_contribution(
+                    delta, w, slot, spec, plan, sessions, rng,
+                    masked=masked, use_pallas=use_pallas)
+                return rows, w, nrm, clipped
 
             @jax.jit
-            def _write_row(buf, stal, wts, norms, clips, slot, row, s, w,
+            def _write_row(bufs, stal, wts, norms, clips, slot, rows, s, w,
                            nrm, clipped):
-                """SERVER-side jit: store one masked row."""
-                return (buf.at[slot].set(row),
+                """SERVER-side jit: store one masked row (all chunks)."""
+                return (tuple(b.at[slot].set(r) for b, r in zip(bufs, rows)),
                         stal.at[slot].set(jnp.asarray(s, jnp.float32)),
                         wts.at[slot].set(w),
                         norms.at[slot].set(nrm),
@@ -338,7 +375,9 @@ class AsyncServer:
             self._masked_encode = _masked_encode
             self._write_row = _write_row
         else:
-            self._buf = jnp.zeros((buffer_size, D), jnp.float32)
+            self._bufs = tuple(
+                jnp.zeros((buffer_size, ck.padded), jnp.float32)
+                for ck in plan.chunks)
             self._step = build_async_buffer_step(
                 params, fl_cfg, buffer_size=buffer_size,
                 staleness_mode=staleness_mode,
@@ -346,16 +385,32 @@ class AsyncServer:
                 mask_mode=mask_mode, use_pallas=use_pallas)
 
             @jax.jit
-            def _write(buf, stal, valid, slot, delta, s):
-                flat_d, _ = ravel_pytree(delta)
-                return (buf.at[slot].set(flat_d.astype(jnp.float32)),
+            def _write(bufs, stal, valid, slot, delta, s):
+                rows = plan.chunk_arrays(delta, pad=True)
+                return (tuple(b.at[slot].set(r) for b, r in zip(bufs, rows)),
                         stal.at[slot].set(jnp.asarray(s, jnp.float32)),
                         valid.at[slot].set(1.0))
 
             self._write = _write
 
+    @property
+    def plan(self) -> "agg.ParamPlan":
+        """The model's chunk layout (``fl_cfg.param_chunk_elems``)."""
+        return self._plan
+
+    @property
+    def _buf(self):
+        """The contribution buffer — bare (B, D) array under the degenerate
+        single-chunk plan (the legacy view), tuple of per-chunk arrays
+        otherwise."""
+        return self._bufs[0] if len(self._bufs) == 1 else self._bufs
+
     def _session_key(self):
-        """PRNG key of the current pairwise-mask session (= buffer round)."""
+        """PRNG key of the current pairwise-mask session (= buffer round).
+
+        Multi-chunk plans fold one sub-key per chunk from this
+        (``ParamPlan.session_keys``); the single-chunk plan uses it
+        verbatim."""
         return jax.random.fold_in(self._session_base, self.version)
 
     # -- client protocol ----------------------------------------------------
@@ -372,16 +427,38 @@ class AsyncServer:
         nothing but the returned ``ClientPush``.  ``slot`` defaults to the
         next free slot; concurrent clients of one session encode against
         the distinct slots the server assigned them at check-in.
+
+        A STACKED delta (every leaf carrying one extra leading axis of a
+        common size K) encodes K independent pushes against the next K free
+        slots (or the K slots passed as ``slot``) and returns a list of
+        ``ClientPush`` — the batched form of the unified API.
         """
         if self.mask_mode != "client":
             raise ValueError(
                 f"encode_push is the client half of mask_mode='client' "
                 f"(server is in mask_mode={self.mask_mode!r})")
+        k = batch_count(delta, self.params)
+        if k is not None:
+            if slot is None:
+                free = [i for i, p in enumerate(self._present) if not p]
+                slots = free[:k]
+            else:
+                slots = [int(s) for s in slot]
+            if len(slots) < k:
+                raise ValueError(
+                    f"batched encode_push of {k} rows but only "
+                    f"{len(slots)} session slots available")
+            return [
+                self.encode_push(jax.tree.map(lambda x: x[i], delta),
+                                 client_version, rng, slots[i])
+                for i in range(k)
+            ]
         staleness = self.version - client_version  # host-int metadata only
         if slot is None:
             slot = self._present.index(False)  # lowest unfilled slot
-        row, w, nrm, clipped = self._encode_for_slot(delta, staleness, slot,
-                                                     rng)
+        rows, w, nrm, clipped = self._encode_for_slot(delta, staleness, slot,
+                                                      rng)
+        row = rows[0] if len(rows) == 1 else rows
         return ClientPush(row, w, nrm, clipped, staleness, self.version,
                           slot)
 
@@ -400,11 +477,17 @@ class AsyncServer:
         slot its mask was generated for.  Rejected if its session has
         already been applied (the pairwise masks of a new session no
         longer cancel against it) or its slot was already delivered.
+        A list of pushes (the batched ``encode_push`` form) is stored
+        row by row.
         """
         if self.mask_mode != "client":
             raise ValueError(
                 f"push_encoded is the server half of mask_mode='client' "
                 f"(server is in mask_mode={self.mask_mode!r})")
+        if isinstance(cp, list):
+            for one in cp:
+                self.push_encoded(one, rng)
+            return
         if (cp.version != self.version or not 0 <= cp.slot < self.buffer_size
                 or self._present[cp.slot]):
             raise ValueError(
@@ -418,16 +501,30 @@ class AsyncServer:
     def _store_row(self, slot: int, row, staleness, w, nrm, clipped,
                    rng=None) -> None:
         """Write one masked row into its session slot (+ apply when full)."""
-        (self._buf, self._stal, self._wts, self._norms,
+        rows = row if isinstance(row, tuple) else (row,)
+        (self._bufs, self._stal, self._wts, self._norms,
          self._clips) = self._write_row(
-            self._buf, self._stal, self._wts, self._norms, self._clips,
-            slot, row, staleness, w, nrm, clipped)
+            self._bufs, self._stal, self._wts, self._norms, self._clips,
+            slot, rows, staleness, w, nrm, clipped)
         self._present[slot] = True
         self._fill += 1
         if self._fill >= self.buffer_size:
             self._apply(rng)
 
     def push(self, delta, client_version: int, rng=None) -> None:
+        """Push one model delta — or a STACKED batch of them.
+
+        The one entry point of the unified pytree API: ``delta`` is a
+        pytree shaped like the model (one contribution) or a stacked
+        (K, ...) batch (K contributions, stored in arrival order).  The
+        engine routes it through whatever path the mask mode requires.
+        """
+        k = batch_count(delta, self.params)
+        if k is not None:
+            for i in range(k):
+                self.push(jax.tree.map(lambda x: x[i], delta),
+                          client_version, rng)
+            return
         if self.mask_mode == "client":
             self.push_encoded(self.encode_push(delta, client_version), rng)
             return
@@ -438,12 +535,12 @@ class AsyncServer:
             # in HBM; in streamed "off" plain) and leave the flush nothing
             # but the modular sum
             slot = self._present.index(False)  # lowest unfilled slot
-            row, w, nrm, clipped = self._encode_for_slot(delta, staleness,
-                                                         slot)
-            self._store_row(slot, row, staleness, w, nrm, clipped, rng)
+            rows, w, nrm, clipped = self._encode_for_slot(delta, staleness,
+                                                          slot)
+            self._store_row(slot, rows, staleness, w, nrm, clipped, rng)
             return
-        self._buf, self._stal, self._valid = self._write(
-            self._buf, self._stal, self._valid, self._fill, delta,
+        self._bufs, self._stal, self._valid = self._write(
+            self._bufs, self._stal, self._valid, self._fill, delta,
             staleness)
         self._fill += 1
         if self._fill >= self.buffer_size:
@@ -473,13 +570,13 @@ class AsyncServer:
                     self._flush_step = self._build_flush_step()
                 step = self._flush_step  # dropout recovery for absent slots
             self.params, self._opt_state, self.last_metrics = step(
-                self.params, self._opt_state, self._buf, present, self._wts,
+                self.params, self._opt_state, self._bufs, present, self._wts,
                 self._stal, self._norms, self._clips, self._session_key(),
                 rng)
             self._present = [False] * self.buffer_size
         else:
             self.params, self._opt_state, self.last_metrics = self._step(
-                self.params, self._opt_state, self._buf, self._stal,
+                self.params, self._opt_state, self._bufs, self._stal,
                 self._valid, rng)
             self._valid = jnp.zeros_like(self._valid)
         self.version += 1

@@ -61,12 +61,12 @@ bit-identical to sequential single pushes (same per-slot PRF streams).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 try:  # moved out of experimental on newer jax
@@ -76,7 +76,7 @@ except ImportError:  # pragma: no cover
 
 from repro.core.fl import aggregation as agg
 from repro.core.fl import secure_agg as sa
-from repro.core.fl.async_fl import ClientPush, staleness_weight
+from repro.core.fl.async_fl import ClientPush, batch_count, staleness_weight
 from repro.core.fl.server_opt import build_server_opt
 from repro.launch.mesh import (LEAF_AXIS, leaves_per_device, make_agg_mesh,
                                make_leaf_mesh)
@@ -132,22 +132,44 @@ def _partition_edges(session: sa.MaskSession, num_leaves: int):
     return lo, hi, w
 
 
-def _finalize_root(params, opt_state, acc, w, norms, clips, staleness,
-                   participation, spec, server, unravel, rng):
-    """The root tail every tier flush shares: decode the combined modular
-    sum into the noised mean, apply the server optimizer, assemble the
-    round metrics.
+def _pad_to(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Zero-pad a chunk-sized vector up to its storage width (no-op for the
+    single-chunk plan, whose storage is unpadded)."""
+    if x.shape[-1] == width:
+        return x
+    return jnp.pad(x, (0, width - x.shape[-1]))
 
-    ``w``: (B,) effective per-slot weights (staleness discount x
+
+def _as_chunks(buf) -> tuple:
+    """Normalize a buffer argument to the plan's per-chunk tuple — a bare
+    array is the degenerate single-chunk layout."""
+    return tuple(buf) if isinstance(buf, (tuple, list)) else (buf,)
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"ShardedAsyncServer.{old} is deprecated; use {new}, which accepts "
+        f"a pytree delta directly (a stacked leading axis means a batch). "
+        f"See README 'Engine API migration'.",
+        DeprecationWarning, stacklevel=3)
+
+
+def _finalize_root(params, opt_state, accs, w, norms, clips, staleness,
+                   participation, spec, plan, server, rng):
+    """The root tail every tier flush shares: decode the combined modular
+    sums into the noised mean PYTREE, apply the server optimizer, assemble
+    the round metrics.
+
+    ``accs``: tuple of per-chunk combined accumulators (the ParamPlan's
+    layout); ``w``: (B,) effective per-slot weights (staleness discount x
     present/valid gate); ``participation``: (B,) 1/0 present (streamed
     engines) or valid (batched engines) vector — the staleness_mean
     denominator.
     """
     w_total = w.sum()
-    mean_flat = agg.finalize_aggregate(acc, w_total, spec,
+    mean = agg.finalize_plan_aggregate(accs, w_total, spec, plan,
                                        jax.random.fold_in(rng, 0xDEE))
-    new_params, new_opt = server.apply(params, opt_state,
-                                       unravel(mean_flat))
+    new_params, new_opt = server.apply(params, opt_state, mean)
     denom = jnp.maximum(w_total, 1e-9)
     metrics = {
         "update_norm": (norms * w).sum() / denom,
@@ -192,55 +214,70 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
         mesh = make_agg_mesh(num_leaves)
 
     def step(params, opt_state, mbuf, present, weights, staleness, norms,
              clips, session_key, rng):
-        L, Bl, D = mbuf.shape
-        rows = mbuf.reshape(B, D)  # global slot s = leaf * leaf_buffer + local
+        bufs = _as_chunks(mbuf)  # tuple of (L, Bl, padded_c)
+        # global slot s = leaf * leaf_buffer + local
+        rows = tuple(b.reshape(B, b.shape[-1]) for b in bufs)
         pres_full = present.reshape(B)
 
         if recover and masked:
-            sess = agg.make_mask_session(spec, session_key)
-            lo, hi, ew = _partition_edges(sess, num_leaves)
+            # per-chunk independent sessions: each chunk's graph is keyed
+            # by its own session key, so each gets its own edge partition
+            parts = tuple(
+                _partition_edges(agg.make_mask_session(spec, k), num_leaves)
+                for k in plan.session_keys(session_key))
+            los = tuple(p[0] for p in parts)
+            his = tuple(p[1] for p in parts)
+            ews = tuple(p[2] for p in parts)
 
             def leaf_fn(rows_l, pres_l, pres_all, lo_l, hi_l, ew_l, skey):
-                acc = jnp.sum(rows_l * pres_l.astype(jnp.int32)[:, None],
-                              axis=0)  # int32, wraps mod 2^32
-                acc = acc + sa.recovery_sweep((D,), pres_all, lo_l, hi_l,
-                                              skey, ew_l)
-                return jax.lax.psum(acc, LEAF_AXIS)  # field-modulus combine
+                pres_i = pres_l.astype(jnp.int32)
+                ckeys = plan.session_keys(skey)
+                accs = []
+                for c, ck in enumerate(plan.chunks):
+                    acc = jnp.sum(rows_l[c] * pres_i[:, None],
+                                  axis=0)  # int32, wraps mod 2^32
+                    rec = sa.recovery_sweep((ck.size,), pres_all, lo_l[c],
+                                            hi_l[c], ckeys[c], ew_l[c])
+                    accs.append(acc + _pad_to(rec, ck.padded))
+                # field-modulus combine, chunk-wise
+                return jax.lax.psum(tuple(accs), LEAF_AXIS)
 
-            acc = shard_map(
+            accs = shard_map(
                 leaf_fn, mesh=mesh,
                 in_specs=(P(LEAF_AXIS), P(LEAF_AXIS), P(), P(LEAF_AXIS),
                           P(LEAF_AXIS), P(LEAF_AXIS), P()),
                 out_specs=P(), check_rep=False,
-            )(rows, pres_full, pres_full, lo, hi, ew, session_key)
+            )(rows, pres_full, pres_full, los, his, ews, session_key)
         elif recover:  # streamed-unmasked partial flush: gate, no shares
 
             def leaf_fn(rows_l, pres_l):
-                acc = jnp.sum(rows_l * pres_l.astype(jnp.int32)[:, None],
-                              axis=0)
-                return jax.lax.psum(acc, LEAF_AXIS)
+                pres_i = pres_l.astype(jnp.int32)
+                return jax.lax.psum(
+                    tuple(jnp.sum(r * pres_i[:, None], axis=0)
+                          for r in rows_l), LEAF_AXIS)
 
-            acc = shard_map(
+            accs = shard_map(
                 leaf_fn, mesh=mesh, in_specs=(P(LEAF_AXIS), P(LEAF_AXIS)),
                 out_specs=P(), check_rep=False)(rows, pres_full)
         else:  # complete session: masks provably cancel in the plain sum
 
             def leaf_fn(rows_l):
-                return jax.lax.psum(jnp.sum(rows_l, axis=0), LEAF_AXIS)
+                return jax.lax.psum(
+                    tuple(jnp.sum(r, axis=0) for r in rows_l), LEAF_AXIS)
 
-            acc = shard_map(leaf_fn, mesh=mesh, in_specs=(P(LEAF_AXIS),),
-                            out_specs=P(), check_rep=False)(rows)
+            accs = shard_map(leaf_fn, mesh=mesh, in_specs=(P(LEAF_AXIS),),
+                             out_specs=P(), check_rep=False)(rows)
 
         w = weights.reshape(B) * pres_full
-        return _finalize_root(params, opt_state, acc, w, norms.reshape(B),
+        return _finalize_root(params, opt_state, accs, w, norms.reshape(B),
                               clips.reshape(B), staleness.reshape(B),
-                              pres_full, spec, server, unravel, rng)
+                              pres_full, spec, plan, server, rng)
 
     return jax.jit(step)
 
@@ -278,20 +315,23 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
         mesh = make_agg_mesh(num_leaves)
     has_noise = spec.dev_noise > 0.0
     is_masked = mask_mode == "tee"
+    Bl = leaf_buffer
 
     def step(params, opt_state, buf, staleness, valid, rng):
-        L, Bl, D = buf.shape
-        rows = buf.reshape(B, D)
+        bufs = _as_chunks(buf)  # tuple of (L, Bl, padded_c) f32
+        rows = tuple(b.reshape(B, b.shape[-1]) for b in bufs)
         w_full = staleness_weight(staleness.reshape(B), staleness_mode,
                                   staleness_exponent) * valid.reshape(B)
-        noise, uniforms = agg.buffer_noise_and_uniforms(rng, B, D, spec)
+        noise, uniforms = agg.plan_buffer_noise_and_uniforms(rng, B, spec,
+                                                            plan)
         if noise is not None:
-            noise = noise * (spec.dev_noise * w_full)[:, None]
+            noise = tuple(n * (spec.dev_noise * w_full)[:, None]
+                          for n in noise)
         skey = jax.random.fold_in(rng, 0x7EE) if is_masked else None
 
         def leaf_fn(rows_l, w_l, u_l, *rest):
@@ -299,14 +339,15 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
             n_l = rest.pop(0) if has_noise else None
             skey_l = rest.pop(0) if is_masked else None
             offset = jax.lax.axis_index(LEAF_AXIS) * Bl
-            # every leaf derives the same GLOBAL session from the
-            # replicated key; only its slot-offset view differs
-            sess = (agg.make_mask_session(spec, skey_l, slot_offset=offset)
-                    if is_masked else None)
-            acc, nrm, clipped = agg.encode_and_sum_rows(
-                rows_l, w_l, u_l, n_l, spec, session=sess,
+            # every leaf derives the same GLOBAL per-chunk sessions from
+            # the replicated key; only its slot-offset view differs
+            sessions = (agg.plan_sessions(spec, plan, skey_l,
+                                          slot_offset=offset)
+                        if is_masked else None)
+            accs, nrm, clipped = agg.encode_plan_rows(
+                rows_l, w_l, u_l, n_l, spec, plan, sessions=sessions,
                 use_pallas=use_pallas)
-            return jax.lax.psum(acc, LEAF_AXIS), nrm, clipped
+            return jax.lax.psum(accs, LEAF_AXIS), nrm, clipped
 
         args = [rows, w_full, uniforms]
         in_specs = [P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
@@ -316,14 +357,14 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
         if is_masked:
             args.append(skey)
             in_specs.append(P())
-        acc, nrm, was_clipped = shard_map(
+        accs, nrm, was_clipped = shard_map(
             leaf_fn, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=(P(), P(LEAF_AXIS), P(LEAF_AXIS)), check_rep=False,
         )(*args)
 
-        return _finalize_root(params, opt_state, acc, w_full, nrm,
+        return _finalize_root(params, opt_state, accs, w_full, nrm,
                               was_clipped, staleness.reshape(B),
-                              valid.reshape(B), spec, server, unravel, rng)
+                              valid.reshape(B), spec, plan, server, rng)
 
     return jax.jit(step)
 
@@ -365,60 +406,75 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
         mesh = make_leaf_mesh(num_leaves)
     lpd = leaves_per_device(num_leaves, mesh)
+    L, Bl = num_leaves, leaf_buffer
 
     def step(params, opt_state, mbuf, present, weights, staleness, norms,
              clips, session_key, rng):
-        L, Bl, D = mbuf.shape
+        bufs = _as_chunks(mbuf)  # tuple of (L, Bl, padded_c)
 
         def dev_fn(rows_b, pres_b, skey):
-            # rows_b: (lpd, Bl, D); pres_b: (lpd, Bl) — THIS device's leaves
+            # rows_b: per-chunk (lpd, Bl, padded_c); pres_b: (lpd, Bl) —
+            # THIS device's leaves
             dev = jax.lax.axis_index(LEAF_AXIS)
             gleaves = dev * lpd + jnp.arange(lpd, dtype=jnp.int32)
-            # the root session is leaf-independent: derive it once per
+            ckeys = plan.session_keys(skey)
+            # the root sessions are leaf-independent: derive them once per
             # device, not once per vmapped logical leaf
-            rsess = (root_session(spec, skey, L)
+            rsess = (tuple(root_session(spec, k, L) for k in ckeys)
                      if recover and masked else None)
 
             def one_leaf(g, rows_l, pres_l):
                 if not recover:  # complete session: local masks cancel
-                    return jnp.sum(rows_l, axis=0)
+                    return tuple(jnp.sum(r, axis=0) for r in rows_l)
                 pres_i = pres_l.astype(jnp.int32)
-                acc = jnp.sum(rows_l * pres_i[:, None], axis=0)  # mod 2^32
                 alive = (pres_i.sum() > 0).astype(jnp.int32)
-                if masked:
-                    # fault isolation: ONLY this leaf's session edges,
-                    # gated by ONLY this leaf's present vector
-                    lsess = leaf_session(spec, skey, g, Bl)
-                    acc = acc + lsess.recovery((D,), pres_l)
-                    acc = acc + alive * rsess.mask((D,), g)
-                return acc
+                accs = []
+                for c, ck in enumerate(plan.chunks):
+                    acc = jnp.sum(rows_l[c] * pres_i[:, None],
+                                  axis=0)  # mod 2^32
+                    if masked:
+                        # fault isolation: ONLY this leaf's session edges,
+                        # gated by ONLY this leaf's present vector — per
+                        # chunk, under the chunk's own session tree
+                        lsess = leaf_session(spec, ckeys[c], g, Bl)
+                        acc = acc + _pad_to(
+                            lsess.recovery((ck.size,), pres_l), ck.padded)
+                        acc = acc + _pad_to(
+                            alive * rsess[c].mask((ck.size,), g), ck.padded)
+                    accs.append(acc)
+                return tuple(accs)
 
             accs = jax.vmap(one_leaf)(gleaves, rows_b, pres_b)
             return jax.lax.psum(
-                jnp.sum(accs, axis=0, dtype=accs.dtype), LEAF_AXIS)
+                jax.tree.map(lambda a: jnp.sum(a, axis=0, dtype=a.dtype),
+                             accs), LEAF_AXIS)
 
-        acc = shard_map(
+        accs = shard_map(
             dev_fn, mesh=mesh,
             in_specs=(P(LEAF_AXIS), P(LEAF_AXIS), P()),
             out_specs=P(), check_rep=False,
-        )(mbuf, present, session_key)
+        )(bufs, present, session_key)
 
         pres_full = present.reshape(B)
         if recover and masked:
-            # root tier: a dead leaf is one absent slot of the L-slot root
-            # session — recover its share with a single root sweep
+            # root tier: a dead leaf is one absent slot of each chunk's
+            # L-slot root session — recover its shares with root sweeps
             alive = (present.reshape(L, Bl).sum(axis=1) > 0)
-            acc = acc + root_session(spec, session_key, L).recovery(
-                (D,), alive.astype(jnp.float32))
+            alive_f = alive.astype(jnp.float32)
+            ckeys = plan.session_keys(session_key)
+            accs = tuple(
+                acc + _pad_to(root_session(spec, ckeys[c], L).recovery(
+                    (ck.size,), alive_f), ck.padded)
+                for c, (acc, ck) in enumerate(zip(accs, plan.chunks)))
 
         w = weights.reshape(B) * pres_full
-        return _finalize_root(params, opt_state, acc, w, norms.reshape(B),
+        return _finalize_root(params, opt_state, accs, w, norms.reshape(B),
                               clips.reshape(B), staleness.reshape(B),
-                              pres_full, spec, server, unravel, rng)
+                              pres_full, spec, plan, server, rng)
 
     return jax.jit(step)
 
@@ -450,23 +506,27 @@ def build_two_level_buffer_step(params, fl_cfg, *, num_leaves: int,
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
-    _, unravel = ravel_pytree(params)
+    plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
         mesh = make_leaf_mesh(num_leaves)
     lpd = leaves_per_device(num_leaves, mesh)
     has_noise = spec.dev_noise > 0.0
+    L, Bl = num_leaves, leaf_buffer
 
     def step(params, opt_state, buf, staleness, valid, rng):
-        L, Bl, D = buf.shape
+        bufs = _as_chunks(buf)  # tuple of (L, Bl, padded_c) f32
         w_full = staleness_weight(staleness.reshape(B), staleness_mode,
                                   staleness_exponent) * valid.reshape(B)
-        noise, uniforms = agg.buffer_noise_and_uniforms(rng, B, D, spec)
+        noise, uniforms = agg.plan_buffer_noise_and_uniforms(rng, B, spec,
+                                                            plan)
         if noise is not None:
-            noise = noise * (spec.dev_noise * w_full)[:, None]
+            noise = tuple(n * (spec.dev_noise * w_full)[:, None]
+                          for n in noise)
         skey = jax.random.fold_in(rng, 0x7EE)
         w3 = w_full.reshape(L, Bl)
-        u3 = uniforms.reshape(L, Bl, D)
-        n3 = None if noise is None else noise.reshape(L, Bl, D)
+        u3 = tuple(u.reshape(L, Bl, u.shape[-1]) for u in uniforms)
+        n3 = (None if noise is None
+              else tuple(n.reshape(L, Bl, n.shape[-1]) for n in noise))
 
         def dev_fn(rows_b, w_b, u_b, *rest):
             rest = list(rest)
@@ -474,36 +534,39 @@ def build_two_level_buffer_step(params, fl_cfg, *, num_leaves: int,
             skey_b = rest.pop(0)
             dev = jax.lax.axis_index(LEAF_AXIS)
             gleaves = dev * lpd + jnp.arange(lpd, dtype=jnp.int32)
+            ckeys = plan.session_keys(skey_b)
 
             def one_leaf(g, rows_l, w_l, u_l, n_l):
-                sess = leaf_session(spec, skey_b, g, Bl)
-                return agg.encode_and_sum_rows(
-                    rows_l, w_l, u_l, n_l, spec, session=sess,
+                sessions = tuple(leaf_session(spec, k, g, Bl)
+                                 for k in ckeys)
+                return agg.encode_plan_rows(
+                    rows_l, w_l, u_l, n_l, spec, plan, sessions=sessions,
                     use_pallas=use_pallas)
 
             # n_b is None when device noise is off — an empty pytree, which
             # vmap maps over trivially
             accs, nrm, clipped = jax.vmap(one_leaf)(gleaves, rows_b, w_b,
                                                     u_b, n_b)
-            return (jax.lax.psum(jnp.sum(accs, axis=0, dtype=accs.dtype),
-                                 LEAF_AXIS), nrm, clipped)
+            return (jax.lax.psum(
+                jax.tree.map(lambda a: jnp.sum(a, axis=0, dtype=a.dtype),
+                             accs), LEAF_AXIS), nrm, clipped)
 
-        args = [buf, w3, u3]
+        args = [bufs, w3, u3]
         in_specs = [P(LEAF_AXIS), P(LEAF_AXIS), P(LEAF_AXIS)]
         if has_noise:
             args.append(n3)
             in_specs.append(P(LEAF_AXIS))
         args.append(skey)
         in_specs.append(P())
-        acc, nrm, was_clipped = shard_map(
+        accs, nrm, was_clipped = shard_map(
             dev_fn, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=(P(), P(LEAF_AXIS), P(LEAF_AXIS)), check_rep=False,
         )(*args)
         nrm, was_clipped = nrm.reshape(B), was_clipped.reshape(B)
 
-        return _finalize_root(params, opt_state, acc, w_full, nrm,
+        return _finalize_root(params, opt_state, accs, w_full, nrm,
                               was_clipped, staleness.reshape(B),
-                              valid.reshape(B), spec, server, unravel, rng)
+                              valid.reshape(B), spec, plan, server, rng)
 
     return jax.jit(step)
 
@@ -592,8 +655,8 @@ class ShardedAsyncServer:
             raise ValueError("the sharded tier aggregates in the secure-agg "
                              "integer field: set secure_agg_bits > 0")
         self._spec = spec
-        flat, _ = ravel_pytree(params)
-        D = flat.shape[0]
+        plan = agg.plan_for(params, fl_cfg)
+        self._plan = plan
         self._opt_state = build_server_opt(fl_cfg).init(params)
         L, Bl = num_leaves, leaf_buffer
         zslot = lambda: jax.device_put(jnp.zeros((L, Bl), jnp.float32),
@@ -606,19 +669,23 @@ class ShardedAsyncServer:
         s_mode, s_exp = staleness_mode, staleness_exponent
         masked = mask_mode not in ("off", "tee")
 
-        def row_session(skey, gslot):
-            """The (session, mask-slot) a row at GLOBAL slot ``gslot`` is
-            masked under — the single construction point both the
-            destination-sharded server ingest and the client-side
-            ``encode_push_batch`` share, so their rows are bit-equal."""
+        def row_sessions(skey, gslot):
+            """The (per-chunk sessions, mask-slot) a row at GLOBAL slot
+            ``gslot`` is masked under — the single construction point both
+            the destination-sharded server ingest and the client-side
+            ``encode_push`` share, so their rows are bit-equal."""
+            ckeys = plan.session_keys(skey)
             if two_level:
-                return (leaf_session(spec, skey, gslot // Bl, Bl),
-                        gslot % Bl)
-            return agg.make_mask_session(spec, skey), gslot
+                leaf, mslot = gslot // Bl, gslot % Bl
+                return (tuple(leaf_session(spec, k, leaf, Bl)
+                              for k in ckeys), mslot)
+            return tuple(agg.make_mask_session(spec, k)
+                         for k in ckeys), gslot
 
-        def encode_row(flat_d, gslot, stal, skey, pkey):
+        def encode_row(chunks_d, gslot, stal, skey, pkey):
             """One arrival's jitted encode pipeline, traceable in the slot.
 
+            ``chunks_d`` is the plan's tuple of PADDED per-chunk flat rows.
             PRF streams are keyed by the GLOBAL slot
             (``fold_in(push_key, gslot)``) in both topologies, so encoded
             q-streams — and therefore decoded aggregates — are
@@ -626,18 +693,21 @@ class ShardedAsyncServer:
             """
             rng = jax.random.fold_in(pkey, gslot)
             w = staleness_weight(stal, s_mode, s_exp)
+            xs = tuple(x[..., :ck.size]
+                       for x, ck in zip(chunks_d, plan.chunks))
             if masked:
-                sess, mslot = row_session(skey, gslot)
-                row, nrm, clipped = agg.encode_masked_contribution(
-                    flat_d, w, mslot, spec, sess, rng, use_pallas=use_pallas)
+                sessions, mslot = row_sessions(skey, gslot)
             else:
-                row, nrm, clipped = agg.encode_contribution(
-                    flat_d, w, spec, rng)
-            return row, w, nrm, clipped
+                sessions, mslot = None, 0
+            rows, nrm, clipped = agg.encode_plan_flat(
+                xs, w, mslot, spec, plan, sessions, rng, masked=masked,
+                use_pallas=use_pallas)
+            return rows, w, nrm, clipped
 
         if self._streaming:
-            self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.int32),
-                                       s_buf)
+            self._bufs = tuple(
+                jax.device_put(jnp.zeros((L, Bl, ck.padded), jnp.int32),
+                               s_buf) for ck in plan.chunks)
             self._wts, self._norms, self._clips = zslot(), zslot(), zslot()
             build_masked = (build_two_level_masked_step if two_level
                             else build_sharded_masked_step)
@@ -657,17 +727,19 @@ class ShardedAsyncServer:
                 ``idx``/``lslot``/``valid``/``stals``: (L, kb) per-leaf
                 routing tables (kb = most arrivals any leaf received this
                 batch; padding rows carry valid=0).  The raw rows are
-                gathered to their destination leaves (a memory move), and
-                ALL row math — clip/weight/stochastic-encode[+mask] — runs
-                inside the shard_map, each leaf encoding only its own
-                arrivals.  Padded rows are encoded-and-dropped (their
-                writes target local slot Bl, out of range -> scatter-drop).
+                chunked per the plan and gathered to their destination
+                leaves (a memory move — per-chunk, never a concatenated
+                (K, D) block), and ALL row math —
+                clip/weight/stochastic-encode[+mask] — runs inside the
+                shard_map, each leaf encoding only its own arrivals.
+                Padded rows are encoded-and-dropped (their writes target
+                local slot Bl, out of range -> scatter-drop).
                 """
-                rows_raw = jax.vmap(
-                    lambda d: ravel_pytree(d)[0].astype(jnp.float32))(deltas)
+                chunks_raw = plan.chunk_arrays(deltas, leading=1, pad=True)
                 kb = idx.shape[1]
-                routed = jnp.take(rows_raw, idx.reshape(-1),
-                                  axis=0).reshape(L, kb, -1)
+                routed = tuple(
+                    jnp.take(cr, idx.reshape(-1), axis=0).reshape(L, kb, -1)
+                    for cr in chunks_raw)
 
                 def dev_fn(buf_b, wts_b, norms_b, clips_b, stal_b, routed_b,
                            lslot_b, valid_b, stals_b, skey, pkey):
@@ -681,7 +753,8 @@ class ShardedAsyncServer:
                                                        skey, pkey))(
                             raw_l, sl, st)
                         tgt = jnp.where(vld > 0, sl, Bl)  # Bl -> dropped
-                        return (buf_l.at[tgt].set(rows_e, mode="drop"),
+                        return (tuple(b.at[tgt].set(r, mode="drop")
+                                      for b, r in zip(buf_l, rows_e)),
                                 wts_l.at[tgt].set(w, mode="drop"),
                                 norms_l.at[tgt].set(nrm, mode="drop"),
                                 clips_l.at[tgt].set(cl, mode="drop"),
@@ -703,23 +776,26 @@ class ShardedAsyncServer:
             @jax.jit
             def _encode_batch(deltas, slots, stals, session_key, push_key):
                 """The CLIENT-side vmapped encode (mask_mode='client'):
-                produces the rows ``encode_push_batch`` hands back to the
+                produces the rows ``encode_push`` hands back to the
                 caller.  Runs the exact ``encode_row`` pipeline of the
                 sharded server ingest, so client-encoded and
                 server-encoded rows are bit-identical."""
 
                 def one(delta, slot, s):
-                    flat_d, _ = ravel_pytree(delta)
-                    return encode_row(flat_d, slot, s, session_key, push_key)
+                    chunks_d = plan.chunk_arrays(delta, pad=True)
+                    return encode_row(chunks_d, slot, s, session_key,
+                                      push_key)
 
                 return jax.vmap(one)(deltas, slots, stals)
 
             @jax.jit
-            def _scatter_rows(buf, wts, norms, clips, stal, leaf, local,
+            def _scatter_rows(bufs, wts, norms, clips, stal, leaf, local,
                               rows, w, nrm, clipped, s):
-                """Land a (K,) batch of ALREADY-ENCODED rows (client pushes)
-                on their leaves: ONE jitted scatter, no row math."""
-                return (buf.at[leaf, local].set(rows),
+                """Land a (K,) batch of ALREADY-ENCODED per-chunk rows
+                (client pushes) on their leaves: ONE jitted scatter, no
+                row math."""
+                return (tuple(b.at[leaf, local].set(r)
+                              for b, r in zip(bufs, rows)),
                         wts.at[leaf, local].set(w),
                         norms.at[leaf, local].set(nrm),
                         clips.at[leaf, local].set(clipped),
@@ -728,8 +804,9 @@ class ShardedAsyncServer:
             self._encode_batch = _encode_batch
             self._scatter_rows = _scatter_rows
         else:  # "tee": raw rows, the batched in-enclave mask lane at flush
-            self._buf = jax.device_put(jnp.zeros((L, Bl, D), jnp.float32),
-                                       s_buf)
+            self._bufs = tuple(
+                jax.device_put(jnp.zeros((L, Bl, ck.padded), jnp.float32),
+                               s_buf) for ck in plan.chunks)
             self._valid = zslot()
             if two_level:
                 self._step = build_two_level_buffer_step(
@@ -745,14 +822,28 @@ class ShardedAsyncServer:
                     mesh=self.mesh, use_pallas=use_pallas)
 
             @jax.jit
-            def _scatter_raw(buf, stal, valid, leaf, local, deltas, s):
-                rows = jax.vmap(lambda d: ravel_pytree(d)[0].astype(
-                    jnp.float32))(deltas)
-                return (buf.at[leaf, local].set(rows),
+            def _scatter_raw(bufs, stal, valid, leaf, local, deltas, s):
+                rows = plan.chunk_arrays(deltas, leading=1, pad=True)
+                return (tuple(b.at[leaf, local].set(r)
+                              for b, r in zip(bufs, rows)),
                         stal.at[leaf, local].set(s),
                         valid.at[leaf, local].set(jnp.ones_like(s)))
 
             self._scatter_raw = _scatter_raw
+
+    # -- plan / buffer views ------------------------------------------------
+    @property
+    def plan(self) -> agg.ParamPlan:
+        """The :class:`aggregation.ParamPlan` the tier's buffers, sessions
+        and encode pipeline are laid out by."""
+        return self._plan
+
+    @property
+    def _buf(self):
+        """Legacy view of the chunked buffer: the bare array of a
+        single-chunk plan (the flat (L, Bl, D) layout older callers poke),
+        else the per-chunk tuple."""
+        return self._bufs[0] if len(self._bufs) == 1 else self._bufs
 
     # -- session bookkeeping ------------------------------------------------
     def _session_key(self):
@@ -830,24 +921,84 @@ class ShardedAsyncServer:
     def pull(self) -> Tuple[Any, int]:
         return self.params, self.version
 
-    def encode_push(self, delta, client_version: int,
-                    slot: Optional[int] = None) -> ClientPush:
-        """The CLIENT half of mask_mode='client' (one delta; see
-        ``AsyncServer.encode_push``) against a GLOBAL session slot."""
-        cps = self.encode_push_batch(
+    def push(self, delta, client_version, rng=None,
+             slots: Optional[Sequence[int]] = None) -> None:
+        """Push one raw delta pytree — or a batch of them.
+
+        The ONE ingest entry point, shared in shape with
+        ``AsyncServer.push``: ``delta`` is either a single model-shaped
+        pytree or a (K,)-STACKED pytree (every leaf grows one leading
+        axis), in which case the batch is routed to its destination leaves
+        on host (index bookkeeping only) and encoded INSIDE a shard_map —
+        each leaf runs the jitted clip/weight/encode[+mask] pipeline over
+        exactly the rows addressed to it — then written in place; rows are
+        bit-identical to K sequential pushes.  ``client_version`` may be a
+        scalar or a (K,) sequence (mixed staleness within one arrival
+        batch).
+        """
+        k = batch_count(delta, self.params)
+        if k is None:
+            delta = jax.tree.map(lambda x: x[None], delta)
+            if slots is not None and not isinstance(slots, (list, tuple)):
+                slots = [slots]
+        self._push_impl(delta, client_version, rng=rng, slots=slots)
+
+    def encode_push(self, delta, client_version, rng=None,
+                    slot=None):
+        """The CLIENT half of mask_mode='client' (see
+        ``AsyncServer.encode_push``) against a GLOBAL session slot.
+
+        Accepts a single delta pytree (returns one :class:`ClientPush`) or
+        a (K,)-stacked batch (returns a list).  ``rng`` is accepted for
+        signature parity with ``AsyncServer.encode_push`` and unused: the
+        tier's per-slot PRF streams are fixed by the session so that rows
+        are bit-reproducible wherever they are encoded.
+        """
+        k = batch_count(delta, self.params)
+        if k is not None:
+            return self._encode_push_impl(
+                delta, client_version,
+                slots=None if slot is None else list(slot))
+        cps = self._encode_push_impl(
             jax.tree.map(lambda x: x[None], delta), client_version,
             slots=None if slot is None else [slot])
         return cps[0]
 
+    def push_encoded(self, cp, rng=None) -> None:
+        """The SERVER half of mask_mode='client': land one
+        :class:`ClientPush` — or a list of them — in one jitted scatter."""
+        self._push_encoded_impl(
+            [cp] if isinstance(cp, ClientPush) else list(cp), rng=rng)
+
+    # -- deprecated batch spellings (the unified entry points above accept
+    # -- stacked pytrees directly) ------------------------------------------
+    def push_batch(self, deltas, client_version, rng=None,
+                   slots: Optional[Sequence[int]] = None) -> None:
+        """Deprecated spelling of :meth:`push` on a stacked batch."""
+        _warn_deprecated("push_batch", "push")
+        self._push_impl(deltas, client_version, rng=rng, slots=slots)
+
     def encode_push_batch(self, deltas, client_version,
+                          slots: Optional[Sequence[int]] = None
+                          ) -> List[ClientPush]:
+        """Deprecated spelling of :meth:`encode_push` on a stacked batch."""
+        _warn_deprecated("encode_push_batch", "encode_push")
+        return self._encode_push_impl(deltas, client_version, slots=slots)
+
+    def push_encoded_batch(self, cps: Sequence[ClientPush],
+                           rng=None) -> None:
+        """Deprecated spelling of :meth:`push_encoded` on a list."""
+        _warn_deprecated("push_encoded_batch", "push_encoded")
+        self._push_encoded_impl(list(cps), rng=rng)
+
+    # -- ingest implementations ---------------------------------------------
+    def _encode_push_impl(self, deltas, client_version,
                           slots: Optional[Sequence[int]] = None
                           ) -> List[ClientPush]:
         """Encode a (K,)-stacked batch of deltas as the session's clients
         would — one vmapped jitted call, pure w.r.t. server state.  (This
         models CLIENT compute: in a fleet it runs on the devices, so it is
-        central here only because the simulator stands in for them.)
-        ``client_version`` may be a scalar or a (K,) sequence (mixed
-        staleness within one batch), as in ``push_batch``."""
+        central here only because the simulator stands in for them.)"""
         if self.mask_mode != "client":
             raise ValueError(
                 f"encode_push is the client half of mask_mode='client' "
@@ -860,16 +1011,17 @@ class ShardedAsyncServer:
             deltas, jnp.asarray(slots, jnp.int32), jnp.asarray(stals),
             self._session_key(),
             jax.random.fold_in(self._push_base, self.version))
-        return [ClientPush(rows[i], w[i], nrm[i], clipped[i],
+        # single-chunk pushes carry the bare (D,) row (the legacy wire
+        # shape); multi-chunk pushes carry the per-chunk tuple
+        row_of = ((lambda i: rows[0][i]) if len(rows) == 1
+                  else (lambda i: tuple(r[i] for r in rows)))
+        return [ClientPush(row_of(i), w[i], nrm[i], clipped[i],
                            float(stals[i]), self.version, int(s))
                 for i, s in enumerate(slots)]
 
-    def push_encoded(self, cp: ClientPush, rng=None) -> None:
-        self.push_encoded_batch([cp], rng=rng)
-
-    def push_encoded_batch(self, cps: Sequence[ClientPush],
+    def _push_encoded_impl(self, cps: Sequence[ClientPush],
                            rng=None) -> None:
-        """The SERVER half: land a batch of masked rows in one scatter."""
+        """Land a batch of already-masked rows in one scatter."""
         if self.mask_mode != "client":
             raise ValueError(
                 f"push_encoded is the server half of mask_mode='client' "
@@ -883,37 +1035,26 @@ class ShardedAsyncServer:
                     "no longer matches an open session position")
         self._check_slots(slots)
         leaf, local = self._leaf_local(slots)
-        (self._buf, self._wts, self._norms, self._clips,
+        crows = [cp.row if isinstance(cp.row, tuple) else (cp.row,)
+                 for cp in cps]
+        rows = tuple(jnp.stack([cr[c] for cr in crows])
+                     for c in range(self._plan.num_chunks))
+        (self._bufs, self._wts, self._norms, self._clips,
          self._stal) = self._scatter_rows(
-            self._buf, self._wts, self._norms, self._clips, self._stal,
-            leaf, local,
-            jnp.stack([cp.row for cp in cps]),
+            self._bufs, self._wts, self._norms, self._clips, self._stal,
+            leaf, local, rows,
             jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
             jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
             jnp.stack([jnp.asarray(cp.clipped) for cp in cps]),
             jnp.asarray([cp.staleness for cp in cps], jnp.float32))
         self._mark(slots, rng)
 
-    def push(self, delta, client_version: int, rng=None) -> None:
-        """Single-arrival convenience wrapper over ``push_batch``."""
-        self.push_batch(jax.tree.map(lambda x: x[None], delta),
-                        client_version, rng=rng)
-
-    def push_batch(self, deltas, client_version, rng=None,
+    def _push_impl(self, deltas, client_version, rng=None,
                    slots: Optional[Sequence[int]] = None) -> None:
-        """Vectorized multi-push: a (K,)-stacked batch of raw deltas.
-
-        ``client_version`` may be a scalar or a (K,) sequence (mixed
-        staleness within one arrival batch).  The batch is routed to its
-        destination leaves on host (index bookkeeping only) and encoded
-        INSIDE a shard_map — each leaf runs the jitted
-        clip/weight/encode[+mask] pipeline over exactly the rows addressed
-        to it — then written in place; rows are bit-identical to K
-        sequential pushes.
-        """
+        """Ingest a (K,)-stacked batch of raw deltas (see :meth:`push`)."""
         if self.mask_mode == "client":
-            self.push_encoded_batch(
-                self.encode_push_batch(deltas, client_version, slots=slots),
+            self._push_encoded_impl(
+                self._encode_push_impl(deltas, client_version, slots=slots),
                 rng=rng)
             return
         K = jax.tree.leaves(deltas)[0].shape[0]
@@ -924,15 +1065,15 @@ class ShardedAsyncServer:
         stals = self._staleness_of(client_version, K)
         if not self._streaming:  # "tee": store raw rows, mask lane at flush
             leaf, local = self._leaf_local(slots)
-            self._buf, self._stal, self._valid = self._scatter_raw(
-                self._buf, self._stal, self._valid, leaf, local, deltas,
+            self._bufs, self._stal, self._valid = self._scatter_raw(
+                self._bufs, self._stal, self._valid, leaf, local, deltas,
                 jnp.asarray(stals))
             self._mark(slots, rng)
             return
         idx, lsl, valid, st = self._route_by_leaf(slots, stals)
-        (self._buf, self._wts, self._norms, self._clips,
+        (self._bufs, self._wts, self._norms, self._clips,
          self._stal) = self._ingest_sharded(
-            self._buf, self._wts, self._norms, self._clips, self._stal,
+            self._bufs, self._wts, self._norms, self._clips, self._stal,
             deltas, idx, lsl, valid, st, self._session_key(),
             jax.random.fold_in(self._push_base, self.version))
         self._mark(slots, rng)
@@ -967,12 +1108,12 @@ class ShardedAsyncServer:
                     self._flush_step = self._build_flush_step()
                 step = self._flush_step  # dropout recovery
             self.params, self._opt_state, self.last_metrics = step(
-                self.params, self._opt_state, self._buf, present, self._wts,
+                self.params, self._opt_state, self._bufs, present, self._wts,
                 self._stal, self._norms, self._clips, self._session_key(),
                 rng)
         else:
             self.params, self._opt_state, self.last_metrics = self._step(
-                self.params, self._opt_state, self._buf, self._stal,
+                self.params, self._opt_state, self._bufs, self._stal,
                 self._valid, rng)
             self._valid = jnp.zeros_like(self._valid)
         self._present = [False] * self.buffer_size

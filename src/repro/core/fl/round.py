@@ -126,11 +126,14 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         # (any bijection works — only slot uniqueness matters for cancellation)
         slots = jnp.arange(cohort_size, dtype=jnp.int32).reshape(
             m, n_chunks).swapaxes(0, 1)
-        # pairwise-mask session of the round: ONE MaskSession per round
-        # (its graph permutation is derived from the session key, so every
-        # chunk's mask shares one consistent graph — cancellation needs it)
-        sess = agg.make_mask_session(
-            spec, jax.random.fold_in(rng, 0x5E55)) if masked else None
+        # pairwise-mask sessions of the round: one MaskSession per ParamPlan
+        # chunk (the single-chunk plan = the legacy one-session round).  Each
+        # chunk's graph permutation is derived from its session key, so every
+        # cohort chunk's mask shares one consistent graph per plan chunk —
+        # cancellation needs it.
+        plan = agg.plan_for(params, fl_cfg)
+        sessions = agg.plan_sessions(
+            spec, plan, jax.random.fold_in(rng, 0x5E55)) if masked else None
 
         deferred = getattr(fl_cfg, "deferred_agg", False) and m > 1
         if deferred:
@@ -157,7 +160,8 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                     if masked:
                         enc = jax.tree.map(
                             lambda e, mk: e + mk, enc,
-                            agg.mask_tree(params, cslot[0], sess))
+                            agg.plan_mask_tree(params, cslot[0], plan,
+                                               sessions))
                 else:
                     enc = delta
                 acc = jax.tree.map(lambda a, e: a + e, acc, enc)
@@ -173,7 +177,8 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                         deltas, sa_scale, crng)
                     if masked:
                         mks = jax.vmap(
-                            lambda s: agg.mask_tree(params, s, sess))(cslot)
+                            lambda s: agg.plan_mask_tree(params, s, plan,
+                                                         sessions))(cslot)
                         encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
                 else:
                     encs = deltas
@@ -280,14 +285,16 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
             encs = jax.vmap(agg.encode_tree, in_axes=(0, None, 0))(
                 deltas, sa_scale, rngs_l)
             if masked:
-                # every leaf derives the SAME session (incl. the random
-                # k-regular graph) from the replicated session key — no
-                # permutation array needs to be threaded through shard_map
+                # every leaf derives the SAME per-chunk sessions (incl. the
+                # random k-regular graphs) from the replicated session key —
+                # no permutation array needs threading through shard_map
                 (skey_l,) = mask_args
-                sess = agg.make_mask_session(spec, skey_l)
+                plan = agg.plan_for(params, fl_cfg)
+                sessions = agg.plan_sessions(spec, plan, skey_l)
                 slots = slot0 + jnp.arange(m, dtype=jnp.int32)
                 mks = jax.vmap(
-                    lambda s: agg.mask_tree(params, s, sess))(slots)
+                    lambda s: agg.plan_mask_tree(params, s, plan,
+                                                 sessions))(slots)
                 encs = jax.tree.map(lambda e, mk: e + mk, encs, mks)
             # the root combine: ONE integer all-reduce per round
             acc = jax.tree.map(

@@ -101,32 +101,39 @@ def stream_at(pk0, pk1, e, *, tag: int = TAG_MASK,
 
 
 def stream_block(pk0, pk1, length: int, *, tag: int = TAG_MASK,
+                 offset: int = 0,
                  rounds: int = DEFAULT_ROUNDS) -> jnp.ndarray:
-    """The host fast path: ``stream_at(arange(length))`` at half the cost.
+    """The host fast path: ``stream_at(offset + arange(length))`` at half cost.
 
     One Threefry evaluation per TWO elements (both lanes used).  ``pk0/pk1``
     may carry leading batch dims; the stream axis is appended last.
+    ``offset`` shifts the element positions, so a chunk of a longer stream
+    (a ``ParamPlan`` chunk's slice of the model-wide uniform stream) is
+    bit-identical to the corresponding slice of the full block.
     """
     pk0 = jnp.asarray(pk0).astype(U32)
     pk1 = jnp.asarray(pk1).astype(U32)
-    half = (length + 1) // 2
-    c = jnp.arange(half, dtype=U32)
-    c = c.reshape((1,) * pk0.ndim + (half,))
+    lo = offset >> 1
+    n = ((offset + length + 1) >> 1) - lo  # counters covering the window
+    c = U32(lo) + jnp.arange(n, dtype=U32)
+    c = c.reshape((1,) * pk0.ndim + (n,))
     tags = jnp.full_like(c, U32(tag))
     y0, y1 = threefry2x32(pk0[..., None], pk1[..., None], c, tags,
                           rounds=rounds)
-    out = jnp.stack([y0, y1], axis=-1).reshape(pk0.shape + (2 * half,))
-    return out[..., :length].astype(jnp.int32)
+    out = jnp.stack([y0, y1], axis=-1).reshape(pk0.shape + (2 * n,))
+    start = offset & 1
+    return out[..., start:start + length].astype(jnp.int32)
 
 
-def uniform_block(uk0, uk1, length: int,
-                  *, rounds: int = DEFAULT_ROUNDS) -> jnp.ndarray:
+def uniform_block(uk0, uk1, length: int, *, offset: int = 0,
+                  rounds: int = DEFAULT_ROUNDS) -> jnp.ndarray:
     """f32 uniforms in [0, 1) from the TAG_UNIFORM stream family.
 
     Top 24 bits of each word scaled by 2^-24 — the standard exact-f32
     construction; bit-identical between host and in-kernel generation.
     """
-    bits = stream_block(uk0, uk1, length, tag=TAG_UNIFORM, rounds=rounds)
+    bits = stream_block(uk0, uk1, length, tag=TAG_UNIFORM, offset=offset,
+                        rounds=rounds)
     return bits_to_uniform(bits)
 
 

@@ -109,15 +109,20 @@ def prf_session_mask(D: int, slot: int, num_slots: int, mask_key_words,
     return total
 
 
-def prf_uniforms(D: int, uniform_key_words) -> jnp.ndarray:
-    """Stochastic-rounding uniforms of the fused push path, per position."""
+def prf_uniforms(D: int, uniform_key_words, offset: int = 0) -> jnp.ndarray:
+    """Stochastic-rounding uniforms of the fused push path, per position.
+
+    ``offset`` shifts the element positions (a ParamPlan chunk's slice of
+    the model-wide TAG_UNIFORM stream).
+    """
     u0, u1 = jnp.asarray(uniform_key_words, prf.U32)
     return prf.bits_to_uniform(
-        prf.stream_at(u0, u1, jnp.arange(D), tag=prf.TAG_UNIFORM))
+        prf.stream_at(u0, u1, offset + jnp.arange(D), tag=prf.TAG_UNIFORM))
 
 
 def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
-                      uniform_key_words, session, perm=None) -> jnp.ndarray:
+                      uniform_key_words, session, perm=None,
+                      u_offset: int = 0) -> jnp.ndarray:
     """Oracle for the fused masked-push kernel: q(x * scale) + mask[slot].
 
     ``session`` is the kernels' session-meta lane (anything with
@@ -125,13 +130,15 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
     ``kernels.secure_agg.SessionMeta``); ``perm`` is the host-readable
     random-graph permutation the kernel's neighbour table was built from
     (the oracle enumerates neighbours in Python, so it takes the
-    permutation, not the table).
+    permutation, not the table).  ``u_offset`` shifts the
+    stochastic-rounding stream to the chunk's global flat offset; the mask
+    stream stays chunk-local.
     """
     (D,) = x.shape
     xf = x.astype(jnp.float32) * scale
     floor = jnp.floor(xf)
-    bit = (prf_uniforms(D, uniform_key_words) < (xf - floor)).astype(
-        jnp.float32)
+    bit = (prf_uniforms(D, uniform_key_words, u_offset)
+           < (xf - floor)).astype(jnp.float32)
     q = (floor + bit).astype(jnp.int32)
     return q + prf_session_mask(D, slot, session.num_slots,
                                 session.key_words, session.degree, perm)

@@ -175,18 +175,25 @@ def _session_mask_tile(k0, k1, slot, e, num_slots: int,
 def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
                               num_slots: int, degree: int, block: int,
                               n_nbrs: int):
-    # meta: (5 [+ num_slots*n_nbrs],) uint32 = mask key words, uniform key
-    # words, slot id [, flattened random-graph neighbour table]
+    # meta: (6 [+ num_slots*n_nbrs],) uint32 = mask key words, uniform key
+    # words, slot id, uniform-stream element offset [, flattened
+    # random-graph neighbour table]
     k0, k1 = meta_ref[0], meta_ref[1]
     u0, u1 = meta_ref[2], meta_ref[3]
     slot = meta_ref[4].astype(jnp.int32)
-    nbrs = (meta_ref[5:5 + num_slots * n_nbrs].astype(jnp.int32)
+    u_off = meta_ref[5]
+    nbrs = (meta_ref[6:6 + num_slots * n_nbrs].astype(jnp.int32)
             .reshape(num_slots, n_nbrs) if n_nbrs else None)
     e = (pl.program_id(0) * block).astype(prf.U32) + _iota_u32(block)
 
     xf = x_ref[...].astype(jnp.float32) * scale
     floor = jnp.floor(xf)
-    u = prf.bits_to_uniform(prf.stream_at(u0, u1, e, tag=prf.TAG_UNIFORM))
+    # the stochastic-rounding stream is indexed by GLOBAL model position
+    # (u_off = this chunk's flat offset in the ParamPlan), so chunked and
+    # flat encodes consume bit-identical uniforms; the mask stream stays
+    # chunk-local (each chunk is its own session)
+    u = prf.bits_to_uniform(
+        prf.stream_at(u0, u1, u_off + e, tag=prf.TAG_UNIFORM))
     bit = (u < (xf - floor)).astype(jnp.float32)
     q = (floor + bit).astype(jnp.int32)
     out_ref[...] = q + _session_mask_tile(k0, k1, slot, e, num_slots, degree,
@@ -195,6 +202,7 @@ def _quantize_mask_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
 
 def quantize_mask_prf(x: jnp.ndarray, scale: float, slot,
                       uniform_key_words, session: SessionMeta, *,
+                      u_offset=0,
                       block: int = DEFAULT_BLOCK,
                       interpret: bool = False) -> jnp.ndarray:
     """The fused masked-push hot loop: out = q(x * scale) + mask[slot].
@@ -205,10 +213,13 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot,
     ``session``: the :class:`SessionMeta` lane — session key words, size,
     graph degree and the optional random-graph neighbour table all ride the
     scalar meta operand into the kernel (``slot`` is absolute, so
-    ``session.slot_offset`` is ignored here).  Stochastic-rounding uniforms
-    AND the slot's pairwise session mask are generated in-kernel from
-    counters — neither ever exists in HBM.  Bit-identical to the host
-    oracle ``ref.quantize_mask_prf``.
+    ``session.slot_offset`` is ignored here).  ``u_offset`` (traced ok)
+    shifts the stochastic-rounding stream to this chunk's GLOBAL flat
+    offset in a multi-chunk ``ParamPlan`` (masks stay chunk-local — each
+    chunk is its own session).  Stochastic-rounding uniforms AND the slot's
+    pairwise session mask are generated in-kernel from counters — neither
+    ever exists in HBM.  Bit-identical to the host oracle
+    ``ref.quantize_mask_prf``.
     """
     (D,) = x.shape
     num_slots, degree = session.num_slots, session.degree
@@ -218,7 +229,8 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot,
     meta_parts = [
         jnp.asarray(session.key_words, prf.U32).reshape(2),
         jnp.asarray(uniform_key_words, prf.U32).reshape(2),
-        jnp.asarray(slot, prf.U32).reshape(1)]
+        jnp.asarray(slot, prf.U32).reshape(1),
+        jnp.asarray(u_offset, prf.U32).reshape(1)]
     n_nbrs = 0
     if neighbors is not None:
         n_nbrs = int(neighbors.shape[1])

@@ -1,0 +1,378 @@
+"""The pytree-native aggregation API (ParamPlan) — bit-exactness matrix.
+
+The tentpole contract of the plan redesign: CHUNKED engines (a multi-chunk
+``ParamPlan`` from ``FLConfig.param_chunk_elems``) are BIT-identical to the
+degenerate single-chunk (flat) plan for every mask mode
+("off" / "client" / "tee" / "tee_stream"), both tier topologies (flat
+sharded global session and the two-level session tree), under client and
+whole-leaf dropout — over a RAGGED multi-leaf model whose per-layer dims
+are NOT kernel-block multiples.  Plus: no engine materializes a full-model
+(D,) buffer when a multi-chunk plan is active, ``FLConfig.__post_init__``
+rejects incoherent settings, and the deprecated ``*_batch`` spellings warn
+but still work.
+
+Multi-device assertions ride the test_hierarchy pattern: in-process when
+launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+otherwise via the slow-lane subprocess.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.fl import aggregation as agg
+from repro.core.fl.async_fl import AsyncServer, batch_count
+from repro.core.fl.hierarchy import ShardedAsyncServer
+from repro.core.fl.round import build_round_step, build_sharded_round_step, \
+    init_fl_state
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MODES = ("off", "tee", "tee_stream", "client")
+
+# ragged multi-leaf model: every flat size is deliberately NOT a multiple
+# of the 512-element kernel block, and no leaf boundary lands on one
+SHAPES = {"emb": (40, 16), "w1": (700,), "w2": (300, 3), "b": (5,)}
+D = sum(int(np.prod(s)) for s in SHAPES.values())  # 2245
+CHUNK = 1000  # greedy grouping -> [emb], [w1], [w2, b]: 3 chunks, 1024 pad
+
+FL = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32)
+FLC = dataclasses.replace(FL, param_chunk_elems=CHUNK)
+
+multidev = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="leaf mesh needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="aggregation tier needs >=2 devices (forced host devices OK)")
+
+
+def _params():
+    return {k: jnp.zeros(s, jnp.float32) for k, s in SHAPES.items()}
+
+
+def _deltas(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [
+        {k: 0.1 * jax.random.normal(jax.random.fold_in(
+            jax.random.fold_in(key, i), j), s)
+         for j, (k, s) in enumerate(SHAPES.items())}
+        for i in range(n)
+    ]
+
+
+def _diff(a, b):
+    return max(
+        float(np.abs(np.asarray(a[k]) - np.asarray(b[k])).max())
+        for k in SHAPES)
+
+
+# --- ParamPlan unit behaviour ------------------------------------------------
+def test_plan_default_is_single_unpadded_chunk():
+    plan = agg.make_param_plan(_params())
+    assert plan.num_chunks == 1
+    (ck,) = plan.chunks
+    assert (ck.leaf_lo, ck.leaf_hi) == (0, len(SHAPES))
+    assert ck.size == ck.padded == D == plan.total  # legacy flat layout
+    key = jax.random.PRNGKey(3)
+    (k0,) = plan.session_keys(key)
+    assert jnp.all(k0 == key)  # engine key used VERBATIM
+
+
+def test_plan_greedy_whole_leaf_grouping():
+    plan = agg.make_param_plan(_params(), chunk_elems=CHUNK)
+    sizes = plan.leaf_sizes
+    assert plan.num_chunks == 3
+    # whole leaves, contiguous, in tree (sorted-key) order:
+    # [b, emb] = 645, [w1] = 700, [w2] = 900
+    assert [(c.leaf_lo, c.leaf_hi) for c in plan.chunks] == \
+        [(0, 2), (2, 3), (3, 4)]
+    offs = [c.offset for c in plan.chunks]
+    assert offs == [0, sizes[0] + sizes[1], sizes[0] + sizes[1] + sizes[2]]
+    for c in plan.chunks:
+        assert c.size == sum(sizes[c.leaf_lo:c.leaf_hi])
+        assert c.padded % agg.DEFAULT_CHUNK_BLOCK == 0
+        assert c.size <= c.padded < c.size + agg.DEFAULT_CHUNK_BLOCK
+        assert c.padded < D  # narrower than the flat (D,) buffer
+    # an oversized leaf gets its own chunk rather than being split
+    plan2 = agg.make_param_plan(_params(), chunk_elems=10)
+    assert plan2.num_chunks == len(SHAPES)
+    # per-chunk keys are distinct and differ from the engine key
+    keys = plan.session_keys(jax.random.PRNGKey(3))
+    flat_keys = {tuple(np.asarray(k).tolist()) for k in keys}
+    assert len(flat_keys) == 3
+
+
+def test_plan_chunk_roundtrip_and_norms():
+    plan_f = agg.make_param_plan(_params())
+    plan_c = agg.make_param_plan(_params(), chunk_elems=CHUNK)
+    (d,) = _deltas(1)
+    for plan in (plan_f, plan_c):
+        rt = plan.unchunk(plan.chunk_arrays(d, pad=True))
+        assert _diff(rt, d) == 0.0
+    sq_f = agg.plan_sq_norms(plan_f, plan_f.chunk_arrays(d))
+    sq_c = agg.plan_sq_norms(plan_c, plan_c.chunk_arrays(d, pad=True))
+    assert float(sq_f) == float(sq_c)  # chunk-invariant, padding excluded
+
+
+# --- FLConfig.__post_init__ validation ---------------------------------------
+@pytest.mark.parametrize("bad,msg", [
+    (dict(secure_agg_degree=3), "even"),
+    (dict(secure_agg_bits=33), "int32"),
+    (dict(two_level=True), "num_leaves"),
+    (dict(num_leaves=4), "leaf_buffer"),
+    (dict(leaf_buffer=4), "num_leaves"),
+    (dict(param_chunk_elems=-1), "param_chunk_elems"),
+])
+def test_flconfig_rejects_incoherent_settings(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        FLConfig(**bad)
+
+
+def test_flconfig_accepts_coherent_settings():
+    FLConfig()
+    FLConfig(num_leaves=2, leaf_buffer=3, two_level=True)
+    FLConfig(num_leaves=4, leaf_buffer=4)
+    FLConfig(secure_agg_degree=4, param_chunk_elems=CHUNK)
+    dataclasses.replace(FL, num_leaves=2, leaf_buffer=2)
+
+
+# --- single-host engine: chunked == flat, all modes, with dropout ------------
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("keep", [(0, 1, 2, 3), (0, 2, 3)],
+                         ids=["full", "dropout"])
+def test_async_server_chunked_bit_identical(mode, keep):
+    srvs = [AsyncServer(_params(), fl, buffer_size=4, mask_mode=mode,
+                        staleness_mode="constant") for fl in (FL, FLC)]
+    assert srvs[1].plan.num_chunks == 3
+    ds = _deltas(4)
+    frng = jax.random.PRNGKey(11)
+    for srv in srvs:
+        for s in keep:
+            if mode == "client":
+                srv.push_encoded(
+                    srv.encode_push(ds[s], srv.version, slot=s))
+            else:
+                srv.push(ds[s], srv.version)
+        if len(keep) < 4:
+            srv.flush(rng=frng)
+    assert srvs[0].version == srvs[1].version == 1
+    assert _diff(srvs[0].params, srvs[1].params) == 0.0
+    for k in ("update_norm", "clip_fraction", "weight_total"):
+        assert float(srvs[0].last_metrics[k]) == \
+            float(srvs[1].last_metrics[k])
+
+
+# --- sharded tier: chunked == flat, both topologies, nested dropout ----------
+@needs_mesh
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("two_level", [False, True],
+                         ids=["flat-session", "session-tree"])
+@pytest.mark.parametrize("keep", [(0, 1, 2, 3), (0,)],
+                         ids=["full", "nested-dropout"])
+def test_sharded_tier_chunked_bit_identical(mode, two_level, keep):
+    """L=2, Bl=2; keep=(0,) drops a client inside leaf 0 AND all of leaf 1
+    (client + whole-leaf dropout through per-chunk recovery sweeps)."""
+    srvs = [ShardedAsyncServer(_params(), fl, num_leaves=2, leaf_buffer=2,
+                               mask_mode=mode, two_level=two_level,
+                               staleness_mode="constant")
+            for fl in (FL, FLC)]
+    assert srvs[1].plan.num_chunks == 3
+    ds = _deltas(4)
+    frng = jax.random.PRNGKey(11)
+    for srv in srvs:
+        for s in keep:
+            if mode == "client":
+                srv.push_encoded(
+                    srv.encode_push(ds[s], srv.version, slot=s))
+            else:
+                srv.push(ds[s], srv.version, slots=[s])
+        if len(keep) < 4:
+            srv.flush(rng=frng)
+    assert srvs[0].version == srvs[1].version == 1
+    assert _diff(srvs[0].params, srvs[1].params) == 0.0
+
+
+@needs_mesh
+def test_sharded_batched_push_chunked_matches_sequential():
+    """Destination-sharded batched ingest == sequential pushes under a
+    multi-chunk plan (per-chunk routing, no (K, D) concatenation)."""
+    ds = _deltas(4)
+    srv_a = ShardedAsyncServer(_params(), FLC, num_leaves=2, leaf_buffer=2,
+                               mask_mode="tee_stream",
+                               staleness_mode="constant")
+    srv_b = ShardedAsyncServer(_params(), FLC, num_leaves=2, leaf_buffer=2,
+                               mask_mode="tee_stream",
+                               staleness_mode="constant")
+    for d in ds:
+        srv_a.push(d, srv_a.version)
+    stacked = {k: jnp.stack([d[k] for d in ds]) for k in SHAPES}
+    srv_b.push(stacked, srv_b.version)
+    assert srv_a.version == srv_b.version == 1
+    assert _diff(srv_a.params, srv_b.params) == 0.0
+
+
+# --- no full-model (D,) buffer under a multi-chunk plan ----------------------
+def test_no_full_model_buffer_when_chunked():
+    a = AsyncServer(_params(), FLC, buffer_size=4, mask_mode="tee_stream",
+                    staleness_mode="constant")
+    s = ShardedAsyncServer(_params(), FLC, num_leaves=1, leaf_buffer=4,
+                           mask_mode="tee", staleness_mode="constant")
+    for srv in (a, s):
+        widths = [b.shape[-1] for b in srv._bufs]
+        assert len(widths) == 3
+        assert all(w < D for w in widths)  # never a (…, D) allocation
+        assert sum(w for w in widths) >= D
+    # the legacy flat layout is untouched: single-chunk keeps a bare (B, D)
+    flat = AsyncServer(_params(), FL, buffer_size=4, mask_mode="tee_stream",
+                       staleness_mode="constant")
+    assert not isinstance(flat._buf, tuple) and flat._buf.shape[-1] == D
+
+
+# --- unified push API + deprecated batch spellings ---------------------------
+def test_batch_count_detection():
+    p = _params()
+    (d,) = _deltas(1)
+    assert batch_count(d, p) is None
+    stacked = {k: jnp.stack([d[k]] * 3) for k in SHAPES}
+    assert batch_count(stacked, p) == 3
+    with pytest.raises(ValueError):
+        batch_count({k: d[k][None, None] for k in SHAPES}, p)
+
+
+def test_async_server_push_accepts_stacked_batch():
+    ds = _deltas(3)
+    a = AsyncServer(_params(), FLC, buffer_size=3, mask_mode="off",
+                    staleness_mode="constant")
+    b = AsyncServer(_params(), FLC, buffer_size=3, mask_mode="off",
+                    staleness_mode="constant")
+    for d in ds:
+        a.push(d, a.version)
+    b.push({k: jnp.stack([d[k] for d in ds]) for k in SHAPES}, b.version)
+    assert a.version == b.version == 1
+    assert _diff(a.params, b.params) == 0.0
+
+
+def test_deprecated_sharded_batch_spellings_warn_and_work():
+    ds = _deltas(2)
+    stacked = {k: jnp.stack([d[k] for d in ds]) for k in SHAPES}
+    srv = ShardedAsyncServer(_params(), FL, num_leaves=1, leaf_buffer=4,
+                             mask_mode="client", staleness_mode="constant")
+    with pytest.warns(DeprecationWarning, match="encode_push_batch"):
+        cps = srv.encode_push_batch(stacked, 0)
+    with pytest.warns(DeprecationWarning, match="push_encoded_batch"):
+        srv.push_encoded_batch(cps)
+    with pytest.warns(DeprecationWarning, match="push_batch"):
+        srv.push_batch(stacked, 0, slots=[2, 3])
+    assert srv.version == 1  # 4 slots landed -> session applied
+    # ...and the unified spellings do NOT warn
+    srv2 = ShardedAsyncServer(_params(), FL, num_leaves=1, leaf_buffer=4,
+                              mask_mode="client", staleness_mode="constant")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        srv2.push_encoded(srv2.encode_push(stacked, 0))
+        srv2.push(stacked, 0, slots=[2, 3])
+    assert srv2.version == 1
+    assert _diff(srv.params, srv2.params) == 0.0
+
+
+# --- the sync DP-FL round: per-chunk sessions cancel -------------------------
+@pytest.mark.parametrize("clients_per_chunk", [1, 4])
+def test_round_step_masked_chunked_bit_identical(clients_per_chunk):
+    """masked x chunked is a no-op on the decoded round: all four
+    (secure_agg_masked, param_chunk_elems) corners land identical params."""
+    def loss_fn(params, batch):
+        pred = (batch["x"].reshape(-1, SHAPES["emb"][0])
+                @ params["emb"]).sum(-1) + params["b"].sum()
+        return jnp.mean((pred - batch["y"].reshape(-1)) ** 2), {}
+
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "x": jax.random.normal(key, (4, 2, SHAPES["emb"][0])),
+        "y": jax.random.normal(jax.random.fold_in(key, 1), (4, 2)),
+    }
+    outs = []
+    for masked in (False, True):
+        for chunk in (0, CHUNK):
+            fl = dataclasses.replace(
+                FL, secure_agg_masked=masked, param_chunk_elems=chunk,
+                local_steps=1, local_lr=0.1)
+            step = jax.jit(build_round_step(
+                loss_fn, fl, cohort_size=4,
+                clients_per_chunk=clients_per_chunk))
+            state = init_fl_state(_params(), fl)
+            state, _ = step(state, batch, jax.random.PRNGKey(7))
+            outs.append(state.params)
+    for other in outs[1:]:
+        assert _diff(outs[0], other) == 0.0
+
+
+def test_sharded_round_step_masked_chunked_bit_identical():
+    def loss_fn(params, batch):
+        pred = (batch["x"].reshape(-1, SHAPES["emb"][0])
+                @ params["emb"]).sum(-1) + params["b"].sum()
+        return jnp.mean((pred - batch["y"].reshape(-1)) ** 2), {}
+
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "x": jax.random.normal(key, (4, 2, SHAPES["emb"][0])),
+        "y": jax.random.normal(jax.random.fold_in(key, 1), (4, 2)),
+    }
+    outs = []
+    for chunk in (0, CHUNK):
+        fl = dataclasses.replace(FL, secure_agg_masked=True,
+                                 param_chunk_elems=chunk, local_steps=1,
+                                 local_lr=0.1)
+        step = build_sharded_round_step(loss_fn, fl, cohort_size=4,
+                                        num_leaves=1)
+        state = init_fl_state(_params(), fl)
+        state, _ = step(state, batch, jax.random.PRNGKey(7))
+        outs.append(state.params)
+    assert _diff(outs[0], outs[1]) == 0.0
+
+
+# --- multi-device: the chunked tier on a real 8-leaf mesh --------------------
+@multidev
+@pytest.mark.parametrize("mode", ["tee_stream", "client"])
+def test_multidev_chunked_tier_bit_identical(mode):
+    """8 leaves x 1 slot on 8 real host devices: the chunked session tree
+    equals the flat single-chunk plan bit-for-bit, with a dead leaf."""
+    srvs = [ShardedAsyncServer(_params(), fl, num_leaves=8, leaf_buffer=1,
+                               mask_mode=mode, two_level=True,
+                               staleness_mode="constant")
+            for fl in (FL, FLC)]
+    ds = _deltas(8)
+    keep = [0, 2, 3, 5, 7]  # leaves 1, 4, 6 are whole-leaf dropouts
+    frng = jax.random.PRNGKey(5)
+    for srv in srvs:
+        for s in keep:
+            if mode == "client":
+                srv.push_encoded(
+                    srv.encode_push(ds[s], srv.version, slot=s))
+            else:
+                srv.push(ds[s], srv.version, slots=[s])
+        srv.flush(rng=frng)
+    assert _diff(srvs[0].params, srvs[1].params) == 0.0
+
+
+# --- slow-lane subprocess: force the 8-device mesh from a 1-device suite -----
+@pytest.mark.slow
+def test_multidev_chunked_parity_under_forced_host_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__), "-k",
+         "(multidev or sharded or mesh) and not forced"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1800)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no tests ran" not in r.stdout
+    assert "passed" in r.stdout, r.stdout
+    assert np.all([w not in r.stdout for w in ("failed", "error")]), r.stdout
