@@ -141,7 +141,8 @@ def _one_masked_round(srv, deltas):
 
 
 def _measure_masked_point(B: int, D: int, degrees, rounds: int,
-                          params=None, chunk_elems: int = 0):
+                          params=None, chunk_elems: int = 0,
+                          sa_bits: int = 32):
     """All mask modes/graphs at one (B, D), rounds interleaved round-robin.
 
     ``params`` swaps the default flat {"w": (D,)} model for an arbitrary
@@ -194,7 +195,8 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int,
                      "complete" if eff == 0 else f"ring-{eff}")
             if (mode, graph) in configs:
                 continue  # degree collapsed to an already-measured graph
-            fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32,
+            fl = FLConfig(clip_norm=1.0, server_lr=1.0,
+                          secure_agg_bits=sa_bits,
                           secure_agg_degree=degree,
                           param_chunk_elems=chunk_elems)
             srv = AsyncServer(params, fl, buffer_size=B, mask_mode=mode,
@@ -206,6 +208,21 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int,
             configs.append((mode, graph))
             servers.append(srv)
 
+    # Measured upload size per contributor: "client" ships the bit-packed
+    # field residues (MaskSession.reduce), everything else ships the raw
+    # f32 delta and encodes server-side.  Counted from the actual arrays'
+    # nbytes, never from a bits/8 formula.
+    raw_bytes = int(sum(np.asarray(l).nbytes
+                        for l in jax.tree.leaves(deltas[0])))
+    wire_bytes = []
+    for (mode, _), srv in zip(configs, servers):
+        if mode == "client":
+            cp = srv.encode_push(deltas[0], srv.version, slot=0)
+            rows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+            wire_bytes.append(int(sum(np.asarray(r).nbytes for r in rows)))
+        else:
+            wire_bytes.append(raw_bytes)
+
     samples = [[] for _ in servers]
     for _ in range(rounds):
         for i, srv in enumerate(servers):
@@ -213,8 +230,9 @@ def _measure_masked_point(B: int, D: int, degrees, rounds: int,
 
     out = []
     med = lambda v: float(np.median(v)) * 1e3
-    for (mode, graph), rows in zip(configs, samples):
+    for (mode, graph), rows, wire in zip(configs, samples, wire_bytes):
         out.append((mode, graph, {
+            "wire_bytes_per_contributor": wire,
             "client_ms": med([max(c) if c else 0.0 for c, _, _ in rows]),
             "arrival_ms": med([float(np.median(a)) for _, a, _ in rows]),
             "flush_ms": med([f for _, _, f in rows]),
@@ -238,7 +256,8 @@ def _registry_params(arch: str):
 def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
                      rounds: int = 12, transformer_dim: int = 1_048_576,
                      roofline: bool = True, models=(),
-                     chunk_elems: int = 262_144) -> None:
+                     chunk_elems: int = 262_144,
+                     bits_list=(32, 16)) -> None:
     """Per-buffer-round cost of in-path masking vs the PR 1 unmasked engine.
 
     Sweeps mask modes x mask-graph degrees over (dim, buffer) points plus
@@ -253,6 +272,12 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
     params are pushed as a pytree through a multi-chunk ParamPlan
     (``chunk_elems`` per chunk, per-layer sessions) and land in the CSV
     with ``model=<arch>``; synthetic flat points carry ``model=flat``.
+
+    ``bits_list`` sweeps ``secure_agg_bits``: every row also records the
+    MEASURED ``wire_bytes_per_contributor`` (actual nbytes of what a
+    contributor uploads — the bit-packed residue words in "client" mode,
+    the raw f32 delta otherwise), so sub-32-bit fields show their real
+    network win next to their compute cost.
     """
     points = [(B, D, rounds) for D in dims for B in buffer_sizes]
     if transformer_dim:
@@ -260,17 +285,20 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
                        max(2, rounds // 4)))
 
     results = []
-    for B, D, n_rounds in points:
-        base = None
-        for mode, graph, r in _measure_masked_point(B, D, degrees, n_rounds):
-            if mode == "off":
-                base = r
-            r["overhead_vs_off"] = r["critical_ms"] / base["critical_ms"]
-            results.append(("flat", mode, graph, B, D, r))
-            emit(f"async/masked_{mode}_{graph}_critical_ms",
-                 r["critical_ms"],
-                 f"B={B};D={D};x{r['overhead_vs_off']:.2f};"
-                 f"total={r['total_ms']:.1f}ms")
+    for sa_bits in bits_list:
+        for B, D, n_rounds in points:
+            base = None
+            for mode, graph, r in _measure_masked_point(
+                    B, D, degrees, n_rounds, sa_bits=sa_bits):
+                if mode == "off":
+                    base = r
+                r["overhead_vs_off"] = r["critical_ms"] / base["critical_ms"]
+                results.append(("flat", mode, graph, B, D, sa_bits, r))
+                emit(f"async/masked_{mode}_{graph}_b{sa_bits}_critical_ms",
+                     r["critical_ms"],
+                     f"B={B};D={D};x{r['overhead_vs_off']:.2f};"
+                     f"wire_B={r['wire_bytes_per_contributor']};"
+                     f"total={r['total_ms']:.1f}ms")
 
     for arch in models:
         params, total = _registry_params(arch)
@@ -278,11 +306,12 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
         base = None
         for mode, graph, r in _measure_masked_point(
                 B, total, degrees, max(2, rounds // 4),
-                params=params, chunk_elems=chunk_elems):
+                params=params, chunk_elems=chunk_elems,
+                sa_bits=bits_list[0]):
             if mode == "off":
                 base = r
             r["overhead_vs_off"] = r["critical_ms"] / base["critical_ms"]
-            results.append((arch, mode, graph, B, total, r))
+            results.append((arch, mode, graph, B, total, bits_list[0], r))
             emit(f"async/masked_{arch}_{mode}_{graph}_critical_ms",
                  r["critical_ms"],
                  f"B={B};D={total};chunk={chunk_elems};"
@@ -292,13 +321,16 @@ def _masked_overhead(dims=(65_536,), buffer_sizes=(8,), degrees=(0, 4),
     with open(MASKED_CSV, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["model", "mask_mode", "graph", "buffer_size", "dim",
-                    "client_ms", "arrival_ms", "flush_ms", "critical_ms",
-                    "total_ms", "overhead_vs_off"])
-        for model, mode, graph, B, D, r in results:
-            w.writerow([model, mode, graph, B, D, f"{r['client_ms']:.3f}",
+                    "sa_bits", "client_ms", "arrival_ms", "flush_ms",
+                    "critical_ms", "total_ms", "overhead_vs_off",
+                    "wire_bytes_per_contributor"])
+        for model, mode, graph, B, D, sa_bits, r in results:
+            w.writerow([model, mode, graph, B, D, sa_bits,
+                        f"{r['client_ms']:.3f}",
                         f"{r['arrival_ms']:.3f}", f"{r['flush_ms']:.3f}",
                         f"{r['critical_ms']:.3f}", f"{r['total_ms']:.3f}",
-                        f"{r['overhead_vs_off']:.3f}x"])
+                        f"{r['overhead_vs_off']:.3f}x",
+                        r["wire_bytes_per_contributor"]])
     emit("async/masked_overhead_csv", 0.0, MASKED_CSV)
 
     if roofline:
@@ -339,6 +371,10 @@ def run(argv=None) -> None:
                         "(repeatable, e.g. --model qwen2-1.5b)")
     p.add_argument("--chunk-elems", type=int, default=262_144,
                    help="ParamPlan chunk budget for --model rows")
+    p.add_argument("--bits", type=int, action="append", default=None,
+                   help="secure_agg_bits value(s) to sweep — sub-32-bit "
+                        "fields shrink the client wire via residue packing "
+                        "(default 32 and 16)")
     p.add_argument("--masked-only", action="store_true",
                    help="skip the fleet/bytes-model benches (CI smoke)")
     p.add_argument("--no-roofline", action="store_true")
@@ -355,7 +391,8 @@ def run(argv=None) -> None:
                      transformer_dim=args.transformer_dim,
                      roofline=not args.no_roofline,
                      models=tuple(args.model or ()),
-                     chunk_elems=args.chunk_elems)
+                     chunk_elems=args.chunk_elems,
+                     bits_list=tuple(args.bits or (32, 16)))
 
 
 if __name__ == "__main__":

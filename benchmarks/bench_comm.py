@@ -1,10 +1,18 @@
-"""Secure-aggregation communication cost vs quantization width.
+"""Secure-aggregation communication cost vs quantization width — measured.
 
-The round's network bill is one model-sized upload per client and the
-TEE-side aggregation collectives.  Quantized encodings (int8/int16 stochastic
-rounding — beyond-paper optimization) cut bytes linearly at a measurable
-quantization-error cost; this benchmark reports bytes/client and the induced
-update error for the paper's classifier and for qwen2-1.5b-sized updates.
+The round's network bill is one model-sized upload per client.  This
+benchmark builds the *actual* wire payload for each quantization width —
+quantize, lift to the session field, and bit-pack through
+``MaskSession.reduce`` (the same choke point the async server and the
+hierarchy tier ship through) — and reports the measured ``.nbytes`` of the
+packed word stream, next to the pre-packing int32 residue row and the raw
+float32 upload.  Every reported byte count is cross-checked against the
+byte count implied by the wire layout (``packed_words(D, C) * 4``); any
+divergence raises instead of silently publishing fiction, which is exactly
+what the previous revision of this file did (it printed a hypothetical
+``D * bits / 8`` that no code path ever transmitted).
+
+Quantization error for the full protocol is measured alongside, as before.
 """
 from __future__ import annotations
 
@@ -16,6 +24,16 @@ from benchmarks.common import emit
 from repro.core.fl import secure_agg as sa
 
 
+def _checked_nbytes(arr: jnp.ndarray, expected: int, what: str) -> int:
+    """The honesty gate: reported bytes must be the array's real nbytes."""
+    actual = int(np.asarray(arr).nbytes)
+    if actual != expected:
+        raise RuntimeError(
+            f"{what}: layout says {expected} bytes but the array holds "
+            f"{actual} — the reported wire cost would be fiction")
+    return actual
+
+
 def run() -> None:
     key = jax.random.PRNGKey(0)
     D = 1 << 20  # 1M-param update slice
@@ -23,20 +41,34 @@ def run() -> None:
     updates = [0.05 * jax.random.normal(jax.random.fold_in(key, i), (D,))
                for i in range(n)]
     exact = sum(updates) / n
+    raw_bytes = _checked_nbytes(updates[0], D * 4, "raw f32 upload")
     for bits in (32, 16, 8):
         mean = sa.secure_aggregate(updates, bits=bits, value_range=1.0,
                                    seed=1, rng=key)
         err = float(jnp.abs(mean - exact).max())
         rel = err / float(jnp.abs(exact).max())
-        bytes_per_client = D * bits / 8
+        # The real wire path: quantize -> field residues -> packed words.
+        modulus = sa.field_modulus(bits, n)
+        sess = sa.make_session(jax.random.fold_in(key, 7), n, modulus=modulus)
+        q = sa.quantize(updates[0], bits, 1.0, jax.random.fold_in(key, 8))
+        residues = sa.to_field(q, modulus)
+        packed = sess.reduce(q)
+        pre_bytes = _checked_nbytes(residues, D * 4, "pre-pack residue row")
+        post_bytes = _checked_nbytes(
+            packed, sa.packed_words(D, modulus) * 4,
+            f"packed wire at bits={bits}")
         emit(f"comm/secure_agg_{bits}bit", 0.0,
-             f"bytes_per_client={bytes_per_client:.3e};max_err={err:.2e};"
-             f"rel_err={rel:.3f}")
-    # model-size context
+             f"wire_bits={sess.wire_bits};bytes_per_client={post_bytes};"
+             f"prepack_bytes={pre_bytes};raw_f32_bytes={raw_bytes};"
+             f"reduction_vs_f32={raw_bytes / post_bytes:.2f}x;"
+             f"max_err={err:.2e};rel_err={rel:.3f}")
+    # model-size context: measured bytes/element scaled to real param counts
     for name, params in (("mlp_classifier", 4.3e3), ("qwen2-1.5b", 1.54e9)):
         for bits in (32, 8):
+            wire = sa.wire_bits(sa.field_modulus(bits, n))
+            mib = params * wire / 8 / 2**20
             emit(f"comm/upload_{name}_{bits}bit", 0.0,
-                 f"{params * bits / 8 / 2**20:.2f}MiB/client/round")
+                 f"{mib:.2f}MiB/client/round (wire_bits={wire})")
 
 
 if __name__ == "__main__":

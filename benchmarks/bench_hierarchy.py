@@ -36,6 +36,11 @@ with a SIMULATED MILLION-CLIENT ARRIVAL STREAM, and measures per
 Configurations are interleaved round-robin (every configuration sees the
 same machine conditions, so the RATIOS are stable on a noisy host).
 
+Every row also records the MEASURED ``wire_bytes_per_contributor``: the
+actual nbytes a contributor uploads — the bit-packed field-residue words
+of ``encode_push`` in "client" mode (sub-32-bit ``--bits`` shrink them),
+the raw f32 delta otherwise.
+
 The sweep defaults to ``--degree 4`` (a SecAgg+-style sparse session
 graph): complete-graph pairwise masking is O(B^2) PRF streams per session,
 so it cannot scale with session size by construction — Bell et al.'s
@@ -145,13 +150,28 @@ def _dead_leaf_session(srv, payloads, mode):
     return time.perf_counter() - t0
 
 
+def _wire_bytes_per_contributor(srv, mode: str, D: int) -> int:
+    """MEASURED upload size of one contributor, from actual array nbytes.
+
+    "client" mode ships the bit-packed field residues built by
+    ``encode_push`` (sub-32-bit session fields shrink the words stream);
+    every other mode ships the raw f32 delta and encodes tier-side.
+    """
+    probe = {"w": 0.1 * jnp.ones((1, D), jnp.float32)}
+    if mode == "client":
+        cp = srv.encode_push(probe, srv.version, slot=[0])[0]
+        rows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+        return int(sum(np.asarray(r).nbytes for r in rows))
+    return int(np.asarray(jax.tree.leaves(probe)[0]).nbytes)
+
+
 def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
                   population: int):
-    """All (mode, topology, leaves, leaf_buffer) points at one dim."""
-    fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=32,
-                  secure_agg_degree=degree)
-    servers, streams = [], []
-    for mode, topo, L, Bl in configs:
+    """All (mode, topology, leaves, leaf_buffer, sa_bits) points at one dim."""
+    servers, streams, wires = [], [], []
+    for mode, topo, L, Bl, sa_bits in configs:
+        fl = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=sa_bits,
+                      secure_agg_degree=degree)
         srv = ShardedAsyncServer({"w": jnp.zeros((D,), jnp.float32)}, fl,
                                  num_leaves=L, leaf_buffer=Bl,
                                  mask_mode=mode, staleness_mode="constant",
@@ -162,6 +182,7 @@ def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
         stream = _arrival_batches(population, 2 * (rounds + 1) * per_round,
                                   batch, D, seed=L)
         servers.append(srv)
+        wires.append(_wire_bytes_per_contributor(srv, mode, D))
         streams.append(lambda s=stream, n=per_round:
                        [{"w": next(s)} for _ in range(n)])
         _one_session(srv, streams[-1](), mode)  # compile the steady round
@@ -171,7 +192,7 @@ def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
     samples = [[] for _ in configs]
     dead = [[] for _ in configs]
     for _ in range(rounds):  # interleaved: drift hits all configs equally
-        for i, ((mode, topo, L, Bl), srv) in enumerate(
+        for i, ((mode, topo, L, Bl, sa_bits), srv) in enumerate(
                 zip(configs, servers)):
             samples[i].append(_one_session(srv, streams[i](), mode))
             if L > 1:
@@ -180,16 +201,18 @@ def _measure_grid(configs, D: int, degree: int, rounds: int, batch: int,
 
     out = []
     med = lambda v: float(np.median(v)) * 1e3
-    for (mode, topo, L, Bl), rows, drows in zip(configs, samples, dead):
+    for (mode, topo, L, Bl, sa_bits), rows, drows, wire in zip(
+            configs, samples, dead, wires):
         B = L * Bl
         flush_ms = med([f for _, _, f in rows])
-        out.append((mode, topo, L, Bl, {
+        out.append((mode, topo, L, Bl, sa_bits, {
             "encode_ms": med([e for e, _, _ in rows]),
             "ingest_ms": med([float(np.median(a)) if a else 0.0
                               for _, a, _ in rows]),
             "flush_ms": flush_ms,
             "dead_leaf_flush_ms": med(drows) if drows else 0.0,
             "updates_per_s": B / (flush_ms / 1e3),
+            "wire_bytes_per_contributor": wire,
         }))
     return out
 
@@ -218,6 +241,11 @@ def run(argv=None) -> None:
                    help="arrival batch size (default: one leaf buffer)")
     p.add_argument("--rounds", type=int, default=8,
                    help="measured sessions per configuration")
+    p.add_argument("--bits", type=int, action="append", default=None,
+                   help="secure_agg_bits value(s); values past the first "
+                        "re-run only mask_mode=client (the sole mode whose "
+                        "wire changes: packed sub-32-bit residues). "
+                        "Default 32 and 16")
     p.add_argument("--population", type=int, default=1_000_000,
                    help="simulated fleet size the arrival stream draws from")
     args = p.parse_args(argv)
@@ -228,25 +256,31 @@ def run(argv=None) -> None:
     modes = args.mode or ["client", "tee_stream"]
     topos = args.topology or ["flat", "tree"]
     batch = args.batch or args.leaf_buffer
+    bits_list = args.bits or [32, 16]
     base_leaves = min(leaves)  # the scaling baseline is the SMALLEST sweep
     rows = []                  # point (1 leaf in the default sweep)
     for Dd in dims:
-        grid = [(mode, topo, L, args.leaf_buffer)
+        grid = [(mode, topo, L, args.leaf_buffer, sa_bits)
+                for sa_bits in bits_list
                 for mode in modes for topo in topos for L in leaves
                 # flat = one leaf per device; tree multiplexes freely
-                if topo == "tree" or L <= n_dev]
+                if (topo == "tree" or L <= n_dev)
+                # extra bits values only change the "client" wire
+                and (sa_bits == bits_list[0] or mode == "client")]
         measured = _measure_grid(grid, Dd, args.degree, args.rounds, batch,
                                  args.population)
-        base = {(mode, topo): r["updates_per_s"]
-                for mode, topo, L, _, r in measured if L == base_leaves}
-        for mode, topo, L, Bl, r in measured:
+        base = {(mode, topo, sa_bits): r["updates_per_s"]
+                for mode, topo, L, _, sa_bits, r in measured
+                if L == base_leaves}
+        for mode, topo, L, Bl, sa_bits, r in measured:
             r["scaling_vs_base"] = (r["updates_per_s"]
-                                    / base[(mode, topo)])
-            rows.append((mode, topo, L, Bl, Dd, batch, r))
-            emit(f"hierarchy/{mode}_{topo}_L{L}_updates_per_s",
+                                    / base[(mode, topo, sa_bits)])
+            rows.append((mode, topo, L, Bl, Dd, batch, sa_bits, r))
+            emit(f"hierarchy/{mode}_{topo}_L{L}_b{sa_bits}_updates_per_s",
                  r["updates_per_s"],
                  f"D={Dd};flush={r['flush_ms']:.1f}ms;"
                  f"dead_leaf={r['dead_leaf_flush_ms']:.1f}ms;"
+                 f"wire_B={r['wire_bytes_per_contributor']};"
                  f"x{r['scaling_vs_base']:.2f} vs {base_leaves} "
                  f"leaf/leaves")
 
@@ -255,16 +289,18 @@ def run(argv=None) -> None:
         w = csv.writer(f)
         w.writerow(["mask_mode", "topology", "graph_degree", "num_leaves",
                     "leaf_buffer", "session_slots", "dim", "arrival_batch",
-                    "encode_ms", "ingest_ms", "flush_ms",
+                    "sa_bits", "encode_ms", "ingest_ms", "flush_ms",
                     "dead_leaf_flush_ms", "updates_per_s", "base_leaves",
-                    "scaling_vs_base"])
-        for mode, topo, L, Bl, Dd, bt, r in rows:
+                    "scaling_vs_base", "wire_bytes_per_contributor"])
+        for mode, topo, L, Bl, Dd, bt, sa_bits, r in rows:
             w.writerow([mode, topo, args.degree, L, Bl, L * Bl, Dd, bt,
+                        sa_bits,
                         f"{r['encode_ms']:.3f}", f"{r['ingest_ms']:.3f}",
                         f"{r['flush_ms']:.3f}",
                         f"{r['dead_leaf_flush_ms']:.3f}",
                         f"{r['updates_per_s']:.1f}", base_leaves,
-                        f"{r['scaling_vs_base']:.3f}x"])
+                        f"{r['scaling_vs_base']:.3f}x",
+                        r["wire_bytes_per_contributor"]])
     emit("hierarchy/results_csv", 0.0, RESULTS_CSV)
 
 

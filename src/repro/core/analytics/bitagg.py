@@ -84,8 +84,8 @@ def percentile_from_cdf(cdf: jnp.ndarray, thresholds: jnp.ndarray,
     return t0 + jnp.clip(w, 0.0, 1.0) * (t1 - t0)
 
 
-def estimate_variance(values_shape_hint: None = None, *, mean_bits=None,
-                      sq_bits=None, lo: float = 0.0, hi: float = 1.0,
+def estimate_variance(*, mean_bits: jnp.ndarray, sq_bits: jnp.ndarray,
+                      lo: float = 0.0, hi: float = 1.0,
                       flip_prob: float = 0.0) -> jnp.ndarray:
     """Var from two bit queries: E[x] and E[x^2] (x^2 in [lo^2-ish, hi^2])."""
     m = estimate_mean(mean_bits, lo, hi, flip_prob)

@@ -955,6 +955,14 @@ def finalize_plan_aggregate(accs: Sequence[jnp.ndarray], total_weight,
     for ck, acc in zip(plan.chunks, accs):
         a = acc[:ck.size]
         if spec.use_secure_agg:
+            # the accumulator is a mod-2^32 representative of the mod-C sum
+            # (C = spec.field_modulus): raw masked rows sum to the signed
+            # value directly, but rows that travelled the PACKED wire enter
+            # as canonical [0, C) residues, so the sum must be re-centered
+            # into the wraparound window before leaving the field.  For raw
+            # rows the re-center is the identity on the value (|sum| < C/2
+            # by field sizing), so both ingest formats decode bit-equal.
+            a = sa.recenter(a, spec.field_modulus)
             a = a.astype(jnp.float32) / spec.sa_scale
         flats.append(a / w)
     mean = plan.unchunk(flats)

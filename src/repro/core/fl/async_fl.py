@@ -201,13 +201,17 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
 
 class ClientPush(NamedTuple):
     """A client-side encoded push: what actually travels to the server in
-    mask_mode="client" — the masked int32 row plus the scalar metadata that
-    rides the same channel.  ``version``/``slot`` pin the pairwise session
-    and position the encoding was produced for."""
+    mask_mode="client" — the masked row in WIRE FORMAT plus the scalar
+    metadata that rides the same channel.  ``version``/``slot`` pin the
+    pairwise session and position the encoding was produced for."""
 
-    # masked fixed-point encoding: a (D,) int32 array under the single-chunk
-    # plan, a tuple of per-chunk (padded_c,) int32 arrays under a multi-chunk
-    # ParamPlan (one mask session per chunk, same slot)
+    # masked fixed-point encoding, bit-packed: the session's canonical
+    # field residues ride as a dense uint32 word stream
+    # (``secure_agg.pack_residues`` — ``ceil(log2(modulus))`` bits per
+    # element, so a sub-32-bit field ships fewer bytes than the int32
+    # row).  A (W,) uint32 array under the single-chunk plan, a tuple of
+    # per-chunk word streams under a multi-chunk ParamPlan (one mask
+    # session per chunk, same slot; every chunk shares the engine field).
     row: Any
     weight: jnp.ndarray  # staleness weight the client applied pre-encode
     norm: jnp.ndarray  # pre-clip L2 norm (client-side metric)
@@ -215,6 +219,9 @@ class ClientPush(NamedTuple):
     staleness: float
     version: int  # session id (server version at encode time)
     slot: int  # session position the mask was generated for
+    # the field the residues were reduced into — the server rejects a push
+    # whose wire width does not match its session field
+    modulus: int = 1 << 32
 
 
 class AsyncServer:
@@ -300,6 +307,7 @@ class AsyncServer:
         self._valid = jnp.zeros((buffer_size,), jnp.float32)
 
         spec = agg.make_spec(fl_cfg, buffer_size)
+        self._spec = spec
         if mask_mode == "off":
             # the baseline engine streams its encode too (when it has an
             # integer field to stream into) — flush becomes near-free
@@ -372,8 +380,28 @@ class AsyncServer:
                         norms.at[slot].set(nrm),
                         clips.at[slot].set(clipped))
 
+            @jax.jit
+            def _wire_pack(rows, session_key):
+                """CLIENT-side jit: rows -> wire format.  Each chunk's
+                session ``reduce``s its row — canonical field residues,
+                bit-packed into the dense uint32 stream the ClientPush
+                actually ships (``session.modulus`` decides the width)."""
+                sessions = agg.plan_sessions(spec, plan, session_key)
+                return tuple(sess.reduce(r)
+                             for sess, r in zip(sessions, rows))
+
+            @jax.jit
+            def _wire_unpack(wrows):
+                """SERVER-side jit: packed wire words back to the int32
+                residue rows the modular-sum buffer stores."""
+                return tuple(
+                    sa.unpack_residues(wr, ck.padded, spec.field_modulus)
+                    for wr, ck in zip(wrows, plan.chunks))
+
             self._masked_encode = _masked_encode
             self._write_row = _write_row
+            self._wire_pack = _wire_pack
+            self._wire_unpack = _wire_unpack
         else:
             self._bufs = tuple(
                 jnp.zeros((buffer_size, ck.padded), jnp.float32)
@@ -442,6 +470,17 @@ class AsyncServer:
             if slot is None:
                 free = [i for i, p in enumerate(self._present) if not p]
                 slots = free[:k]
+            elif jnp.ndim(slot) == 0:
+                # a scalar slot with a stacked batch broadcasts to the K
+                # consecutive slots starting there
+                s0 = int(slot)
+                if s0 < 0 or s0 + k > self.buffer_size:
+                    raise ValueError(
+                        f"scalar slot={s0} with a stacked batch of {k} "
+                        f"rows names session slots {s0}..{s0 + k - 1}, "
+                        f"outside the session's {self.buffer_size} slots; "
+                        f"pass an explicit slot sequence or start lower")
+                slots = list(range(s0, s0 + k))
             else:
                 slots = [int(s) for s in slot]
             if len(slots) < k:
@@ -458,9 +497,11 @@ class AsyncServer:
             slot = self._present.index(False)  # lowest unfilled slot
         rows, w, nrm, clipped = self._encode_for_slot(delta, staleness, slot,
                                                       rng)
+        # wire format: the packed residue stream is what travels
+        rows = self._wire_pack(rows, self._session_key())
         row = rows[0] if len(rows) == 1 else rows
         return ClientPush(row, w, nrm, clipped, staleness, self.version,
-                          slot)
+                          slot, self._spec.field_modulus)
 
     def _encode_for_slot(self, delta, staleness, slot: int, rng=None):
         """One masked encode bound to (current session, ``slot``)."""
@@ -495,7 +536,17 @@ class AsyncServer:
                 f"server at session {self.version}, slot filled="
                 f"{self._present[cp.slot] if 0 <= cp.slot < self.buffer_size else 'n/a'}): "
                 "the pairwise mask no longer matches an open session position")
-        self._store_row(cp.slot, cp.row, cp.staleness, cp.weight, cp.norm,
+        if cp.modulus != self._spec.field_modulus:
+            raise ValueError(
+                f"ClientPush packed for field modulus {cp.modulus} "
+                f"({sa.wire_bits(cp.modulus)}-bit wire) but the server's "
+                f"session field is {self._spec.field_modulus} "
+                f"({sa.wire_bits(self._spec.field_modulus)}-bit): the "
+                "residue stream cannot be unpacked — client and server must "
+                "agree on secure_agg_bits and the session size")
+        wrows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+        rows = self._wire_unpack(wrows)  # back to int32 residue rows
+        self._store_row(cp.slot, rows, cp.staleness, cp.weight, cp.norm,
                         cp.clipped, rng)
 
     def _store_row(self, slot: int, row, staleness, w, nrm, clipped,

@@ -777,32 +777,77 @@ class ShardedAsyncServer:
             def _encode_batch(deltas, slots, stals, session_key, push_key):
                 """The CLIENT-side vmapped encode (mask_mode='client'):
                 produces the rows ``encode_push`` hands back to the
-                caller.  Runs the exact ``encode_row`` pipeline of the
-                sharded server ingest, so client-encoded and
-                server-encoded rows are bit-identical."""
+                caller, in WIRE FORMAT.  Runs the exact ``encode_row``
+                pipeline of the sharded server ingest (so client-encoded
+                and server-encoded rows are bit-identical), then each
+                chunk's session ``reduce``s its rows — canonical field
+                residues bit-packed into the dense uint32 stream.  Every
+                session of the tree shares the ENGINE field, so one
+                session per chunk decides the width for the whole batch."""
 
                 def one(delta, slot, s):
                     chunks_d = plan.chunk_arrays(delta, pad=True)
                     return encode_row(chunks_d, slot, s, session_key,
                                       push_key)
 
-                return jax.vmap(one)(deltas, slots, stals)
+                rows, w, nrm, clipped = jax.vmap(one)(deltas, slots, stals)
+                wire_sessions, _ = row_sessions(session_key, 0)
+                rows = tuple(sess.reduce(r)
+                             for sess, r in zip(wire_sessions, rows))
+                return rows, w, nrm, clipped
 
             @jax.jit
-            def _scatter_rows(bufs, wts, norms, clips, stal, leaf, local,
-                              rows, w, nrm, clipped, s):
-                """Land a (K,) batch of ALREADY-ENCODED per-chunk rows
-                (client pushes) on their leaves: ONE jitted scatter, no
-                row math."""
-                return (tuple(b.at[leaf, local].set(r)
-                              for b, r in zip(bufs, rows)),
-                        wts.at[leaf, local].set(w),
-                        norms.at[leaf, local].set(nrm),
-                        clips.at[leaf, local].set(clipped),
-                        stal.at[leaf, local].set(s))
+            def _scatter_packed(bufs, wts, norms, clips, stal, wrows, idx,
+                                lslot, valid, stals, w, nrm, clipped):
+                """Destination-sharded landing of client-packed wire rows.
+
+                The PACKED uint32 word streams are what travels: they are
+                routed to their destination leaves by the same host-built
+                (L, kb) tables as the raw ingest — a memory move of the
+                narrow wire payload, never the widened rows — and expanded
+                back to int32 field residues INSIDE the shard_map, each
+                leaf unpacking only its own arrivals.  Padding rows unpack
+                to garbage nobody reads (their writes target local slot
+                Bl, out of range -> scatter-drop)."""
+                kb = idx.shape[1]
+                flat = idx.reshape(-1)
+                routed = tuple(
+                    jnp.take(wr, flat, axis=0).reshape(L, kb, -1)
+                    for wr in wrows)
+                wv = jnp.take(w, flat).reshape(L, kb)
+                nv = jnp.take(nrm, flat).reshape(L, kb)
+                cv = jnp.take(clipped, flat).reshape(L, kb)
+
+                def dev_fn(buf_b, wts_b, norms_b, clips_b, stal_b,
+                           routed_b, lslot_b, valid_b, stals_b, w_b, n_b,
+                           c_b):
+                    def one_leaf(buf_l, wts_l, norms_l, clips_l, stal_l,
+                                 wr_l, sl, vld, st, wl, nl, cl):
+                        rows = tuple(
+                            sa.unpack_residues(r, ck.padded,
+                                               spec.field_modulus)
+                            for r, ck in zip(wr_l, plan.chunks))
+                        tgt = jnp.where(vld > 0, sl, Bl)  # Bl -> dropped
+                        return (tuple(b.at[tgt].set(r, mode="drop")
+                                      for b, r in zip(buf_l, rows)),
+                                wts_l.at[tgt].set(wl, mode="drop"),
+                                norms_l.at[tgt].set(nl, mode="drop"),
+                                clips_l.at[tgt].set(cl, mode="drop"),
+                                stal_l.at[tgt].set(st, mode="drop"))
+
+                    return jax.vmap(one_leaf)(
+                        buf_b, wts_b, norms_b, clips_b, stal_b, routed_b,
+                        lslot_b, valid_b, stals_b, w_b, n_b, c_b)
+
+                return shard_map(
+                    dev_fn, mesh=self.mesh,
+                    in_specs=(P(LEAF_AXIS),) * 12,
+                    out_specs=(P(LEAF_AXIS),) * 5, check_rep=False,
+                )(bufs, wts, norms, clips, stal, routed, lslot, valid,
+                  stals, wv, nv, cv)
 
             self._encode_batch = _encode_batch
-            self._scatter_rows = _scatter_rows
+            self._scatter_packed = _scatter_packed
         else:  # "tee": raw rows, the batched in-enclave mask lane at flush
             self._bufs = tuple(
                 jax.device_put(jnp.zeros((L, Bl, ck.padded), jnp.float32),
@@ -956,9 +1001,23 @@ class ShardedAsyncServer:
         """
         k = batch_count(delta, self.params)
         if k is not None:
-            return self._encode_push_impl(
-                delta, client_version,
-                slots=None if slot is None else list(slot))
+            if slot is None:
+                slots = None
+            elif jnp.ndim(slot) == 0:
+                # a scalar slot with a stacked batch broadcasts to the K
+                # consecutive global slots starting there
+                s0 = int(slot)
+                if s0 < 0 or s0 + k > self.buffer_size:
+                    raise ValueError(
+                        f"scalar slot={s0} with a stacked batch of {k} "
+                        f"rows names session slots {s0}..{s0 + k - 1}, "
+                        f"outside the session's {self.buffer_size} slots; "
+                        f"pass an explicit slot sequence or start lower")
+                slots = list(range(s0, s0 + k))
+            else:
+                slots = list(slot)
+            return self._encode_push_impl(delta, client_version,
+                                          slots=slots)
         cps = self._encode_push_impl(
             jax.tree.map(lambda x: x[None], delta), client_version,
             slots=None if slot is None else [slot])
@@ -1011,12 +1070,13 @@ class ShardedAsyncServer:
             deltas, jnp.asarray(slots, jnp.int32), jnp.asarray(stals),
             self._session_key(),
             jax.random.fold_in(self._push_base, self.version))
-        # single-chunk pushes carry the bare (D,) row (the legacy wire
-        # shape); multi-chunk pushes carry the per-chunk tuple
+        # single-chunk pushes carry the bare packed (W,) word stream (the
+        # legacy wire shape); multi-chunk pushes carry the per-chunk tuple
         row_of = ((lambda i: rows[0][i]) if len(rows) == 1
                   else (lambda i: tuple(r[i] for r in rows)))
         return [ClientPush(row_of(i), w[i], nrm[i], clipped[i],
-                           float(stals[i]), self.version, int(s))
+                           float(stals[i]), self.version, int(s),
+                           self._spec.field_modulus)
                 for i, s in enumerate(slots)]
 
     def _push_encoded_impl(self, cps: Sequence[ClientPush],
@@ -1033,20 +1093,28 @@ class ShardedAsyncServer:
                     f"stale ClientPush (session {cp.version} slot {cp.slot}; "
                     f"server at session {self.version}): the pairwise mask "
                     "no longer matches an open session position")
+            if cp.modulus != self._spec.field_modulus:
+                raise ValueError(
+                    f"ClientPush packed for field modulus {cp.modulus} "
+                    f"({sa.wire_bits(cp.modulus)}-bit wire) but the tier's "
+                    f"session field is {self._spec.field_modulus} "
+                    f"({sa.wire_bits(self._spec.field_modulus)}-bit): the "
+                    "residue stream cannot be unpacked — client and tier "
+                    "must agree on secure_agg_bits and the session size")
         self._check_slots(slots)
-        leaf, local = self._leaf_local(slots)
+        stals = np.asarray([cp.staleness for cp in cps], np.float32)
+        idx, lsl, valid, st = self._route_by_leaf(slots, stals)
         crows = [cp.row if isinstance(cp.row, tuple) else (cp.row,)
                  for cp in cps]
-        rows = tuple(jnp.stack([cr[c] for cr in crows])
-                     for c in range(self._plan.num_chunks))
+        wrows = tuple(jnp.stack([cr[c] for cr in crows])
+                      for c in range(self._plan.num_chunks))
         (self._bufs, self._wts, self._norms, self._clips,
-         self._stal) = self._scatter_rows(
+         self._stal) = self._scatter_packed(
             self._bufs, self._wts, self._norms, self._clips, self._stal,
-            leaf, local, rows,
+            wrows, idx, lsl, valid, st,
             jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
             jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
-            jnp.stack([jnp.asarray(cp.clipped) for cp in cps]),
-            jnp.asarray([cp.staleness for cp in cps], jnp.float32))
+            jnp.stack([jnp.asarray(cp.clipped) for cp in cps]))
         self._mark(slots, rng)
 
     def _push_impl(self, deltas, client_version, rng=None,

@@ -115,14 +115,117 @@ def dequantize(q: jnp.ndarray, bits: int, value_range: float,
     mod-C residue.
     """
     levels = jnp.float32(2 ** (bits - 1) - 1)
-    C = field_modulus(bits, count)
-    if C < 1 << 32:
-        half = C // 2
-        # q + half may wrap int32; that wrap is mod 2^32 and C | 2^32, so the
-        # mod-C reduction is unaffected.  & (C-1) == mod C for the power-of-
-        # two field and stays int32-representable up to C == 2^31.
-        q = ((q.astype(jnp.int32) + half) & (C - 1)) - half
+    q = recenter(q, field_modulus(bits, count))
     return q.astype(jnp.float32) * (value_range / levels)
+
+
+def recenter(q: jnp.ndarray, modulus: int) -> jnp.ndarray:
+    """Signed wraparound-window representative of a mod-``modulus`` sum.
+
+    Maps any int32 representative of a mod-C residue into ``[-C/2, C/2)``.
+    For ``modulus == 2^32`` this is the identity (the int32 bit pattern is
+    already the signed representative).  ``q + half`` may wrap int32; that
+    wrap is mod 2^32 and C | 2^32, so the mod-C reduction is unaffected.
+    ``& (C-1)`` == mod C for the power-of-two field and stays
+    int32-representable up to C == 2^31.
+    """
+    if modulus >= 1 << 32:
+        return q.astype(jnp.int32)
+    half = modulus // 2
+    return ((q.astype(jnp.int32) + half) & (modulus - 1)) - half
+
+
+# ---------------------------------------------------------------------------
+# Wire codec — canonical residues bit-packed into a dense uint32 stream
+# ---------------------------------------------------------------------------
+def wire_bits(modulus: int) -> int:
+    """Residue width of the packed wire format: ``ceil(log2(modulus))``.
+
+    The field is a power of two (``field_modulus``), so every canonical
+    residue fits exactly ``log2(modulus)`` bits — e.g. the bits=16, B=8
+    field 2^19 ships 19-bit residues instead of 32-bit words.
+    """
+    if modulus >= 1 << 32:
+        return 32
+    if modulus < 2 or modulus & (modulus - 1):
+        raise ValueError(f"wire width needs a power-of-two field modulus >= 2,"
+                         f" got {modulus}")
+    return (modulus - 1).bit_length()
+
+
+def packed_words(size: int, modulus: int) -> int:
+    """uint32 words in the packed stream of ``size`` residues."""
+    return -(-size * wire_bits(modulus) // 32)
+
+
+def pack_residues(q: jnp.ndarray, modulus: int) -> jnp.ndarray:
+    """Bit-pack canonical field residues into the dense uint32 wire stream.
+
+    ``q`` is an int32 array of residues along its LAST axis (what
+    ``to_field`` produces); the result replaces that axis of ``size``
+    elements with ``ceil(size * wire_bits / 32)`` uint32 words.  Layout is
+    little-endian within the bit stream: element ``e`` occupies bit
+    positions ``[e*w, (e+1)*w)`` of the concatenated stream (``w =
+    wire_bits(modulus)``), and word ``k`` holds stream bits
+    ``[32k, 32k+32)``.  32 consecutive elements therefore fill exactly
+    ``w`` words, which is the static group the vectorized loop (and the
+    Pallas kernel mirroring it) packs at once.  Exact round-trip for every
+    power-of-two modulus <= 2^32, including the 2^31 / 2^32 edges (at the
+    full field the stream is the uint32 reinterpretation of the int32
+    row — same byte count, no-op reduction).
+    """
+    bits = wire_bits(modulus)
+    size = q.shape[-1]
+    nwords = packed_words(size, modulus)
+    mask = jnp.uint32((1 << bits) - 1)
+    v = q.astype(jnp.uint32) & mask
+    groups = -(-size // 32)
+    pad = groups * 32 - size
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    g = v.reshape(v.shape[:-1] + (groups, 32))
+    cols = [jnp.zeros(g.shape[:-1], jnp.uint32) for _ in range(bits)]
+    for j in range(32):  # static: each element lands in <= 2 words
+        w0, shift = divmod(j * bits, 32)
+        cols[w0] = cols[w0] | (g[..., j] << shift)
+        if shift + bits > 32:  # straddles into the next word
+            cols[w0 + 1] = cols[w0 + 1] | (g[..., j] >> (32 - shift))
+    words = jnp.stack(cols, axis=-1).reshape(g.shape[:-2] + (groups * bits,))
+    return words[..., :nwords]
+
+
+def unpack_residues(words: jnp.ndarray, size: int,
+                    modulus: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_residues`: wire words back to int32 residues.
+
+    ``words`` carries ``packed_words(size, modulus)`` uint32 words along
+    its last axis; returns the ``size`` canonical residues as int32 (the
+    ``to_field`` convention), ready to re-enter the mod-2^32 accumulation
+    path — exact because the field divides 2^32.
+    """
+    bits = wire_bits(modulus)
+    nwords = packed_words(size, modulus)
+    if words.shape[-1] != nwords:
+        raise ValueError(
+            f"packed stream of {words.shape[-1]} words does not match "
+            f"{size} residues of a {modulus}-modulus field "
+            f"({bits}-bit wire -> {nwords} words); was this row packed "
+            f"under a different session field?")
+    mask = jnp.uint32((1 << bits) - 1)
+    groups = -(-size // 32)
+    pad = groups * bits - nwords
+    if pad:
+        words = jnp.pad(words, [(0, 0)] * (words.ndim - 1) + [(0, pad)])
+    w = words.reshape(words.shape[:-1] + (groups, bits))
+    elems = []
+    for j in range(32):  # static: each element reads <= 2 words
+        w0, shift = divmod(j * bits, 32)
+        v = w[..., w0] >> shift
+        if shift + bits > 32:
+            v = v | (w[..., w0 + 1] << (32 - shift))
+        elems.append(v & mask)
+    out = jnp.stack(elems, axis=-1).reshape(w.shape[:-2] + (groups * 32,))
+    return out[..., :size].astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -487,9 +590,25 @@ class MaskSession:
         return recovery_mask(shape, present, self.num_slots, self.key,
                              self.degree, self.perm)
 
+    @property
+    def wire_bits(self) -> int:
+        """Residue width of this session's packed wire format."""
+        return wire_bits(self.modulus)
+
     def reduce(self, q: jnp.ndarray) -> jnp.ndarray:
-        """Canonical wire residue of ``q`` in this session's field."""
-        return to_field(q, self.modulus)
+        """``q`` in WIRE FORMAT: canonical field residues, bit-packed.
+
+        The single choke point that decides the wire width — the session's
+        ``modulus`` (the ENGINE field, shared by every leaf session of a
+        tree) fixes the residue width, so a (..., size) int32 row leaves as
+        ``packed_words(size, modulus)`` dense uint32 words.  At the full
+        2^32 field this is the uint32 reinterpretation (no reduction, same
+        bytes)."""
+        return pack_residues(to_field(q, self.modulus), self.modulus)
+
+    def expand(self, words: jnp.ndarray, size: int) -> jnp.ndarray:
+        """Inverse of :meth:`reduce`: wire words back to int32 residues."""
+        return unpack_residues(words, size, self.modulus)
 
 
 jax.tree_util.register_dataclass(

@@ -47,6 +47,39 @@ def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
     return q.astype(jnp.float32) / scale
 
 
+def pack_residues(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(D,) residues -> (ceil(D*bits/32),) uint32 words, bit by bit.
+
+    Deliberately the slow, obvious formulation: for each of the 32 bit
+    lanes of each output word, find which element/bit of the dense
+    little-endian stream lands there and OR it in.  Independent of both
+    the host codec and the kernel (which work a 32-element group at a
+    time), so agreement is three-way evidence of the layout.
+    """
+    (D,) = q.shape
+    nwords = -(-D * bits // 32)
+    v = q.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    out = jnp.zeros((nwords,), jnp.uint32)
+    for b in range(32):
+        pos = 32 * jnp.arange(nwords, dtype=jnp.int32) + b  # stream bit index
+        e = pos // bits
+        r = (pos % bits).astype(jnp.uint32)
+        bit = jnp.where(e < D, (v[jnp.clip(e, 0, D - 1)] >> r) & 1, 0)
+        out = out | (bit << b)
+    return out
+
+
+def unpack_residues(words: jnp.ndarray, size: int, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_residues`, also bit by bit."""
+    out = jnp.zeros((size,), jnp.uint32)
+    for r in range(bits):
+        pos = bits * jnp.arange(size, dtype=jnp.int32) + r  # stream bit index
+        w0 = pos // 32
+        b = (pos % 32).astype(jnp.uint32)
+        out = out | (((words[w0] >> b) & 1) << r)
+    return out.astype(jnp.int32)
+
+
 def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
                             uniforms: jnp.ndarray, scale: float,
                             masks: jnp.ndarray = None) -> jnp.ndarray:

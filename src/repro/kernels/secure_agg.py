@@ -416,6 +416,103 @@ def weighted_quantize_accum(x: jnp.ndarray, weights: jnp.ndarray,
     return out[:D]
 
 
+# ---------------------------------------------------------------------------
+# Wire codec: bit-pack canonical field residues into dense uint32 words
+# ---------------------------------------------------------------------------
+DEFAULT_BLOCK_G = 256  # 32-element residue groups per tile (8192 elements)
+
+
+def _pack_residues_kernel(v_ref, out_ref, *, bits: int):
+    """(bg, 32) residue groups -> (bg, bits) packed words.
+
+    32 consecutive ``bits``-bit residues fill exactly ``bits`` uint32
+    words (their LCM alignment), so the group dimension is embarrassingly
+    vector-parallel and every shift/word index below is STATIC — element
+    ``j`` of a group starts at stream bit ``j*bits``, i.e. word
+    ``(j*bits)//32`` at shift ``(j*bits)%32``, straddling into the next
+    word when the shift crosses the 32-bit boundary.  Layout matches the
+    host codec (little-endian within the dense bit stream).
+    """
+    mask = jnp.uint32((1 << bits) - 1)
+    v = v_ref[...].astype(jnp.uint32) & mask
+    cols = [jnp.zeros_like(v[:, 0]) for _ in range(bits)]
+    for j in range(32):  # static: each element lands in <= 2 words
+        w0, shift = divmod(j * bits, 32)
+        cols[w0] = cols[w0] | (v[:, j] << shift)
+        if shift + bits > 32:
+            cols[w0 + 1] = cols[w0 + 1] | (v[:, j] >> (32 - shift))
+    out_ref[...] = jnp.stack(cols, axis=1)
+
+
+def pack_residues(q: jnp.ndarray, bits: int, *,
+                  block_g: int = DEFAULT_BLOCK_G,
+                  interpret: bool = False) -> jnp.ndarray:
+    """(D,) int32 canonical residues -> (ceil(D*bits/32),) uint32 words.
+
+    The Pallas side of ``core.fl.secure_agg.pack_residues`` (which takes
+    the field modulus; the kernels take the raw residue width so they
+    never import the protocol layer).  Ragged D pads to whole 32-element
+    groups with zero residues — their bits vanish and the word stream is
+    sliced back to the exact length.
+    """
+    (D,) = q.shape
+    nwords = -(-D * bits // 32)
+    groups = -(-D // 32)
+    block_g = min(block_g, groups)
+    gp = -(-groups // block_g) * block_g
+    v = jnp.pad(q, (0, gp * 32 - D)).reshape(gp, 32)
+    kern = functools.partial(_pack_residues_kernel, bits=bits)
+    out = pl.pallas_call(
+        kern,
+        grid=(gp // block_g,),
+        in_specs=[pl.BlockSpec((block_g, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_g, bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, bits), jnp.uint32),
+        interpret=interpret,
+    )(v)
+    return out.reshape(gp * bits)[:nwords]
+
+
+def _unpack_residues_kernel(w_ref, out_ref, *, bits: int):
+    """(bg, bits) packed words -> (bg, 32) int32 residue groups."""
+    mask = jnp.uint32((1 << bits) - 1)
+    w = w_ref[...]
+    elems = []
+    for j in range(32):  # static: each element reads <= 2 words
+        w0, shift = divmod(j * bits, 32)
+        v = w[:, w0] >> shift
+        if shift + bits > 32:
+            v = v | (w[:, w0 + 1] << (32 - shift))
+        elems.append(v & mask)
+    out_ref[...] = jnp.stack(elems, axis=1).astype(jnp.int32)
+
+
+def unpack_residues(words: jnp.ndarray, size: int, bits: int, *,
+                    block_g: int = DEFAULT_BLOCK_G,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Inverse of :func:`pack_residues`: uint32 words -> int32 residues."""
+    (nwords,) = words.shape
+    expect = -(-size * bits // 32)
+    if nwords != expect:
+        raise ValueError(f"packed stream of {nwords} words does not match "
+                         f"{size} residues at {bits}-bit width "
+                         f"(expected {expect})")
+    groups = -(-size // 32)
+    block_g = min(block_g, groups)
+    gp = -(-groups // block_g) * block_g
+    wp = jnp.pad(words, (0, gp * bits - nwords)).reshape(gp, bits)
+    kern = functools.partial(_unpack_residues_kernel, bits=bits)
+    out = pl.pallas_call(
+        kern,
+        grid=(gp // block_g,),
+        in_specs=[pl.BlockSpec((block_g, bits), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_g, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, 32), jnp.int32),
+        interpret=interpret,
+    )(wp)
+    return out.reshape(gp * 32)[:size]
+
+
 def _dequantize_kernel(q_ref, out_ref, *, inv_scale: float):
     out_ref[...] = q_ref[...].astype(jnp.float32) * inv_scale
 

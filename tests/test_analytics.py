@@ -30,6 +30,23 @@ def test_randomized_response_debias(flip_prob, seed):
     assert float(est[0]) == pytest.approx(1.3, abs=0.12)
 
 
+def test_estimate_variance_rejects_positional_bits():
+    """Regression: a vestigial leading parameter used to swallow a caller's
+    first positional argument silently — the bit tensors are now required
+    keyword-only, so the misuse fails loudly."""
+    key = jax.random.PRNGKey(2)
+    vals = 0.3 + 0.1 * jax.random.normal(key, (30_000, 1))
+    mb = bitagg.encode_mean_bits(vals, 0.0, 1.0, key)
+    sb = bitagg.encode_mean_bits(jnp.square(vals), 0.0, 1.0,
+                                 jax.random.fold_in(key, 1))
+    var = bitagg.estimate_variance(mean_bits=mb, sq_bits=sb, lo=0.0, hi=1.0)
+    assert float(var[0]) == pytest.approx(0.01, abs=0.004)
+    with pytest.raises(TypeError):
+        bitagg.estimate_variance(mb, sb)  # positional form must not exist
+    with pytest.raises(TypeError):
+        bitagg.estimate_variance(vals.shape, mean_bits=mb, sq_bits=sb)
+
+
 def test_percentile_from_cdf():
     key = jax.random.PRNGKey(1)
     n = 40_000

@@ -318,6 +318,47 @@ def test_two_level_client_rows_and_root_isolation():
     assert _diff(srv1.params, srv2.params) == 0.0
 
 
+@pytest.mark.parametrize("two_level", [False, True])
+@pytest.mark.parametrize("mode", MODES)
+def test_sub32_field_packed_wire_parity_under_dropout(mode, two_level):
+    """bits=16 gives a 2^19 session field and a 19-bit packed wire: under
+    dropout, the tier decodes bit-identically to the single-host engine
+    in BOTH topologies for all four mask modes — packing changes the
+    bytes on the wire and nothing else.  Client mode additionally checks
+    the shipped words really are narrower than the int32 row."""
+    fl = dataclasses.replace(FL, secure_agg_bits=16)
+    params = _params()
+    srv1 = AsyncServer(params, fl, buffer_size=8, mask_mode=mode,
+                       staleness_mode="constant")
+    if two_level:  # 4 logical leaves multiplex onto the single device
+        srv2 = ShardedAsyncServer(params, fl, num_leaves=4, leaf_buffer=2,
+                                  mask_mode=mode, staleness_mode="constant",
+                                  two_level=True)
+    else:
+        srv2 = ShardedAsyncServer(params, fl, num_leaves=1, leaf_buffer=8,
+                                  mask_mode=mode, staleness_mode="constant")
+    assert srv1._spec.field_modulus == srv2._spec.field_modulus == 1 << 19
+    ds = _deltas(8)
+    for s in range(5):  # dropout: slots 5..7 never deliver
+        if mode == "client":
+            cp1 = srv1.encode_push({"w": ds[s]}, 0, slot=s)
+            cp2 = srv2.encode_push({"w": ds[s]}, 0, slot=s)
+            assert cp1.modulus == cp2.modulus == 1 << 19
+            row = cp1.row if isinstance(cp1.row, tuple) else (cp1.row,)
+            assert all(r.dtype == jnp.uint32 for r in row)
+            assert sum(np.asarray(r).nbytes for r in row) < D * 4
+            srv1.push_encoded(cp1)
+            srv2.push_encoded(cp2)
+        else:
+            srv1.push({"w": ds[s]}, 0)
+            srv2.push({"w": ds[s]}, 0)
+    frng = jax.random.PRNGKey(29)
+    srv1.flush(rng=frng)
+    srv2.flush(rng=frng)
+    assert _diff(srv1.params, srv2.params) == 0.0
+    assert float(srv2.last_metrics["weight_total"]) == pytest.approx(5.0)
+
+
 def test_client_mode_mixed_staleness_batch():
     """push_batch's documented (K,) client_version form must work in
     mask_mode='client' too (regression: the client-mode branch only

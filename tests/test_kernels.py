@@ -173,3 +173,50 @@ def test_flash_decode_bf16():
     want = jnp.stack([ref.flash_decode(q[b], k[b], v[b], slot,
                                        jnp.int32(W - 1), None) for b in range(B)])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.03)
+
+
+# --- packed wire residues -----------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 7, 16, 19, 31, 32])
+@pytest.mark.parametrize("D", [1, 33, 700])
+def test_pack_residues_kernel_oracle_host_three_way(bits, D):
+    """Kernel == bit-by-bit oracle == host protocol codec, bit for bit.
+
+    Three independent formulations of the wire layout (group algorithm in
+    the kernel, stream-bit assembly in the oracle, vectorized group
+    algorithm in ``core.fl.secure_agg``) agreeing on random residues is
+    the layout's correctness argument."""
+    from repro.core.fl import secure_agg as fsa
+
+    modulus = (1 << bits) if bits < 32 else (1 << 32)
+    rs = np.random.RandomState(bits * 1009 + D)
+    raw = jnp.asarray(
+        rs.randint(-2 ** 31, 2 ** 31, size=D, dtype=np.int64).astype(np.int32))
+    canon = fsa.to_field(raw, modulus)
+    got = ksa.pack_residues(canon, bits, interpret=True)
+    want = ref.pack_residues(canon, bits)
+    host = fsa.pack_residues(canon, modulus)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(host))
+    back_k = ksa.unpack_residues(got, D, bits, interpret=True)
+    back_r = ref.unpack_residues(want, D, bits)
+    back_h = fsa.unpack_residues(host, D, modulus)
+    for back in (back_k, back_r, back_h):  # to_field output is canonical
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(canon))
+
+
+def test_pack_residues_kernel_multi_block_grid():
+    """Sizes past one grid block exercise the block-index BlockSpec path."""
+    bits, D = 19, 32 * 300 + 7  # > DEFAULT_BLOCK_G groups, ragged tail
+    rs = np.random.RandomState(7)
+    q = jnp.asarray(rs.randint(0, 1 << bits, size=D).astype(np.int32))
+    got = ksa.pack_residues(q, bits, block_g=128, interpret=True)
+    want = ref.pack_residues(q, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = ksa.unpack_residues(got, D, bits, block_g=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_unpack_residues_kernel_word_count_mismatch_raises():
+    words = jnp.zeros((10,), jnp.uint32)
+    with pytest.raises(ValueError, match="packed stream"):
+        ksa.unpack_residues(words, 999, 19, interpret=True)

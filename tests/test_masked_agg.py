@@ -243,6 +243,90 @@ def test_client_server_push_split_and_stale_push_rejected(setup):
         srv.push_encoded(stale)
 
 
+def test_client_push_wire_is_packed_sub32(setup):
+    """A sub-32-bit session field makes the ClientPush wire NARROWER than
+    the int32 row: encode_push ships bit-packed uint32 words tagged with
+    the session modulus, push_encoded unpacks them, and the decoded
+    aggregate matches the streamed unmasked engine."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(13)
+    fl16 = dataclasses.replace(FL, secure_agg_bits=16)
+    srv = AsyncServer(params, fl16, buffer_size=8, staleness_mode="constant",
+                      mask_mode="client")
+    C = sa.field_modulus(16, 8)
+    assert C == 1 << 19 and srv._spec.field_modulus == C
+    client_update = jax.jit(build_client_update(model.loss_fn, fl16))
+    base, ver = srv.pull()
+    delta, _ = client_update(base, jax.tree.map(lambda v: v[0], batch),
+                             jax.random.fold_in(rng, 0))
+    cp = srv.encode_push(delta, ver, slot=0)
+    assert cp.modulus == C
+    rows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+    D = sum(int(x.size) for x in jax.tree.leaves(params))
+    packed_bytes = sum(np.asarray(r).nbytes for r in rows)
+    for r in rows:
+        assert r.dtype == jnp.uint32
+    assert packed_bytes < D * 4  # 19-bit wire beats the int32 row
+    # full-session parity against the streamed unmasked engine
+    srv_off = _push_clients(
+        AsyncServer(params, fl16, buffer_size=8, staleness_mode="constant"),
+        model, params, batch, rng, 8)
+    srv_cl = _push_clients(
+        AsyncServer(params, fl16, buffer_size=8, staleness_mode="constant",
+                    mask_mode="client"),
+        model, params, batch, rng, 8)
+    assert _max_diff(srv_off.params, srv_cl.params) < 2e-4  # 16-bit grid
+
+
+def test_encode_push_scalar_slot_broadcasts_stacked_batch(setup):
+    """The seed bug: a scalar ``slot`` with a stacked delta raised
+    TypeError('int' object is not iterable).  Now it broadcasts to the K
+    consecutive slots starting there, and an out-of-range start raises an
+    actionable ValueError."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(14)
+    srv = AsyncServer(params, FL, buffer_size=8, staleness_mode="constant",
+                      mask_mode="client")
+    client_update = jax.jit(build_client_update(model.loss_fn, FL))
+    base, ver = srv.pull()
+    deltas = [client_update(base, jax.tree.map(lambda v: v[c], batch),
+                            jax.random.fold_in(rng, c))[0] for c in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    pushes = srv.encode_push(stacked, ver, slot=2)
+    assert [cp.slot for cp in pushes] == [2, 3, 4]
+    # bit-identical to encoding each row alone for the same slot
+    singles = [srv.encode_push(d, ver, slot=2 + i)
+               for i, d in enumerate(deltas)]
+    for cp, s in zip(pushes, singles):
+        got = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+        want = s.row if isinstance(s.row, tuple) else (s.row,)
+        for g, w in zip(got, want):
+            assert bool(jnp.all(g == w))
+    with pytest.raises(ValueError, match="scalar slot"):
+        srv.encode_push(stacked, ver, slot=6)  # 6..8 > buffer of 8
+    with pytest.raises(ValueError, match="scalar slot"):
+        srv.encode_push(stacked, ver, slot=-1)
+
+
+def test_push_encoded_rejects_wire_modulus_mismatch(setup):
+    """A ClientPush packed under a different session field cannot land:
+    the words stream would unpack at the wrong width."""
+    model, params, batch = setup
+    rng = jax.random.PRNGKey(15)
+    fl16 = dataclasses.replace(FL, secure_agg_bits=16)
+    srv16 = AsyncServer(params, fl16, buffer_size=8,
+                        staleness_mode="constant", mask_mode="client")
+    srv32 = AsyncServer(params, FL, buffer_size=8,
+                        staleness_mode="constant", mask_mode="client")
+    client_update = jax.jit(build_client_update(model.loss_fn, fl16))
+    base, ver = srv16.pull()
+    delta, _ = client_update(base, jax.tree.map(lambda v: v[0], batch),
+                             jax.random.fold_in(rng, 0))
+    cp = srv16.encode_push(delta, ver, slot=0)
+    with pytest.raises(ValueError, match="field modulus"):
+        srv32.push_encoded(cp)
+
+
 # --- sync rounds: in-path masks cancel bit-exactly ---------------------------
 # compile-heavy (the masked round traces O(cohort^2) PRF folds): the fast
 # lane keeps one run per chunk schedule, the full matrix rides the slow lane

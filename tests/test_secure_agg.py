@@ -116,14 +116,22 @@ def test_field_modulus_shapes():
 
 def test_mask_session_carries_field_and_reduces():
     """MaskSession bundles the session's field modulus: ``reduce`` is the
-    ``to_field`` wire reduction for that session, and masks generated
-    through the session object equal the free-function streams."""
+    bit-packed wire encoding of the ``to_field`` residues at the session's
+    wire width, and masks generated through the session object equal the
+    free-function streams."""
     key = jax.random.PRNGKey(5)
     sess = sa.make_session(key, 6, modulus=sa.field_modulus(16, 6))
     assert sess.modulus == 1 << 19
+    assert sess.wire_bits == 19
     q = jnp.asarray([-5, 0, (1 << 20) + 3], jnp.int32)
-    assert bool(jnp.all(sess.reduce(q) == sa.to_field(q, sess.modulus)))
-    assert int(sess.reduce(q).min()) >= 0
+    words = sess.reduce(q)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (sa.packed_words(3, sess.modulus),)
+    # round-trips to the canonical residues, bit-exactly
+    assert bool(jnp.all(sess.expand(words, 3)
+                        == sa.to_field(q, sess.modulus)))
+    # and the packed stream really is narrower than the int32 row
+    assert np.asarray(words).nbytes < np.asarray(q).nbytes
     # the engines' construction point wires the spec's REAL field through
     # (and a leaf-sized session keeps the engine-wide field — partials
     # still combine into the full aggregate at the root)
@@ -164,6 +172,81 @@ def test_dequantize_count_identity_in_window():
         back = sa.dequantize(q, 16, 2.0, count=count)
         base = sa.dequantize(q, 16, 2.0)
         assert bool(jnp.all(back == base))
+
+
+# --- packed wire codec -------------------------------------------------------
+@pytest.mark.parametrize("bits", list(range(1, 33)))
+def test_pack_residues_round_trip_every_width(bits):
+    """EVERY wire width 1..32, ragged sizes included: pack -> unpack is the
+    identity on canonical residues, and the word stream has exactly
+    ceil(D*bits/32) words (the dense layout, no per-element padding)."""
+    modulus = 1 << bits
+    rs = np.random.RandomState(bits)
+    for D in (1, 31, 32, 33, 97):
+        q = jnp.asarray(
+            rs.randint(0, min(modulus, 1 << 31), size=D).astype(np.int32))
+        q = sa.to_field(q, modulus) if bits == 32 else q
+        words = sa.pack_residues(q, modulus)
+        assert words.dtype == jnp.uint32
+        assert words.shape == (-(-D * bits // 32),)
+        back = sa.unpack_residues(words, D, modulus)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_pack_residues_edge_moduli_round_trip():
+    """The 2^31 and 2^32 field edges: full-range bit patterns survive."""
+    q = jnp.asarray([-5, 0, 2 ** 31 - 1, -(2 ** 31), 123456789], jnp.int32)
+    for modulus in (1 << 31, 1 << 32):
+        canon = sa.to_field(q, modulus)
+        back = sa.unpack_residues(sa.pack_residues(canon, modulus),
+                                  canon.shape[0], modulus)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(canon))
+
+
+def test_pack_residues_leading_axes():
+    """Batched rows (leaf-batch ingest shape) pack along the last axis."""
+    modulus = 1 << 19
+    rs = np.random.RandomState(3)
+    q = jnp.asarray(rs.randint(0, modulus, size=(4, 70)).astype(np.int32))
+    words = sa.pack_residues(q, modulus)
+    assert words.shape == (4, sa.packed_words(70, modulus))
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(sa.unpack_residues(words[i], 70, modulus)),
+            np.asarray(q[i]))
+
+
+def test_unpack_residues_word_count_mismatch_raises():
+    modulus = 1 << 19
+    words = sa.pack_residues(jnp.zeros((70,), jnp.int32), modulus)
+    with pytest.raises(ValueError, match="packed"):
+        sa.unpack_residues(words, 71, modulus)
+    with pytest.raises(ValueError, match="power-of-two"):
+        sa.wire_bits(100)
+
+
+def test_packed_wire_wraparound_window_sums_decode_exact():
+    """The wraparound regression, THROUGH the packed wire: residues that
+    cross the packed stream and back accumulate (int32 wraparound, many
+    wraps) to sums that dequantize(count=) decodes bit-equal to the
+    unpacked path."""
+    bits, count = 16, 4096
+    C = sa.field_modulus(bits, count)
+    rs = np.random.RandomState(1)
+    vals = rs.randint(-20_000, 20_000, size=(count, 16)).astype(np.int32)
+    wire = sa.to_field(jnp.asarray(vals), C)
+    acc_direct = np.zeros(16, np.int32)
+    acc_packed = np.zeros(16, np.int32)
+    for row in wire:
+        acc_direct = (acc_direct + np.asarray(row)).astype(np.int32)
+        shipped = sa.unpack_residues(sa.pack_residues(row, C), 16, C)
+        acc_packed = (acc_packed + np.asarray(shipped)).astype(np.int32)
+    np.testing.assert_array_equal(acc_packed, acc_direct)
+    levels = 2 ** (bits - 1) - 1
+    back = np.asarray(
+        sa.dequantize(jnp.asarray(acc_packed), bits, 1.0, count=count))
+    np.testing.assert_array_equal(np.rint(back * levels).astype(np.int64),
+                                  vals.sum(0))
 
 
 # --- session masks (the traceable in-engine variant) -------------------------
