@@ -1,0 +1,154 @@
+"""Churn robustness: drift-robust aggregation under realistic fleet dynamics.
+
+Sweeps churn profile x {FedBuff, FedProx, SCAFFOLD} x mask mode through
+``simulate_training`` with per-DEVICE data shards (``data_by_device=True``
+— the non-IID regime where client drift actually hurts) and records, per
+cell: round success rate (released vs deferred flushes), wasted client
+work, and steps to a target trailing loss — the convergence metric the
+paper's robustness story cares about.  A final "blackout" row starves a
+``flush_quorum=1.0`` session so the sub-quorum abstention path shows up in
+the CSV: zero released updates, deferrals > 0 (the CI chaos lane asserts
+exactly this).
+
+Writes results/churn_robustness.csv.  ``BENCH_CHURN_SMOKE=1`` runs the
+reduced sweep the CI chaos lane uses.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import mlp as mlp_cfg
+from repro.configs.base import FLConfig
+from repro.core.device_sim import ChurnModel, DevicePopulation
+from repro.core.fl.async_fl import simulate_training
+from repro.models.model import build_mlp_classifier
+
+RESULTS_CSV = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "churn_robustness.csv")
+
+POP = 64
+HETEROGENEITY = 1.5  # per-device label-plane spread (non-IID strength)
+TARGET_LOSS = 0.5
+ALGOS = ("fedbuff", "fedprox", "scaffold")
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_CHURN_SMOKE", "") == "1"
+
+
+def _fl(algo: str, mask_mode: str, quorum: float = 0.0) -> FLConfig:
+    kw = dict(local_steps=4, local_lr=0.3, clip_norm=1.0, server_lr=1.0,
+              flush_quorum=quorum)
+    if mask_mode != "off":
+        kw.update(secure_agg_bits=24, secure_agg_range=4.0)
+    if algo == "fedprox":
+        kw["fedprox_mu"] = 0.5
+    elif algo == "scaffold":
+        kw["scaffold"] = True
+    return FLConfig(**kw)
+
+
+def _run_cell(model, params, make_client_batch, *, algo, profile, mask_mode,
+              target_updates, buffer_size=8, quorum=0.0):
+    devs = DevicePopulation(POP, seed=0, churn=ChurnModel.profile(profile))
+    return simulate_training(
+        "async", loss_fn=model.loss_fn, params=params,
+        fl_cfg=_fl(algo, mask_mode, quorum),
+        make_client_batch=make_client_batch, target_updates=target_updates,
+        cohort=16, population=POP, buffer_size=buffer_size, seed=1,
+        devices=devs, mask_mode=mask_mode, data_by_device=True)
+
+
+def run() -> None:
+    cfg = mlp_cfg.CONFIG
+    model = build_mlp_classifier(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(9)
+    # every device owns a FIXED shard with its own label plane: a shared
+    # base direction plus a per-device rotation (the drift generator)
+    base_w = jax.random.normal(key, (cfg.num_features,))
+    dev_w = base_w[None, :] + HETEROGENEITY * jax.random.normal(
+        jax.random.fold_in(key, 1), (POP, cfg.num_features))
+
+    def make_client_batch(seed, n):
+        k = jax.random.fold_in(key, 1000 + seed)
+        x = jax.random.normal(k, (n, 4, cfg.num_features))
+        y = (jnp.einsum("cbf,f->cb", x, dev_w[seed % POP]) > 0
+             ).astype(jnp.float32)
+        return {"features": x, "label": y}
+
+    if _smoke():
+        profiles, mask_modes, target = ("diurnal",), ("off",), 96
+    else:
+        profiles, mask_modes, target = (("diurnal", "flaky"),
+                                        ("off", "client"), 320)
+
+    rows = []
+    for profile in profiles:
+        for algo in ALGOS:
+            for mask_mode in mask_modes:
+                r = _run_cell(model, params, make_client_batch, algo=algo,
+                              profile=profile, mask_mode=mask_mode,
+                              target_updates=target)
+                fm = r.fault_metrics
+                attempts = fm["released_updates"] + fm["subquorum_deferrals"]
+                total_work = r.sim.applied_updates + r.killed
+                rows.append({
+                    "profile": profile, "algo": algo, "mask_mode": mask_mode,
+                    "applied_updates": r.sim.applied_updates,
+                    "released_updates": r.released_updates,
+                    "subquorum_deferrals": fm["subquorum_deferrals"],
+                    "round_success_rate":
+                        f"{fm['released_updates'] / max(attempts, 1):.3f}",
+                    "killed": r.killed,
+                    "wasted_updates": r.wasted_updates,
+                    "wasted_fraction":
+                        f"{r.wasted_updates / max(total_work, 1):.3f}",
+                    "steps_to_target": r.steps_to_loss(TARGET_LOSS),
+                    "final_loss": f"{r.final_loss:.4f}",
+                })
+                emit(f"churn/{profile}_{algo}_{mask_mode}_steps_to_"
+                     f"{TARGET_LOSS}",
+                     float(r.steps_to_loss(TARGET_LOSS) or -1),
+                     f"final={r.final_loss:.4f};"
+                     f"wasted={r.wasted_updates};killed={r.killed}")
+
+    # the blackout row: a quorum the starved fleet can never meet — the
+    # engine must ABSTAIN every flush and release nothing
+    rb = _run_cell(model, params, make_client_batch, algo="fedbuff",
+                   profile="flaky", mask_mode="off",
+                   target_updates=24 if _smoke() else 48,
+                   buffer_size=64, quorum=1.0)
+    fmb = rb.fault_metrics
+    rows.append({
+        "profile": "blackout_q1.0", "algo": "fedbuff", "mask_mode": "off",
+        "applied_updates": rb.sim.applied_updates,
+        "released_updates": rb.released_updates,
+        "subquorum_deferrals": fmb["subquorum_deferrals"],
+        "round_success_rate": "0.000",
+        "killed": rb.killed, "wasted_updates": rb.wasted_updates,
+        "wasted_fraction": "1.000", "steps_to_target": None,
+        "final_loss": f"{rb.final_loss:.4f}",
+    })
+    emit("churn/blackout_released_updates", float(rb.released_updates),
+         f"deferrals={fmb['subquorum_deferrals']} (must be >0; released "
+         "must be 0)")
+
+    os.makedirs(os.path.dirname(RESULTS_CSV), exist_ok=True)
+    fields = list(rows[0].keys())
+    with open(RESULTS_CSV, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        w.writerows(rows)
+    emit("churn/results_csv", 0.0, RESULTS_CSV)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

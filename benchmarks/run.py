@@ -10,6 +10,9 @@
   bench_kernels         Kernel micro-timings + TPU roofline context
   bench_hierarchy       Aggregation-tier scaling (leaves x buffer x dim,
                         flat vs two-level session tree, dead-leaf flush)
+  bench_churn           Churn profile x {FedBuff,FedProx,SCAFFOLD} x mask
+                        mode: round success rate, wasted work, steps to
+                        target loss (-> results/churn_robustness.csv)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -29,9 +32,10 @@ def main() -> None:
     import benchmarks.bench_fa_bits as b6
     import benchmarks.bench_kernels as b7
     import benchmarks.bench_hierarchy as b8
+    import benchmarks.bench_churn as b9
 
     failures = 0
-    for mod in (b1, b2, b3, b4, b5, b6, b7, b8):
+    for mod in (b1, b2, b3, b4, b5, b6, b7, b8, b9):
         try:
             mod.run()
         except Exception:

@@ -288,8 +288,24 @@ class FLConfig:
     # the whole model (the legacy flat engine, unpadded).  > 0 groups
     # consecutive WHOLE leaves greedily up to this many elements per chunk;
     # each chunk runs its own mask session and the engines never
-    # materialize the full (D,) concatenation.
+    # materialize the full (D,) aggregation.
     param_chunk_elems: int = 0
+    # --- graceful degradation (core/fl/faults.py) ---
+    # minimum fraction of live session slots that must be filled before a
+    # deadline flush releases a params update.  0.0 keeps the legacy
+    # flush-whatever-arrived behaviour; a flush below quorum ABSTAINS
+    # (defers the buffered contributions, emits a metric) rather than
+    # decoding a garbage sub-quorum aggregate.
+    flush_quorum: float = 0.0
+    # --- drift robustness under churn ---
+    # FedProx (Li et al. 2020): proximal term mu/2 * ||w - w_round||^2 added
+    # to the local objective, i.e. g += mu * (w - w_round) each local step.
+    # 0.0 = plain FedAvg/FedBuff local SGD.
+    fedprox_mu: float = 0.0
+    # SCAFFOLD (Karimireddy et al. 2020): client/server control variates
+    # correct client drift; the variate deltas ride the pytree push API
+    # next to the model delta.  Async (FedBuff) simulation only.
+    scaffold: bool = False
 
     def __post_init__(self):
         if self.secure_agg_degree > 0 and self.secure_agg_degree % 2 != 0:
@@ -324,3 +340,15 @@ class FLConfig:
             raise ValueError(
                 f"param_chunk_elems must be >= 0 (0 = single-chunk flat "
                 f"plan); got {self.param_chunk_elems}.")
+        if not 0.0 <= self.flush_quorum <= 1.0:
+            raise ValueError(
+                f"flush_quorum is a fraction of live session slots; got "
+                f"{self.flush_quorum} (want 0.0 <= q <= 1.0).")
+        if self.fedprox_mu < 0.0:
+            raise ValueError(
+                f"fedprox_mu must be >= 0 (0 disables the proximal term); "
+                f"got {self.fedprox_mu}.")
+        if self.scaffold and self.fedprox_mu > 0.0:
+            raise ValueError(
+                "scaffold=True and fedprox_mu > 0 are alternative drift "
+                "corrections; enable one at a time.")

@@ -26,6 +26,7 @@ network overhead ~8x versus synchronous rounds.  This module provides:
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
@@ -222,6 +223,11 @@ class ClientPush(NamedTuple):
     # the field the residues were reduced into — the server rejects a push
     # whose wire width does not match its session field
     modulus: int = 1 << 32
+    # per-push generation token (monotonic, assigned at encode time): the
+    # server remembers delivered tokens, so a retried / duplicated /
+    # replayed ClientPush is an idempotent no-op instead of a double-count.
+    # 0 = untokened (hand-built pushes keep the strict legacy semantics).
+    token: int = 0
 
 
 class AsyncServer:
@@ -283,7 +289,8 @@ class AsyncServer:
                  mask_mode: str = "off",
                  session_seed: int = 0x5A5E,
                  use_pallas: Optional[bool] = None,
-                 stream_encode: Optional[bool] = None):
+                 stream_encode: Optional[bool] = None,
+                 strict: bool = True):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         self.params = params
@@ -296,6 +303,23 @@ class AsyncServer:
         self.last_metrics: Optional[dict] = None
         self._applied_updates = 0
         self._fill = 0
+        # fault tolerance: strict=True raises on protocol violations (stale
+        # session / conflicting slot — the debugging default); strict=False
+        # counts-and-drops them so an unreliable fleet degrades instead of
+        # crashing the aggregator.  Duplicate deliveries of a TOKENED push
+        # are an idempotent no-op in both modes.
+        self.strict = strict
+        self.flush_quorum = float(getattr(fl_cfg, "flush_quorum", 0.0))
+        self.fault_metrics = {
+            "duplicate_pushes": 0, "rejected_pushes": 0,
+            "subquorum_deferrals": 0, "lost_contributions": 0,
+            "released_updates": 0,
+        }
+        self._token_counter = 0
+        self._delivered_tokens: set = set()
+        # per-slot presence (host metadata) — shared by every ingest path so
+        # reordered / pinned-slot arrivals land correctly
+        self._present = [False] * buffer_size
         self._session_base = jax.random.PRNGKey(session_seed)
         self._push_base = jax.random.PRNGKey(0xA5)
         if use_pallas is None:
@@ -332,11 +356,6 @@ class AsyncServer:
             self._wts = jnp.zeros((buffer_size,), jnp.float32)
             self._norms = jnp.zeros((buffer_size,), jnp.float32)
             self._clips = jnp.zeros((buffer_size,), jnp.float32)
-            # per-slot presence: masked sessions may fill out of order
-            # (concurrent clients push for their assigned slots whenever
-            # they finish), so the apply's present vector and the dropout
-            # recovery must reflect the actual filled set, not a prefix
-            self._present = [False] * buffer_size
             # steady state: full sessions skip the recovery sweep entirely
             # (masks provably cancel); the recovering flush variant is
             # compiled lazily on the first partial flush (capturing self,
@@ -441,6 +460,14 @@ class AsyncServer:
         verbatim."""
         return jax.random.fold_in(self._session_base, self.version)
 
+    def _new_token(self) -> int:
+        self._token_counter += 1
+        return self._token_counter
+
+    def open_slots(self) -> List[int]:
+        """Session positions still awaiting a contribution."""
+        return [i for i, p in enumerate(self._present) if not p]
+
     # -- client protocol ----------------------------------------------------
     def pull(self) -> Tuple[Any, int]:
         return self.params, self.version
@@ -501,7 +528,7 @@ class AsyncServer:
         rows = self._wire_pack(rows, self._session_key())
         row = rows[0] if len(rows) == 1 else rows
         return ClientPush(row, w, nrm, clipped, staleness, self.version,
-                          slot, self._spec.field_modulus)
+                          slot, self._spec.field_modulus, self._new_token())
 
     def _encode_for_slot(self, delta, staleness, slot: int, rng=None):
         """One masked encode bound to (current session, ``slot``)."""
@@ -511,26 +538,34 @@ class AsyncServer:
         return self._masked_encode(delta, slot, staleness,
                                    self._session_key(), rng)
 
-    def push_encoded(self, cp: ClientPush, rng=None) -> None:
+    def push_encoded(self, cp: ClientPush, rng=None):
         """The SERVER half of mask_mode='client': store one masked row.
 
         Arrivals may land in any order — each ``ClientPush`` carries the
-        slot its mask was generated for.  Rejected if its session has
-        already been applied (the pairwise masks of a new session no
-        longer cancel against it) or its slot was already delivered.
-        A list of pushes (the batched ``encode_push`` form) is stored
-        row by row.
+        slot its mask was generated for.  A TOKENED push that was already
+        delivered (a retry or wire-level duplicate) is an idempotent no-op
+        (counted, never double-stored).  A push whose session has already
+        been applied (the pairwise masks of a new session no longer cancel
+        against it) or whose slot conflicts with a different delivered
+        push is rejected: ``strict=True`` raises, ``strict=False``
+        counts-and-drops (``fault_metrics['rejected_pushes']``).  Returns
+        True when the row was stored.  A list of pushes (the batched
+        ``encode_push`` form) is stored row by row (returns the count).
         """
         if self.mask_mode != "client":
             raise ValueError(
                 f"push_encoded is the server half of mask_mode='client' "
                 f"(server is in mask_mode={self.mask_mode!r})")
         if isinstance(cp, list):
-            for one in cp:
-                self.push_encoded(one, rng)
-            return
+            return sum(1 for one in cp if self.push_encoded(one, rng))
+        if cp.token and cp.token in self._delivered_tokens:
+            self.fault_metrics["duplicate_pushes"] += 1
+            return False
         if (cp.version != self.version or not 0 <= cp.slot < self.buffer_size
                 or self._present[cp.slot]):
+            if not self.strict:
+                self.fault_metrics["rejected_pushes"] += 1
+                return False
             raise ValueError(
                 f"stale ClientPush (session {cp.version} slot {cp.slot}; "
                 f"server at session {self.version}, slot filled="
@@ -546,8 +581,11 @@ class AsyncServer:
                 "agree on secure_agg_bits and the session size")
         wrows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
         rows = self._wire_unpack(wrows)  # back to int32 residue rows
+        if cp.token:
+            self._delivered_tokens.add(cp.token)
         self._store_row(cp.slot, rows, cp.staleness, cp.weight, cp.norm,
                         cp.clipped, rng)
+        return True
 
     def _store_row(self, slot: int, row, staleness, w, nrm, clipped,
                    rng=None) -> None:
@@ -562,50 +600,95 @@ class AsyncServer:
         if self._fill >= self.buffer_size:
             self._apply(rng)
 
-    def push(self, delta, client_version: int, rng=None) -> None:
+    def push(self, delta, client_version: int, rng=None,
+             slot: Optional[int] = None, push_id: Optional[int] = None):
         """Push one model delta — or a STACKED batch of them.
 
         The one entry point of the unified pytree API: ``delta`` is a
         pytree shaped like the model (one contribution) or a stacked
         (K, ...) batch (K contributions, stored in arrival order).  The
         engine routes it through whatever path the mask mode requires.
+
+        ``slot`` pins the session position (default: lowest unfilled).
+        Because per-slot PRF streams are keyed by (session, slot), pinned
+        pushes are bit-reproducible however arrivals are ordered — the
+        contract the fault-injection layer replays against.  ``push_id``
+        is an optional idempotence token for raw pushes: a repeated id is
+        a counted no-op (the retry/duplicate contract ``ClientPush.token``
+        gives the encoded path).  Returns True when the contribution was
+        stored.
         """
         k = batch_count(delta, self.params)
         if k is not None:
-            for i in range(k):
-                self.push(jax.tree.map(lambda x: x[i], delta),
-                          client_version, rng)
-            return
+            slots = [None] * k if slot is None else list(slot)
+            return sum(1 for i in range(k)
+                       if self.push(jax.tree.map(lambda x: x[i], delta),
+                                    client_version, rng, slot=slots[i]))
+        if push_id is not None and push_id in self._delivered_tokens:
+            self.fault_metrics["duplicate_pushes"] += 1
+            return False
+        if slot is not None:
+            if not 0 <= slot < self.buffer_size or self._present[slot]:
+                if not self.strict:
+                    self.fault_metrics["rejected_pushes"] += 1
+                    return False
+                raise ValueError(
+                    f"slot {slot} is not an open position of session "
+                    f"{self.version}")
         if self.mask_mode == "client":
-            self.push_encoded(self.encode_push(delta, client_version), rng)
-            return
+            ok = self.push_encoded(
+                self.encode_push(delta, client_version, slot=slot), rng)
+            if ok and push_id is not None:
+                self._delivered_tokens.add(push_id)
+            return ok
         staleness = self.version - client_version  # host-int metadata only
+        if push_id is not None:
+            self._delivered_tokens.add(push_id)
         if self._streaming:
             # streaming encode: process the arriving delta NOW (one jitted
             # call — in "tee_stream" masked, so the raw update never rests
             # in HBM; in streamed "off" plain) and leave the flush nothing
             # but the modular sum
-            slot = self._present.index(False)  # lowest unfilled slot
+            if slot is None:
+                slot = self._present.index(False)  # lowest unfilled slot
             rows, w, nrm, clipped = self._encode_for_slot(delta, staleness,
                                                           slot)
             self._store_row(slot, rows, staleness, w, nrm, clipped, rng)
-            return
+            return True
+        if slot is None:
+            slot = self._present.index(False)
         self._bufs, self._stal, self._valid = self._write(
-            self._bufs, self._stal, self._valid, self._fill, delta,
+            self._bufs, self._stal, self._valid, slot, delta,
             staleness)
+        self._present[slot] = True
         self._fill += 1
         if self._fill >= self.buffer_size:
             self._apply(rng)
+        return True
 
-    def flush(self, rng=None) -> None:
+    def flush(self, rng=None, force: bool = False) -> bool:
         """Apply a partially-filled buffer (end of run / deadline).
 
         In mask_mode="client" this is the dropout-recovery path: the absent
         slots' pairwise-mask shares are reconstructed and cancelled inside
         the jitted step, exactly as surviving clients would supply them.
+
+        A flush below ``FLConfig.flush_quorum`` (a fraction of the session's
+        slots) ABSTAINS: nothing is decoded or applied, the buffered
+        contributions stay in place for late arrivals, and
+        ``fault_metrics['subquorum_deferrals']`` counts the deferral —
+        the engine never releases a garbage sub-quorum aggregate.
+        ``force=True`` overrides the quorum (operator intervention).
+        Returns True when a params update was released.
         """
-        if self._fill > 0:
-            self._apply(rng)
+        if self._fill <= 0:
+            return False
+        need = math.ceil(self.flush_quorum * self.buffer_size)
+        if not force and self._fill < need:
+            self.fault_metrics["subquorum_deferrals"] += 1
+            return False
+        self._apply(rng)
+        return True
 
     # -- server step --------------------------------------------------------
     def _apply(self, rng=None) -> None:
@@ -630,9 +713,11 @@ class AsyncServer:
                 self.params, self._opt_state, self._bufs, self._stal,
                 self._valid, rng)
             self._valid = jnp.zeros_like(self._valid)
+            self._present = [False] * self.buffer_size
         self.version += 1
         self._applied_updates += self._fill
         self._fill = 0
+        self.fault_metrics["released_updates"] += 1
 
 
 # ---------------------------------------------------------------------------
@@ -728,12 +813,27 @@ class TrainingSimResult:
     sim: SimResult
     losses: List[float]  # per-applied-update client loss trace
     host_seconds: float  # real wall-clock spent in the jitted engines
+    killed: int = 0  # devices that died mid-round (their work is wasted)
+    released_updates: int = 0  # server applies that released a params update
+    wasted_updates: int = 0  # trained contributions never released
+    fault_metrics: Optional[dict] = None  # the engine's degradation counters
 
     @property
     def final_loss(self) -> float:
         import numpy as np
         k = max(1, len(self.losses) // 10)
         return float(np.mean(self.losses[-k:]))
+
+    def steps_to_loss(self, target: float) -> Optional[int]:
+        """First applied update whose trailing-10 mean loss hits ``target``
+        (None if never reached) — the convergence metric bench_churn sweeps."""
+        import numpy as np
+        xs = np.asarray(self.losses, np.float64)
+        for i in range(len(xs)):
+            lo = max(0, i - 9)
+            if float(xs[lo:i + 1].mean()) <= target:
+                return i + 1
+        return None
 
 
 def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
@@ -745,7 +845,9 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
                       devices: Optional[Any] = None,
                       mask_mode: str = "off",
                       staleness_exponent: float = 0.5,
-                      round_overhead: float = 30.0) -> TrainingSimResult:
+                      round_overhead: float = 30.0,
+                      faults: Optional[Any] = None,
+                      data_by_device: bool = False) -> TrainingSimResult:
     """The event-driven fleet simulation driving the real jitted engines.
 
     mode="sync": the shared jitted ``round_step`` over cohort-sized rounds
@@ -770,6 +872,27 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     with leading axis ``n_clients``.  Simulated wall-clock uses the same
     lognormal device-time model as ``simulate``; ``host_seconds`` measures
     the actual jitted compute.
+
+    When ``devices`` carries a :class:`~repro.core.device_sim.ChurnModel`
+    the async loop steps the population's sticky churn once per server
+    apply, draws the next arriving device availability-weighted (diurnal
+    waves / charging+wifi bias), and uses each device's tiered speed as its
+    round time — realistic heterogeneous-fleet arrivals.  (Without a churn
+    model the legacy i.i.d. event process is bit-identical to before.)
+
+    ``fl_cfg.fedprox_mu`` adds the proximal term to the local objective;
+    ``fl_cfg.scaffold`` runs SCAFFOLD: the server model becomes the pytree
+    ``{'x': params, 'c': control_variate}`` and each client pushes
+    ``{'x': delta_x, 'c': delta_c * buffer_size / population}`` through the
+    SAME pytree push API (masked modes included), so the variates ride the
+    aggregation channel next to the model delta.  Async mode only.
+
+    ``faults`` accepts a :class:`repro.core.fl.faults.FaultPlan` (the async
+    server is wrapped in its :class:`~repro.core.fl.faults.FaultInjector`,
+    and straggler tails stretch device times) — the chaos-testing hook.
+    ``data_by_device=True`` keys each client batch by DEVICE id instead of
+    the arrival counter: every device owns a fixed shard, i.e. the non-IID
+    regime where drift correction (FedProx / SCAFFOLD) earns its keep.
     """
     import time as _time
 
@@ -780,6 +903,10 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
 
     if dropout_rate is None:
         dropout_rate = dropout
+    if getattr(fl_cfg, "scaffold", False) and mode != "async":
+        raise ValueError(
+            "FLConfig.scaffold=True is the buffered-async drift correction "
+            "(control variates ride the async push API); use mode='async'")
     if devices is not None:
         from repro.core.device_sim import midround_dropout_prob
         assert len(devices) >= population
@@ -829,46 +956,107 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
             SimResult(t, up, down, applied, steps), losses, host)
 
     if mode == "async":
-        client_update = jax.jit(build_client_update(loss_fn, fl_cfg))
-        srv = AsyncServer(params, fl_cfg, buffer_size=buffer_size,
-                          staleness_exponent=staleness_exponent,
-                          mask_mode=mask_mode)
+        scaffold = bool(getattr(fl_cfg, "scaffold", False))
+        churn_on = (devices is not None
+                    and getattr(devices, "churn", None) is not None)
+        if scaffold:
+            from repro.core.fl.round import build_scaffold_client_update
+            zeros_c = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                   params)
+            scaffold_update = jax.jit(
+                build_scaffold_client_update(loss_fn, fl_cfg))
+            c_scale = buffer_size / population  # the |S|/N server-variate rate
+            ci: dict = {}  # device -> client control variate (lazy zeros)
+            srv = AsyncServer({"x": params, "c": zeros_c}, fl_cfg,
+                              buffer_size=buffer_size,
+                              staleness_exponent=staleness_exponent,
+                              mask_mode=mask_mode)
+        else:
+            client_update = jax.jit(build_client_update(loss_fn, fl_cfg))
+            srv = AsyncServer(params, fl_cfg, buffer_size=buffer_size,
+                              staleness_exponent=staleness_exponent,
+                              mask_mode=mask_mode)
+        eng = srv
+        if faults is not None:
+            from repro.core.fl.faults import FaultInjector
+            eng = FaultInjector(srv, faults)
+
+        def round_time(d: int) -> float:
+            base = (float(devices.devices[d].speed) if churn_on
+                    else float(times[d]))
+            if faults is not None:
+                base *= faults.straggler_mult(d)
+            return base
+
+        def next_device() -> int:
+            if churn_on:
+                w = np.asarray([devices.availability_weight(devices.devices[i])
+                                for i in range(population)], np.float64)
+                tot = w.sum()
+                if tot > 0.0:
+                    return int(rs.choice(population, p=w / tot))
+            return int(rs.randint(population))
+
         # in-flight: (finish_time, device, client_seed, (version, params) at
         # PULL time — the device really trains against its stale snapshot
         # (cseed is unique, so heap comparison never reaches the pytree)
         heap: List[Tuple[float, int, int, Tuple[int, Any]]] = []
         for i, d in enumerate(rs.choice(population, size=cohort,
                                         replace=False)):
-            params_now, ver_now = srv.pull()
-            heapq.heappush(heap, (float(times[d]), int(d), i,
+            params_now, ver_now = eng.pull()
+            heapq.heappush(heap, (round_time(int(d)), int(d), i,
                                   (ver_now, params_now)))
-        t, applied, n_started = 0.0, 0, cohort
+        t, applied, n_started, killed = 0.0, 0, cohort, 0
         down, up = cohort * model_bytes, 0.0
+        last_ver = srv.version
         host0 = _time.perf_counter()
         while applied < target_updates:
             t, d, cseed, (pulled_version, pulled_params) = heapq.heappop(heap)
             if rs.uniform() >= kill_prob(d):
-                batch = make_client_batch(cseed, 1)
+                batch = make_client_batch(d if data_by_device else cseed, 1)
                 cbatch = jax.tree.map(lambda x: x[0], batch)
-                delta, loss = client_update(
-                    pulled_params, cbatch, jax.random.fold_in(key, cseed))
-                srv.push(delta, pulled_version,
+                crng = jax.random.fold_in(key, cseed)
+                if scaffold:
+                    cc = ci.get(d)
+                    if cc is None:
+                        cc = zeros_c
+                    (dx, dc), loss = scaffold_update(
+                        pulled_params["x"], pulled_params["c"], cc, cbatch,
+                        crng)
+                    ci[d] = jax.tree.map(lambda a, b: a + b, cc, dc)
+                    delta = {"x": dx,
+                             "c": jax.tree.map(lambda v: v * c_scale, dc)}
+                else:
+                    delta, loss = client_update(pulled_params, cbatch, crng)
+                eng.push(delta, pulled_version,
                          rng=jax.random.fold_in(key, 0x5000 + applied))
                 losses.append(float(loss))
                 up += model_bytes
                 applied += 1
-            nxt = int(rs.randint(population))
-            params_now, ver_now = srv.pull()
-            heapq.heappush(heap, (t + float(times[nxt]), nxt, n_started,
+            else:
+                killed += 1  # mid-round death: its local work is wasted
+            if churn_on and srv.version != last_ver:
+                devices.step()  # world time advances once per server apply
+                last_ver = srv.version
+            nxt = next_device()
+            params_now, ver_now = eng.pull()
+            heapq.heappush(heap, (t + round_time(nxt), nxt, n_started,
                                   (ver_now, params_now)))
             n_started += 1
             down += model_bytes
         # deadline flush: a partially-filled buffer is applied; in
         # mask_mode="client" the empty session slots go through dropout
-        # recovery (their mask shares are cancelled inside the jitted step)
-        srv.flush(rng=jax.random.fold_in(key, 0x6000))
+        # recovery (their mask shares are cancelled inside the jitted step).
+        # Below FLConfig.flush_quorum the flush ABSTAINS — the buffered
+        # tail is never released as a garbage sub-quorum aggregate.
+        eng.flush(rng=jax.random.fold_in(key, 0x6000))
         host = _time.perf_counter() - host0
+        fm = dict(srv.fault_metrics)
+        wasted = (killed + fm["rejected_pushes"] + fm["lost_contributions"]
+                  + srv._fill)
         return TrainingSimResult(
-            SimResult(t, up, down, applied, srv.version), losses, host)
+            SimResult(t, up, down, applied, srv.version), losses, host,
+            killed=killed, released_updates=fm["released_updates"],
+            wasted_updates=wasted, fault_metrics=fm)
 
     raise ValueError(mode)

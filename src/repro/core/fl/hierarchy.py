@@ -61,6 +61,7 @@ bit-identical to sequential single pushes (same per-slot PRF streams).
 """
 from __future__ import annotations
 
+import math
 import warnings
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -614,7 +615,8 @@ class ShardedAsyncServer:
                  staleness_mode: str = "polynomial",
                  mask_mode: str = "off", session_seed: int = 0x5A5E,
                  two_level: Optional[bool] = None,
-                 mesh=None, use_pallas: Optional[bool] = None):
+                 mesh=None, use_pallas: Optional[bool] = None,
+                 strict: bool = True):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         num_leaves = num_leaves or fl_cfg.num_leaves
@@ -638,6 +640,22 @@ class ShardedAsyncServer:
         self.last_metrics: Optional[dict] = None
         self._applied_updates = 0
         self._fill = 0
+        # fault tolerance (mirrors AsyncServer): strict=True raises on
+        # protocol violations, strict=False counts-and-drops; duplicate
+        # deliveries of a tokened push are idempotent no-ops either way.
+        # A leaf marked dead (mark_leaf_dead) drops out of slot allocation
+        # and quorum accounting for the REST OF ITS SESSION; its buffered
+        # rows are recovered exactly like client dropouts (present-gated).
+        self.strict = strict
+        self.flush_quorum = float(getattr(fl_cfg, "flush_quorum", 0.0))
+        self.fault_metrics = {
+            "duplicate_pushes": 0, "rejected_pushes": 0,
+            "subquorum_deferrals": 0, "lost_contributions": 0,
+            "released_updates": 0, "dead_leaves": 0,
+        }
+        self._token_counter = 0
+        self._delivered_tokens: set = set()
+        self._dead_leaves: set = set()
         self._session_base = jax.random.PRNGKey(session_seed)
         self._push_base = jax.random.PRNGKey(0xA5)
         if use_pallas is None:
@@ -895,22 +913,74 @@ class ShardedAsyncServer:
         """PRNG key of the current mask session (tree) (= buffer round)."""
         return jax.random.fold_in(self._session_base, self.version)
 
+    def _new_token(self) -> int:
+        self._token_counter += 1
+        return self._token_counter
+
+    @property
+    def live_capacity(self) -> int:
+        """Session slots on leaves still alive — the quorum denominator."""
+        return self.buffer_size - len(self._dead_leaves) * self.leaf_buffer
+
+    def open_slots(self) -> List[int]:
+        """Unfilled session positions on LIVE leaves."""
+        Bl = self.leaf_buffer
+        return [s for s, p in enumerate(self._present)
+                if not p and (s // Bl) not in self._dead_leaves]
+
+    def mark_leaf_dead(self, leaf: int) -> List[int]:
+        """Declare one leaf aggregator dead for the rest of this session.
+
+        Its buffered contributions are LOST (present flags cleared, so the
+        flush recovers their mask shares exactly like client dropouts — in
+        the session tree via one root-slot sweep); its slots leave the
+        allocator (``open_slots``/``_take_slots``) and the quorum
+        denominator.  The fault-injection layer re-routes the leaf's queued
+        (undelivered) arrivals to surviving leaves.  Returns the global
+        slots whose contributions were lost.  Leaves revive at the next
+        session roll (the restarted process joins the next session).
+        """
+        if not 0 <= leaf < self.num_leaves:
+            raise ValueError(f"leaf {leaf} outside the {self.num_leaves}-leaf "
+                             "tier")
+        if leaf in self._dead_leaves:
+            return []
+        self._dead_leaves.add(leaf)
+        self.fault_metrics["dead_leaves"] += 1
+        Bl = self.leaf_buffer
+        lost = [s for s in range(leaf * Bl, (leaf + 1) * Bl)
+                if self._present[s]]
+        for s in lost:
+            self._present[s] = False
+        self._fill -= len(lost)
+        self.fault_metrics["lost_contributions"] += len(lost)
+        if not self._streaming:
+            # the "tee" engine gates rows by the device-side valid plane
+            self._valid = self._valid.at[leaf].set(
+                jnp.zeros((Bl,), jnp.float32))
+        return lost
+
     def _take_slots(self, k: int) -> List[int]:
-        free = [s for s, p in enumerate(self._present) if not p]
+        free = self.open_slots()
         if len(free) < k:
             raise ValueError(
                 f"batch of {k} exceeds the session's {len(free)} open slots "
                 f"(route arrival batches per session)")
         return free[:k]
 
+    def _slot_open(self, s: int) -> bool:
+        return (0 <= s < self.buffer_size and not self._present[s]
+                and (s // self.leaf_buffer) not in self._dead_leaves)
+
     def _check_slots(self, slots) -> None:
         """Every batch slot must be a distinct OPEN session position —
         a repeat would overwrite a row while ``_fill`` still counts it,
-        silently corrupting the session's modular sum."""
+        silently corrupting the session's modular sum.  Slots on dead
+        leaves are closed (their leaf cannot ingest)."""
         if len(set(slots)) != len(slots):
             raise ValueError(f"duplicate slots in batch: {list(slots)}")
         for s in slots:
-            if not 0 <= s < self.buffer_size or self._present[s]:
+            if not self._slot_open(s):
                 raise ValueError(
                     f"slot {s} is not an open position of session "
                     f"{self.version}")
@@ -967,7 +1037,8 @@ class ShardedAsyncServer:
         return self.params, self.version
 
     def push(self, delta, client_version, rng=None,
-             slots: Optional[Sequence[int]] = None) -> None:
+             slots: Optional[Sequence[int]] = None,
+             push_ids: Optional[Sequence[int]] = None) -> None:
         """Push one raw delta pytree — or a batch of them.
 
         The ONE ingest entry point, shared in shape with
@@ -979,14 +1050,20 @@ class ShardedAsyncServer:
         exactly the rows addressed to it — then written in place; rows are
         bit-identical to K sequential pushes.  ``client_version`` may be a
         scalar or a (K,) sequence (mixed staleness within one arrival
-        batch).
+        batch).  ``push_ids`` (one idempotence token per row) makes
+        retried/duplicated raw rows counted no-ops, mirroring
+        ``ClientPush.token`` on the encoded path.
         """
         k = batch_count(delta, self.params)
         if k is None:
             delta = jax.tree.map(lambda x: x[None], delta)
             if slots is not None and not isinstance(slots, (list, tuple)):
                 slots = [slots]
-        self._push_impl(delta, client_version, rng=rng, slots=slots)
+            if push_ids is not None and not isinstance(push_ids,
+                                                       (list, tuple)):
+                push_ids = [push_ids]
+        self._push_impl(delta, client_version, rng=rng, slots=slots,
+                        push_ids=push_ids)
 
     def encode_push(self, delta, client_version, rng=None,
                     slot=None):
@@ -1023,10 +1100,12 @@ class ShardedAsyncServer:
             slots=None if slot is None else [slot])
         return cps[0]
 
-    def push_encoded(self, cp, rng=None) -> None:
+    def push_encoded(self, cp, rng=None) -> int:
         """The SERVER half of mask_mode='client': land one
-        :class:`ClientPush` — or a list of them — in one jitted scatter."""
-        self._push_encoded_impl(
+        :class:`ClientPush` — or a list of them — in one jitted scatter.
+        Returns the number of rows actually stored (duplicates and, under
+        ``strict=False``, rejected pushes are counted-and-dropped)."""
+        return self._push_encoded_impl(
             [cp] if isinstance(cp, ClientPush) else list(cp), rng=rng)
 
     # -- deprecated batch spellings (the unified entry points above accept
@@ -1076,23 +1155,23 @@ class ShardedAsyncServer:
                   else (lambda i: tuple(r[i] for r in rows)))
         return [ClientPush(row_of(i), w[i], nrm[i], clipped[i],
                            float(stals[i]), self.version, int(s),
-                           self._spec.field_modulus)
+                           self._spec.field_modulus, self._new_token())
                 for i, s in enumerate(slots)]
 
     def _push_encoded_impl(self, cps: Sequence[ClientPush],
-                           rng=None) -> None:
-        """Land a batch of already-masked rows in one scatter."""
+                           rng=None) -> int:
+        """Land a batch of already-masked rows in one scatter.
+
+        Duplicate deliveries of tokened pushes are idempotent no-ops; a
+        stale session or a conflicting/dead slot raises under
+        ``strict=True`` and is counted-and-dropped under ``strict=False``
+        (the rest of the batch still lands).  Returns the stored count.
+        """
         if self.mask_mode != "client":
             raise ValueError(
                 f"push_encoded is the server half of mask_mode='client' "
                 f"(server is in mask_mode={self.mask_mode!r})")
-        slots = [cp.slot for cp in cps]
         for cp in cps:
-            if cp.version != self.version:
-                raise ValueError(
-                    f"stale ClientPush (session {cp.version} slot {cp.slot}; "
-                    f"server at session {self.version}): the pairwise mask "
-                    "no longer matches an open session position")
             if cp.modulus != self._spec.field_modulus:
                 raise ValueError(
                     f"ClientPush packed for field modulus {cp.modulus} "
@@ -1101,7 +1180,37 @@ class ShardedAsyncServer:
                     f"({sa.wire_bits(self._spec.field_modulus)}-bit): the "
                     "residue stream cannot be unpacked — client and tier "
                     "must agree on secure_agg_bits and the session size")
-        self._check_slots(slots)
+        kept: List[ClientPush] = []
+        for cp in cps:
+            if cp.token and cp.token in self._delivered_tokens:
+                self.fault_metrics["duplicate_pushes"] += 1
+                continue
+            if cp.version != self.version:
+                if self.strict:
+                    raise ValueError(
+                        f"stale ClientPush (session {cp.version} slot "
+                        f"{cp.slot}; server at session {self.version}): the "
+                        "pairwise mask no longer matches an open session "
+                        "position")
+                self.fault_metrics["rejected_pushes"] += 1
+                continue
+            kept.append(cp)
+        slots = [cp.slot for cp in kept]
+        if self.strict:
+            self._check_slots(slots)
+        else:
+            seen: set = set()
+            ok: List[ClientPush] = []
+            for cp in kept:
+                if cp.slot in seen or not self._slot_open(cp.slot):
+                    self.fault_metrics["rejected_pushes"] += 1
+                    continue
+                seen.add(cp.slot)
+                ok.append(cp)
+            kept, slots = ok, [cp.slot for cp in ok]
+        if not kept:
+            return 0
+        cps = kept
         stals = np.asarray([cp.staleness for cp in cps], np.float32)
         idx, lsl, valid, st = self._route_by_leaf(slots, stals)
         crows = [cp.row if isinstance(cp.row, tuple) else (cp.row,)
@@ -1115,10 +1224,15 @@ class ShardedAsyncServer:
             jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
             jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
             jnp.stack([jnp.asarray(cp.clipped) for cp in cps]))
+        for cp in cps:
+            if cp.token:
+                self._delivered_tokens.add(cp.token)
         self._mark(slots, rng)
+        return len(cps)
 
     def _push_impl(self, deltas, client_version, rng=None,
-                   slots: Optional[Sequence[int]] = None) -> None:
+                   slots: Optional[Sequence[int]] = None,
+                   push_ids: Optional[Sequence[int]] = None) -> None:
         """Ingest a (K,)-stacked batch of raw deltas (see :meth:`push`)."""
         if self.mask_mode == "client":
             self._push_encoded_impl(
@@ -1126,10 +1240,45 @@ class ShardedAsyncServer:
                 rng=rng)
             return
         K = jax.tree.leaves(deltas)[0].shape[0]
-        if slots is None:
-            slots = self._take_slots(K)
-        else:
-            self._check_slots(slots)
+        slot_of = None if slots is None else list(slots)
+        pid_of = None if push_ids is None else list(push_ids)
+        kept = list(range(K))
+        if pid_of is not None:
+            fresh = []
+            for i in kept:
+                if pid_of[i] is not None and pid_of[i] in self._delivered_tokens:
+                    self.fault_metrics["duplicate_pushes"] += 1
+                else:
+                    fresh.append(i)
+            kept = fresh
+        if slot_of is not None:
+            if self.strict:
+                self._check_slots([slot_of[i] for i in kept])
+            else:
+                seen: set = set()
+                ok = []
+                for i in kept:
+                    s = slot_of[i]
+                    if s in seen or not self._slot_open(s):
+                        self.fault_metrics["rejected_pushes"] += 1
+                        continue
+                    seen.add(s)
+                    ok.append(i)
+                kept = ok
+        if not kept:
+            return
+        if len(kept) != K:
+            sel = np.asarray(kept, np.int32)
+            deltas = jax.tree.map(lambda x: x[sel], deltas)
+            if jnp.ndim(client_version) != 0:
+                client_version = np.asarray(client_version)[sel]
+        if pid_of is not None:
+            for i in kept:
+                if pid_of[i] is not None:
+                    self._delivered_tokens.add(pid_of[i])
+        K = len(kept)
+        slots = (self._take_slots(K) if slot_of is None
+                 else [slot_of[i] for i in kept])
         stals = self._staleness_of(client_version, K)
         if not self._streaming:  # "tee": store raw rows, mask lane at flush
             leaf, local = self._leaf_local(slots)
@@ -1150,15 +1299,31 @@ class ShardedAsyncServer:
         for s in slots:
             self._present[s] = True
         self._fill += len(slots)
-        if self._fill >= self.buffer_size:
+        # with dead leaves the session can never reach buffer_size, so the
+        # deadline trigger is the LIVE capacity; _apply then routes through
+        # the recovering flush step (dead slots are absent -> recovered)
+        cap = self.live_capacity
+        if cap > 0 and self._fill >= cap:
             self._apply(rng)
 
-    def flush(self, rng=None) -> None:
+    def flush(self, rng=None, force: bool = False) -> bool:
         """Apply a partially-filled session (deadline / end of run) — the
         dropout-recovery path: leaf-local sweeps + root recovery in the
-        session tree, the cross-shard edge sweep in the flat layout."""
-        if self._fill > 0:
-            self._apply(rng)
+        session tree, the cross-shard edge sweep in the flat layout.
+
+        Below ``FLConfig.flush_quorum`` (a fraction of the LIVE capacity —
+        dead leaves leave the denominator) the flush ABSTAINS: nothing is
+        decoded, contributions stay buffered, and
+        ``fault_metrics['subquorum_deferrals']`` is bumped.  ``force=True``
+        overrides.  Returns True when a params update was released."""
+        if self._fill <= 0:
+            return False
+        need = math.ceil(self.flush_quorum * max(self.live_capacity, 1))
+        if not force and self._fill < need:
+            self.fault_metrics["subquorum_deferrals"] += 1
+            return False
+        self._apply(rng)
+        return True
 
     # -- server step --------------------------------------------------------
     def _apply(self, rng=None) -> None:
@@ -1188,3 +1353,5 @@ class ShardedAsyncServer:
         self.version += 1
         self._applied_updates += self._fill
         self._fill = 0
+        self._dead_leaves.clear()  # restarted leaves join the new session
+        self.fault_metrics["released_updates"] += 1

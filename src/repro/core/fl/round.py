@@ -49,8 +49,16 @@ def init_fl_state(params, fl_cfg) -> FLState:
 
 
 def build_client_update(loss_fn: Callable, fl_cfg) -> Callable:
-    """client_update(params, client_batch, rng) -> (delta_f32, first_loss)."""
+    """client_update(params, client_batch, rng) -> (delta_f32, first_loss).
+
+    With ``fl_cfg.fedprox_mu > 0`` each local step descends the FedProx
+    objective (Li et al. 2020): the gradient gains the proximal pull
+    ``mu * (w - w_round)`` toward the round-start model, bounding client
+    drift under non-IID data / stale async pulls.  ``mu = 0`` traces the
+    exact legacy computation (bit-identical).
+    """
     K, lr = fl_cfg.local_steps, fl_cfg.local_lr
+    mu = float(getattr(fl_cfg, "fedprox_mu", 0.0))
 
     def client_update(params, cbatch, rng):
         del rng  # local data order is fixed (single sample per device)
@@ -58,6 +66,12 @@ def build_client_update(loss_fn: Callable, fl_cfg) -> Callable:
         def one_step(p, _):
             loss, g = jax.value_and_grad(
                 lambda q: loss_fn(q, cbatch)[0])(p)
+            if mu > 0.0:
+                g = jax.tree.map(
+                    lambda gi, pi, p0: gi.astype(jnp.float32)
+                    + mu * (pi.astype(jnp.float32)
+                            - p0.astype(jnp.float32)),
+                    g, p, params)
             p2 = jax.tree.map(
                 lambda a, b: (a.astype(jnp.float32) - lr * b.astype(jnp.float32)
                               ).astype(a.dtype), p, g)
@@ -67,6 +81,47 @@ def build_client_update(loss_fn: Callable, fl_cfg) -> Callable:
         delta = jax.tree.map(
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), pK, params)
         return delta, losses[0]
+
+    return client_update
+
+
+def build_scaffold_client_update(loss_fn: Callable, fl_cfg) -> Callable:
+    """SCAFFOLD local training (Karimireddy et al. 2020, option II).
+
+    Returns ``client_update(params, c_server, c_client, cbatch, rng) ->
+    ((delta_x, delta_c), first_loss)``: K local steps along the
+    variance-corrected direction ``g - c_client + c_server``, then the
+    option-II control-variate refresh
+
+        c_client+ = c_client - c_server - delta_x / (K * lr)
+
+    reported as ``delta_c = c_client+ - c_client`` so both deltas travel
+    the same pytree push channel (``simulate_training`` stacks them as
+    ``{'x': ..., 'c': ...}``).  With both variates zero the model delta is
+    bit-identical to :func:`build_client_update` at ``fedprox_mu = 0``.
+    """
+    K, lr = fl_cfg.local_steps, fl_cfg.local_lr
+
+    def client_update(params, c_server, c_client, cbatch, rng):
+        del rng  # local data order is fixed (single sample per device)
+
+        def one_step(p, _):
+            loss, g = jax.value_and_grad(
+                lambda q: loss_fn(q, cbatch)[0])(p)
+            p2 = jax.tree.map(
+                lambda a, b, cs, cc: (a.astype(jnp.float32)
+                                      - lr * (b.astype(jnp.float32) - cc + cs)
+                                      ).astype(a.dtype),
+                p, g, c_server, c_client)
+            return p2, loss
+
+        pK, losses = jax.lax.scan(one_step, params, None, length=K)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), pK,
+            params)
+        delta_c = jax.tree.map(
+            lambda cs, d: -cs - d / (K * lr), c_server, delta)
+        return (delta, delta_c), losses[0]
 
     return client_update
 

@@ -9,6 +9,7 @@ specs, data purpose).
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -58,6 +59,22 @@ class MetadataStore:
         self._kv[key] = value
 
 
+class CohortSelection(List[DeviceState]):
+    """The selected cohort, plus the selection funnel's bottom line.
+
+    Behaves exactly like the list of participants it always was; the extra
+    attributes surface under-full cohorts instead of hiding them:
+    ``shortfall`` is how many participants short of ``requested`` the round
+    starts, and ``eligibility_rate`` is the measured pass rate the adaptive
+    over-selection feeds on.
+    """
+
+    requested: int = 0
+    shortfall: int = 0
+    over_select_used: float = 0.0
+    eligibility_rate: float = 1.0
+
+
 class Orchestrator:
     def __init__(self, population: DevicePopulation, metadata: MetadataStore,
                  logger: Optional[FunnelLogger] = None, seed: int = 0):
@@ -66,6 +83,8 @@ class Orchestrator:
         self.logger = logger or FunnelLogger(FUNNEL_PHASES)
         self.rs = np.random.RandomState(seed)
         self.round_idx = 0
+        # trailing per-round eligibility pass rates -> adaptive over_select
+        self._eligibility_rates: deque = deque(maxlen=8)
 
     # --- eligibility (the carefully crafted heuristics) --------------------
     def check_eligibility(self, d: DeviceState,
@@ -88,22 +107,57 @@ class Orchestrator:
         return True, "ok"
 
     # --- cohort selection ---------------------------------------------------
-    def select_cohort(self, cohort_size: int, over_select: float = 2.0
-                      ) -> List[DeviceState]:
-        """Schedule candidates, run on-device checks, return participants."""
+    def _adaptive_over_select(self) -> float:
+        """Over-selection factor from the measured eligibility drop-off.
+
+        First round (no history) keeps the legacy 2.0x.  After that, invert
+        the trailing mean pass rate with a 25% safety margin, clamped so a
+        dead fleet can't demand an unbounded candidate scan.
+        """
+        if not self._eligibility_rates:
+            return 2.0
+        rate = sum(self._eligibility_rates) / len(self._eligibility_rates)
+        return float(np.clip(1.25 / max(rate, 1e-3), 1.2, 8.0))
+
+    def select_cohort(self, cohort_size: int,
+                      over_select: Optional[float] = None) -> CohortSelection:
+        """Schedule candidates, run on-device checks, return participants.
+
+        ``over_select=None`` (the default) adapts the candidate multiplier
+        to the eligibility drop-off measured over recent rounds; passing a
+        float pins it.  Under-full cohorts are SURFACED, not hidden: the
+        returned :class:`CohortSelection` carries the shortfall and the
+        round is funnel-logged with a ``cohort_shortfall`` failure entry.
+        """
+        if over_select is None:
+            over_select = self._adaptive_over_select()
         candidates = self.population.sample(int(cohort_size * over_select))
-        cohort: List[DeviceState] = []
+        cohort = CohortSelection()
+        checked = eligible = 0
         for d in candidates:
             sid = new_session_id()
             self.logger.log(sid, "scheduled", "selected", True)
             ok, reason = self.check_eligibility(d)
             self.logger.log(sid, "eligibility", reason, ok)
+            checked += 1
             if not ok:
                 continue
+            eligible += 1
             self.logger.log(sid, "data_init", "metadata_fetch", True)
             cohort.append(d)
             if len(cohort) >= cohort_size:
                 break
+        rate = eligible / checked if checked else 0.0
+        self._eligibility_rates.append(rate)
+        cohort.requested = int(cohort_size)
+        cohort.shortfall = max(0, cohort_size - len(cohort))
+        cohort.over_select_used = float(over_select)
+        cohort.eligibility_rate = rate
+        if cohort.shortfall > 0:
+            self.logger.log(
+                new_session_id(), "scheduled", "cohort_shortfall", False,
+                detail=f"short={cohort.shortfall}/{cohort_size} "
+                       f"pass_rate={rate:.2f} over_select={over_select:.2f}")
         return cohort
 
     # --- sample submission control (label balancing) ------------------------

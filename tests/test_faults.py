@@ -1,0 +1,482 @@
+"""Chaos tests: seeded fault injection against the REAL jitted engines.
+
+The robustness contract this file enforces (the PR's acceptance bar):
+
+  * under a seeded FaultPlan mixing duplicate / delayed / reordered pushes,
+    mid-round client deaths and a whole-leaf death, the decoded aggregate
+    is BIT-identical to a fault-free replay of the surviving contributions
+    — for all four mask modes, on the flat server everywhere and on both
+    tier topologies under 8 forced host devices;
+  * a flush below ``FLConfig.flush_quorum`` never releases a params update
+    (bit-unchanged model, deferral metric), and exactly at quorum it
+    releases precisely the survivor aggregate;
+  * duplicates and retries are idempotent (counted no-ops), rejections
+    count-and-drop under ``strict=False`` and raise under ``strict=True``;
+  * the drift-robust optimizers (FedProx / SCAFFOLD) match their math, and
+    the sticky churn model is seed-stable and default-equivalent to the
+    legacy i.i.d. availability blip.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.device_sim import ChurnModel, DevicePopulation
+from repro.core.fl.async_fl import (AsyncServer, TrainingSimResult,
+                                    SimResult, simulate_training)
+from repro.core.fl.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                  RetryPolicy)
+from repro.core.fl.round import build_client_update, \
+    build_scaffold_client_update
+from repro.core.orchestrator import (CohortSelection, EligibilityCriteria,
+                                     MetadataStore, Orchestrator)
+
+D = 41
+FL = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=24)
+MODES = ("off", "tee", "tee_stream", "client")
+
+multidev = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="leaf mesh needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+CHAOS = FaultSpec(p_client_death=0.1, p_duplicate=0.3, p_delay=0.3,
+                  delay_pushes=2, p_reorder=0.3, seed=5)
+
+
+def _params():
+    return {"w": jnp.zeros((D,), jnp.float32),
+            "b": jnp.zeros((3,), jnp.float32)}
+
+
+def _deltas(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        out.append({"w": 0.1 * jax.random.normal(k, (D,)),
+                    "b": 0.1 * jax.random.normal(jax.random.fold_in(k, 1),
+                                                 (3,))})
+    return out
+
+
+def _diff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _flat(mode, quorum=0.0, buffer_size=4):
+    fl = dataclasses.replace(FL, flush_quorum=quorum)
+    return AsyncServer(_params(), fl, buffer_size=buffer_size,
+                       mask_mode=mode, strict=False)
+
+
+def _replay_survivors(inj, ds, mk):
+    """Replay exactly what each faulted session aggregated, fault-free."""
+    srv = mk()
+    for ver in sorted(inj.survivors):
+        assert srv.version == ver, "replay sessions diverged"
+        for slot, (seq, cv) in sorted(inj.survivors[ver].items()):
+            if hasattr(srv, "num_leaves"):
+                srv.push(ds[seq], cv, slots=slot)
+            else:
+                srv.push(ds[seq], cv, slot=slot)
+        if srv.version == ver:  # partial session: deadline flush
+            srv.flush(force=True)
+    return srv.params
+
+
+# --- the tentpole property: chaos == clean survivor replay, to the bit ------
+@pytest.mark.parametrize("mode", MODES)
+def test_flat_chaos_bit_identity(mode):
+    """Duplicated + delayed + reordered + retried pushes and mid-round
+    deaths leave the decoded aggregate bit-identical to a clean delivery
+    of the survivors at their pinned slots."""
+    srv = _flat(mode)
+    inj = FaultInjector(srv, FaultPlan(CHAOS))
+    ds = _deltas(12)
+    for d in ds:
+        inj.push(d, srv.version)
+    inj.flush(force=True)
+    assert inj.fault_metrics["duplicate_pushes"] > 0  # chaos really fired
+    assert inj.dropped  # and really killed someone
+    assert _diff(srv.params, _replay_survivors(inj, ds, lambda: _flat(mode))
+                 ) == 0.0
+
+
+@multidev
+@pytest.mark.parametrize("two_level", (False, True))
+@pytest.mark.parametrize("mode", MODES)
+def test_sharded_chaos_bit_identity(mode, two_level):
+    """The same chaos schedule + one whole-leaf death mid-ingest against
+    the tier: queued arrivals re-route to surviving leaves, the dead
+    leaf's buffered rows are recovered like dropouts, and the decode is
+    bit-identical to the fault-free survivor replay — both topologies."""
+    from repro.core.fl.hierarchy import ShardedAsyncServer
+
+    def mk():
+        return ShardedAsyncServer(_params(), FL, num_leaves=2,
+                                  leaf_buffer=2, mask_mode=mode,
+                                  two_level=two_level, strict=False)
+
+    srv = mk()
+    spec = dataclasses.replace(CHAOS, leaf_deaths=(("ingest", 1, 1),))
+    inj = FaultInjector(srv, FaultPlan(spec))
+    ds = _deltas(12)
+    for d in ds:
+        inj.push(d, srv.version)
+    inj.flush(force=True)
+    fm = srv.fault_metrics
+    assert fm["dead_leaves"] == 1
+    assert fm["lost_contributions"] >= 1  # the leaf died holding work
+    assert _diff(srv.params, _replay_survivors(inj, ds, mk)) == 0.0
+
+
+def test_fault_plan_replays_bit_for_bit():
+    """replayed() re-runs the recorded decision stream: identical faults,
+    identical survivors — a failing chaos run is exactly reproducible."""
+    ds = _deltas(12)
+
+    def run(plan):
+        srv = _flat("client")
+        inj = FaultInjector(srv, plan)
+        for d in ds:
+            inj.push(d, srv.version)
+        inj.flush(force=True)
+        return inj, srv.params
+
+    plan = FaultPlan(CHAOS)
+    inj1, p1 = run(plan)
+    inj2, p2 = run(plan.replayed())
+    assert inj1.delivered == inj2.delivered
+    assert inj1.dropped == inj2.dropped
+    assert inj1.survivors == inj2.survivors
+    assert _diff(p1, p2) == 0.0
+    # a replay asked to decide a site the recording never saw must fail
+    # loudly, not silently desynchronize
+    bad = plan.replayed()
+    bad._replay[0] = ("delay", True)
+    with pytest.raises(ValueError, match="replay diverged"):
+        bad.decide("client_death", 0.5)
+
+
+def test_straggler_tail_is_deterministic():
+    spec = FaultSpec(straggler_frac=0.25, straggler_mult=7.0, seed=1)
+    plan = FaultPlan(spec)
+    mults = [plan.time_multiplier(d) for d in range(2000)]
+    assert set(mults) == {1.0, 7.0}
+    frac = mults.count(7.0) / len(mults)
+    assert 0.15 < frac < 0.35
+    # stable hash: independent of plan state / RNG consumption
+    plan.decide("delay", 0.5)
+    assert [plan.time_multiplier(d) for d in range(2000)] == mults
+    assert FaultPlan(FaultSpec()).time_multiplier(3) == 1.0
+
+
+def test_delayed_pushes_land_at_the_deadline():
+    """p_delay=1 holds every delivery in flight; the deadline flush lands
+    them all (slot-pinned, so still bit-reproducible) and applies."""
+    srv = _flat("client", buffer_size=2)
+    plan = FaultPlan(FaultSpec(p_delay=1.0, delay_pushes=50, seed=0))
+    inj = FaultInjector(srv, plan)
+    ds = _deltas(2)
+    for d in ds:
+        inj.push(d, srv.version)
+    assert srv._fill == 0  # nothing delivered yet
+    assert inj.flush(force=True)
+    assert srv.version == 1
+    assert len(inj.delivered) == 2
+    assert _diff(srv.params,
+                 _replay_survivors(inj, ds,
+                                   lambda: _flat("client", buffer_size=2))
+                 ) == 0.0
+
+
+def test_retry_backoff_recovers_a_rejected_push():
+    """A delivery whose slot was stolen re-encodes against the current
+    session with capped exponential backoff instead of crashing."""
+    srv = _flat("client", buffer_size=3)
+    plan = FaultPlan(FaultSpec(p_delay=1.0, delay_pushes=1, seed=0))
+    inj = FaultInjector(srv, plan)
+    ds = _deltas(3)
+    inj.push(ds[0], srv.version)  # held in flight, slot 0 reserved
+    # an out-of-band push lands directly on the server and takes slot 0
+    srv.push(ds[2], srv.version)
+    inj.push(ds[1], srv.version)  # tick advances; first push now delivers
+    inj.flush(force=True)
+    assert srv.fault_metrics["rejected_pushes"] >= 1
+    assert any(site == "retry" for site, _ in inj.plan.trace)
+    assert len(inj.delivered) == 2  # both injected pushes made it in
+    assert srv.version == 1
+
+
+def test_raw_push_idempotence_and_reorder():
+    """push_id makes raw retries/duplicates counted no-ops, and pinned
+    slots land reordered arrivals bit-identically to in-order ones."""
+    for order in ((0, 1, 2, 3), (3, 0, 2, 1)):
+        srv = _flat("tee_stream")
+        ds = _deltas(4)
+        for i in order:
+            assert srv.push(ds[i], 0, slot=i, push_id=100 + i)
+            assert not srv.push(ds[i], 0, slot=i, push_id=100 + i)
+        assert srv.fault_metrics["duplicate_pushes"] == 4
+        assert srv.version == 1
+        if order == (0, 1, 2, 3):
+            want = srv.params
+    assert _diff(srv.params, want) == 0.0
+
+
+def test_strict_raises_where_degraded_mode_counts_and_drops():
+    ds = _deltas(2)
+    for strict in (True, False):
+        srv = AsyncServer(_params(), FL, buffer_size=2, mask_mode="client",
+                          strict=strict)
+        cp = srv.encode_push(ds[0], 0, slot=0)
+        srv.version += 1  # the session rolls before the push arrives
+        if strict:
+            with pytest.raises(ValueError, match="stale ClientPush"):
+                srv.push_encoded(cp)
+        else:
+            assert not srv.push_encoded(cp)
+            assert srv.fault_metrics["rejected_pushes"] == 1
+        # a field-width mismatch is never survivable: both modes raise
+        with pytest.raises(ValueError, match="field modulus"):
+            srv.push_encoded(cp._replace(version=srv.version, modulus=123))
+
+
+# --- quorum / deadline degradation ------------------------------------------
+@pytest.mark.parametrize("mode", MODES)
+def test_flush_quorum_exact_and_one_below(mode):
+    """One below quorum: the flush abstains — params BIT-unchanged, metric
+    emitted, buffer retained.  Exactly at quorum: the release equals the
+    survivor aggregate of a fault-free replay."""
+    srv = _flat(mode, quorum=0.75)  # need = ceil(0.75 * 4) = 3
+    ds = _deltas(4)
+    srv.push(ds[0], 0, slot=0)
+    srv.push(ds[1], 0, slot=1)
+    before = jax.tree.map(np.asarray, srv.params)
+    assert not srv.flush()  # one below quorum
+    assert srv.version == 0
+    assert srv.fault_metrics["subquorum_deferrals"] == 1
+    assert srv.fault_metrics["released_updates"] == 0
+    assert _diff(before, srv.params) == 0.0
+    srv.push(ds[2], 0, slot=2)
+    assert srv.flush()  # exactly at quorum
+    assert srv.version == 1
+    ref = _flat(mode)
+    for i in range(3):
+        ref.push(ds[i], 0, slot=i)
+    ref.flush(force=True)
+    assert _diff(srv.params, ref.params) == 0.0
+
+
+@multidev
+def test_sharded_quorum_counts_live_capacity():
+    """Quorum is a fraction of LIVE capacity: a dead leaf leaves the
+    denominator, so the surviving half can still meet quorum."""
+    from repro.core.fl.hierarchy import ShardedAsyncServer
+    fl = dataclasses.replace(FL, flush_quorum=0.75)
+    srv = ShardedAsyncServer(_params(), fl, num_leaves=2, leaf_buffer=2,
+                             mask_mode="client", strict=False)
+    ds = _deltas(3)
+    srv.push(ds[0], 0, slots=0)
+    assert not srv.flush()  # 1 < ceil(0.75 * 4)
+    assert srv.fault_metrics["subquorum_deferrals"] == 1
+    srv.mark_leaf_dead(1)  # live capacity drops to 2, need = 2
+    assert not srv.flush()  # still 1 < 2
+    srv.push(ds[1], 0, slots=1)
+    assert srv.version == 1  # reached live capacity: session completed
+
+
+# --- churn model -------------------------------------------------------------
+def test_default_churn_is_bit_identical_to_legacy():
+    """ChurnModel() consumes the main RNG stream exactly like the legacy
+    i.i.d. 5% blip: whole-population trajectories replay bit-for-bit."""
+    a = DevicePopulation(32, seed=3)
+    b = DevicePopulation(32, seed=3, churn=ChurnModel())
+    for _ in range(12):
+        a.step()
+        b.step()
+    for da, db in zip(a.devices, b.devices):
+        assert (da.alive, da.battery, da.charging, da.on_wifi,
+                da.app_version) == (db.alive, db.battery, db.charging,
+                                    db.on_wifi, db.app_version)
+
+
+def test_sticky_churn_outages_last_longer():
+    """The flaky profile's outages are multi-round (mean ~1/p_online), not
+    memoryless blips — same machinery, very different failure texture."""
+
+    def mean_outage(churn, steps=400):
+        pop = DevicePopulation(16, seed=7, churn=churn)
+        runs, cur = [], [0] * 16
+        for _ in range(steps):
+            pop.step()
+            for i, d in enumerate(pop.devices):
+                if not d.alive:
+                    cur[i] += 1
+                elif cur[i]:
+                    runs.append(cur[i])
+                    cur[i] = 0
+        return float(np.mean(runs)) if runs else 0.0
+
+    flaky = mean_outage(ChurnModel.profile("flaky"))
+    uniform = mean_outage(ChurnModel.profile("uniform"))
+    assert flaky > 2.0 * uniform
+    assert uniform == pytest.approx(1.05, abs=0.15)  # ~memoryless
+
+
+def test_churn_seed_stability_and_diurnal_wave():
+    p1 = DevicePopulation(24, seed=5, churn=ChurnModel.profile("diurnal"))
+    p2 = DevicePopulation(24, seed=5, churn=ChurnModel.profile("diurnal"))
+    t1, t2 = [], []
+    for _ in range(20):
+        p1.step()
+        p2.step()
+        t1.append([d.alive for d in p1.devices])
+        t2.append([d.alive for d in p2.devices])
+    assert t1 == t2  # seed-stable under the full churn model
+    # the diurnal wave: local noon strictly more available than midnight
+    cm = ChurnModel.profile("diurnal")
+    d = p1.devices[0]
+    d.tz_offset = 0
+    noon = cm._availability(d, 12.0)
+    midnight = cm._availability(d, 0.0)
+    assert noon > midnight
+    d.alive = False
+    assert p1.availability_weight(d) == 0.0
+
+
+def test_speed_tiers_partition_the_fleet():
+    base = DevicePopulation(400, seed=11)
+    tiered = DevicePopulation(400, seed=11,
+                              churn=ChurnModel.profile("diurnal"))
+    ratios = [t.speed / b.speed
+              for b, t in zip(base.devices, tiered.devices)]
+    kinds = {round(r, 3) for r in ratios}
+    assert kinds == {0.5, 1.0, 3.0}  # the profile's tiers, rest untouched
+    frac3 = sum(1 for r in ratios if round(r, 3) == 3.0) / len(ratios)
+    assert 0.2 < frac3 < 0.4  # ~30% slow tier
+
+
+# --- drift-robust aggregation ------------------------------------------------
+def _quad_loss(params, batch):
+    r = params["w"] - batch["t"]
+    return (r * r).sum(), {}
+
+
+def test_fedprox_mu_zero_is_bit_identical():
+    fl0 = FLConfig(local_steps=3, local_lr=0.1)
+    flp = dataclasses.replace(fl0, fedprox_mu=0.0)
+    upd0 = jax.jit(build_client_update(_quad_loss, fl0))
+    updp = jax.jit(build_client_update(_quad_loss, flp))
+    params = {"w": jnp.arange(5, dtype=jnp.float32)}
+    batch = {"t": jnp.ones((5,), jnp.float32)}
+    rng = jax.random.PRNGKey(0)
+    d0, l0 = upd0(params, batch, rng)
+    dp, lp = updp(params, batch, rng)
+    assert float(l0) == float(lp)
+    assert _diff(d0, dp) == 0.0
+
+
+def test_fedprox_bounds_client_drift():
+    """The proximal pull shrinks the local excursion from the round-start
+    model — the drift FedProx exists to bound."""
+    params = {"w": jnp.zeros((5,), jnp.float32)}
+    batch = {"t": 10.0 * jnp.ones((5,), jnp.float32)}
+    rng = jax.random.PRNGKey(0)
+
+    def drift(mu):
+        fl = FLConfig(local_steps=8, local_lr=0.05, fedprox_mu=mu)
+        delta, _ = jax.jit(build_client_update(_quad_loss, fl))(
+            params, batch, rng)
+        return float(jnp.linalg.norm(delta["w"]))
+
+    assert drift(5.0) < drift(1.0) < drift(0.0)
+
+
+def test_scaffold_control_variate_math():
+    """Option II at K=1: delta_x = -lr (g - c_i + c), and the variate
+    refresh delta_c = g - c_i is INDEPENDENT of the server variate."""
+    fl = FLConfig(local_steps=1, local_lr=0.25)
+    upd = jax.jit(build_scaffold_client_update(_quad_loss, fl))
+    params = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    batch = {"t": jnp.zeros((3,), jnp.float32)}
+    g = 2.0 * params["w"]  # grad of sum((w - 0)^2)
+    cs = {"w": jnp.asarray([0.3, 0.0, -0.1])}
+    cc = {"w": jnp.asarray([-0.2, 0.1, 0.0])}
+    (dx, dc), loss = upd(params, cs, cc, batch, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(dx["w"]),
+                               -0.25 * np.asarray(g - cc["w"] + cs["w"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dc["w"]),
+                               np.asarray(g - cc["w"]), rtol=1e-6)
+    assert float(loss) == pytest.approx(float((params["w"] ** 2).sum()))
+
+
+def test_scaffold_config_validation():
+    with pytest.raises(ValueError, match="alternative drift corrections"):
+        FLConfig(scaffold=True, fedprox_mu=0.1)
+    with pytest.raises(ValueError):
+        FLConfig(flush_quorum=1.5)
+    with pytest.raises(ValueError):
+        FLConfig(fedprox_mu=-0.1)
+    with pytest.raises(ValueError, match="async"):
+        simulate_training(
+            "sync", loss_fn=_quad_loss,
+            params={"w": jnp.zeros((3,))},
+            fl_cfg=FLConfig(scaffold=True),
+            make_client_batch=lambda s, n: {"t": jnp.zeros((n, 3))},
+            target_updates=1, cohort=1)
+
+
+def test_steps_to_loss_metric():
+    losses = [1.0] * 20 + [0.1] * 10
+    r = TrainingSimResult(SimResult(0, 0, 0, 30, 3), losses, 0.0)
+    hit = r.steps_to_loss(0.5)
+    assert hit is not None and 21 <= hit <= 30
+    assert r.steps_to_loss(0.01) is None
+
+
+# --- control plane: shortfall surfacing + adaptive over-selection ------------
+def _orch(criteria, n=256, seed=0):
+    pop = DevicePopulation(n, seed=seed)
+    md = MetadataStore()
+    md.put("eligibility", criteria)
+    return Orchestrator(pop, md, seed=seed)
+
+
+def test_cohort_shortfall_is_surfaced_not_hidden():
+    orch = _orch(EligibilityCriteria(min_battery=0.99,
+                                     require_charging=True))
+    cohort = orch.select_cohort(64)
+    assert isinstance(cohort, list)  # back-compat: still the participants
+    assert isinstance(cohort, CohortSelection)
+    assert cohort.requested == 64
+    assert cohort.shortfall == 64 - len(cohort) > 0
+    assert cohort.over_select_used == pytest.approx(2.0)  # legacy round 1
+    assert any(e.step == "cohort_shortfall" and not e.success
+               for e in orch.logger.events)
+    # the starved funnel drives over-selection toward the clamp
+    orch.finish_round(cohort)
+    c2 = orch.select_cohort(64)
+    assert c2.over_select_used > 2.0
+
+
+def test_over_select_adapts_down_for_a_healthy_fleet():
+    lenient = EligibilityCriteria(min_battery=0.0, require_charging=False,
+                                  require_wifi=False, min_storage_mb=0.0,
+                                  cooldown_rounds=0)
+    orch = _orch(lenient)
+    c1 = orch.select_cohort(32)
+    assert c1.shortfall == 0
+    assert c1.eligibility_rate > 0.8
+    orch.finish_round(c1)
+    c2 = orch.select_cohort(32)
+    assert c2.over_select_used < 2.0  # fewer wasted candidate schedules
+    assert c2.shortfall == 0
+    # an explicit factor pins the legacy behaviour
+    c3 = orch.select_cohort(32, over_select=2.0)
+    assert c3.over_select_used == pytest.approx(2.0)

@@ -130,9 +130,14 @@ def test_client_mode_batched_encode_and_routing():
     for a, b in zip(cps1, cps2):
         assert a.slot == b.slot
         assert bool(jnp.all(a.row == b.row))
-    stale = cps2[0]
+    # a distinct stale encoding (never delivered) — the redelivery of an
+    # already-ingested push is a DUPLICATE, a counted no-op, not an error
+    stale = srv2.encode_push({"w": ds[0]}, 0, slot=0)
+    dup = cps2[0]
     srv2.push_encoded_batch(cps2)
     assert srv2.version == 1  # session applied
+    assert not srv2.push_encoded(dup)  # idempotent: token already delivered
+    assert srv2.fault_metrics["duplicate_pushes"] == 1
     with pytest.raises(ValueError):  # session moved on
         srv2.push_encoded(stale)
     with pytest.raises(ValueError):  # duplicate slots within one batch

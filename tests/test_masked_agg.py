@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.flatten_util import ravel_pytree
 
 from repro.configs import mlp as mlp_cfg
 from repro.configs.base import FLConfig
@@ -192,7 +193,7 @@ def test_masked_buffer_rows_hide_plaintext(setup):
     for c in range(7):
         cbatch = jax.tree.map(lambda v: v[c], batch)
         delta, _ = client_update(base, cbatch, jax.random.fold_in(rng, c))
-        flat = jax.flatten_util.ravel_pytree(delta)[0]
+        flat = ravel_pytree(delta)[0]
         q = agg.encode_array(flat, spec.sa_scale,
                              jax.random.fold_in(jax.random.PRNGKey(0), c))
         match = float(jnp.mean((srv._buf[c] == q).astype(jnp.float32)))
@@ -226,17 +227,23 @@ def test_client_server_push_split_and_stale_push_rejected(setup):
     client_update = jax.jit(build_client_update(model.loss_fn, FL))
     base, ver = srv.pull()
     # all four clients encode BEFORE any push lands (concurrent session)
-    pushes = []
+    pushes, deltas = [], []
     for c in range(4):
         cbatch = jax.tree.map(lambda v: v[c], batch)
         delta, _ = client_update(base, cbatch, jax.random.fold_in(rng, c))
+        deltas.append(delta)
         pushes.append(srv.encode_push(delta, ver, slot=c))
     assert srv._fill == 0  # encoding mutated nothing server-side
-    stale = pushes[0]
+    # a DISTINCT encoding for slot 0 that is never delivered in-session
+    stale = srv.encode_push(deltas[0], ver, slot=0)
     for cp in (pushes[2], pushes[0], pushes[3]):  # arrivals are unordered
         srv.push_encoded(cp, rng=jax.random.fold_in(rng, 99))
-    with pytest.raises(ValueError):  # duplicate slot delivery
-        srv.push_encoded(pushes[0])
+    # wire-level duplicate of a delivered push: idempotent counted no-op
+    assert not srv.push_encoded(pushes[0])
+    assert srv.fault_metrics["duplicate_pushes"] == 1
+    assert srv._fill == 3  # nothing double-stored
+    with pytest.raises(ValueError):  # conflicting push for a filled slot
+        srv.push_encoded(stale)
     srv.push_encoded(pushes[1], rng=jax.random.fold_in(rng, 99))
     assert srv.version == 1  # session applied
     with pytest.raises(ValueError):  # session no longer open
