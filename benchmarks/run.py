@@ -13,16 +13,36 @@
   bench_churn           Churn profile x {FedBuff,FedProx,SCAFFOLD} x mask
                         mode: round success rate, wasted work, steps to
                         target loss (-> results/churn_robustness.csv)
+  bench_telemetry       Telemetry recorder overhead on the async critical
+                        path (-> results/telemetry_overhead.csv)
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  ``--trace PATH`` installs a
+span-recording registry as the process default and writes a Chrome
+trace-event JSON (load it in Perfetto / chrome://tracing) covering every
+benchmark, one top-level span per module.
 """
+import argparse
 import sys
 import traceback
 
 from benchmarks.common import header
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON of the whole "
+                         "benchmark run (spans recorded on the default "
+                         "telemetry registry)")
+    args = ap.parse_args(argv)
+
+    tel = None
+    if args.trace:
+        from repro.core import telemetry as tele
+
+        tel = tele.Telemetry(record_spans=True, max_spans=2_000_000)
+        tele.set_default(tel)
+
     header()
     import benchmarks.bench_label_balance as b1
     import benchmarks.bench_feature_norm as b2
@@ -33,15 +53,27 @@ def main() -> None:
     import benchmarks.bench_kernels as b7
     import benchmarks.bench_hierarchy as b8
     import benchmarks.bench_churn as b9
+    import benchmarks.bench_telemetry as b10
 
     failures = 0
-    for mod in (b1, b2, b3, b4, b5, b6, b7, b8, b9):
+    for mod in (b1, b2, b3, b4, b5, b6, b7, b8, b9, b10):
         try:
-            mod.run()
+            if tel is not None:
+                short = mod.__name__.rsplit(".", 1)[-1]
+                with tel.span(short):
+                    mod.run()
+            else:
+                mod.run()
         except Exception:
             failures += 1
             print(f"# FAILED {mod.__name__}", file=sys.stderr)
             traceback.print_exc()
+    if tel is not None:
+        from repro.core.obs import write_chrome_trace
+
+        write_chrome_trace(tel, args.trace)
+        print(f"# trace: {args.trace} ({len(tel.spans)} spans)",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

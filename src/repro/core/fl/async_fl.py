@@ -33,9 +33,16 @@ from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tele
 from repro.core.fl import aggregation as agg
 from repro.core.fl import secure_agg as sa
 from repro.core.fl.server_opt import build_server_opt
+
+# the PR 8 degradation-counter vocabulary, now telemetry-backed (the
+# ``fault_metrics`` attribute is a deprecated dict view over these)
+FAULT_METRIC_KEYS = ("duplicate_pushes", "rejected_pushes",
+                     "subquorum_deferrals", "lost_contributions",
+                     "released_updates")
 
 
 def batch_count(delta, params) -> Optional[int]:
@@ -290,7 +297,8 @@ class AsyncServer:
                  session_seed: int = 0x5A5E,
                  use_pallas: Optional[bool] = None,
                  stream_encode: Optional[bool] = None,
-                 strict: bool = True):
+                 strict: bool = True,
+                 telemetry: Optional["tele.Telemetry"] = None):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         self.params = params
@@ -310,11 +318,16 @@ class AsyncServer:
         # are an idempotent no-op in both modes.
         self.strict = strict
         self.flush_quorum = float(getattr(fl_cfg, "flush_quorum", 0.0))
-        self.fault_metrics = {
-            "duplicate_pushes": 0, "rejected_pushes": 0,
-            "subquorum_deferrals": 0, "lost_contributions": 0,
-            "released_updates": 0,
-        }
+        # one registry for every counter/span the engine emits; the eid is
+        # an EPHEMERAL random id (never a device/user identifier) keeping
+        # this instance's series separate in a shared registry
+        self.telemetry = (telemetry if telemetry is not None
+                          else tele.get_default())
+        self._eid = tele.new_session_id()
+        self._tl = {"engine": "async", "eid": self._eid}
+        # deprecated PR 8 spelling: a dict view over the registry counters
+        self.fault_metrics = tele.TelemetryCounterView(
+            self.telemetry, FAULT_METRIC_KEYS, **self._tl)
         self._token_counter = 0
         self._delivered_tokens: set = set()
         # per-slot presence (host metadata) — shared by every ingest path so
@@ -464,6 +477,11 @@ class AsyncServer:
         self._token_counter += 1
         return self._token_counter
 
+    def _span(self, name: str, **labels):
+        """Engine span: labeled with the ephemeral eid and the session."""
+        return self.telemetry.span(name, round=self.version, **self._tl,
+                                   **labels)
+
     def open_slots(self) -> List[int]:
         """Session positions still awaiting a contribution."""
         return [i for i, p in enumerate(self._present) if not p]
@@ -522,10 +540,12 @@ class AsyncServer:
         staleness = self.version - client_version  # host-int metadata only
         if slot is None:
             slot = self._present.index(False)  # lowest unfilled slot
-        rows, w, nrm, clipped = self._encode_for_slot(delta, staleness, slot,
-                                                      rng)
-        # wire format: the packed residue stream is what travels
-        rows = self._wire_pack(rows, self._session_key())
+        with self._span("encode_push", slot=slot) as sp:
+            rows, w, nrm, clipped = self._encode_for_slot(delta, staleness,
+                                                          slot, rng)
+            # wire format: the packed residue stream is what travels
+            rows = self._wire_pack(rows, self._session_key())
+            sp.fence(rows)
         row = rows[0] if len(rows) == 1 else rows
         return ClientPush(row, w, nrm, clipped, staleness, self.version,
                           slot, self._spec.field_modulus, self._new_token())
@@ -558,6 +578,10 @@ class AsyncServer:
                 f"(server is in mask_mode={self.mask_mode!r})")
         if isinstance(cp, list):
             return sum(1 for one in cp if self.push_encoded(one, rng))
+        with self._span("push_encoded", slot=cp.slot):
+            return self._push_encoded_one(cp, rng)
+
+    def _push_encoded_one(self, cp: ClientPush, rng=None) -> bool:
         if cp.token and cp.token in self._delivered_tokens:
             self.fault_metrics["duplicate_pushes"] += 1
             return False
@@ -597,6 +621,9 @@ class AsyncServer:
             slot, rows, staleness, w, nrm, clipped)
         self._present[slot] = True
         self._fill += 1
+        self.telemetry.count("stored_contributions", **self._tl)
+        self.telemetry.gauge("buffered_contributions", self._fill,
+                             **self._tl)
         if self._fill >= self.buffer_size:
             self._apply(rng)
 
@@ -624,6 +651,12 @@ class AsyncServer:
             return sum(1 for i in range(k)
                        if self.push(jax.tree.map(lambda x: x[i], delta),
                                     client_version, rng, slot=slots[i]))
+        with self._span("push", mode=self.mask_mode):
+            return self._push_one(delta, client_version, rng, slot, push_id)
+
+    def _push_one(self, delta, client_version: int, rng=None,
+                  slot: Optional[int] = None,
+                  push_id: Optional[int] = None) -> bool:
         if push_id is not None and push_id in self._delivered_tokens:
             self.fault_metrics["duplicate_pushes"] += 1
             return False
@@ -662,6 +695,9 @@ class AsyncServer:
             staleness)
         self._present[slot] = True
         self._fill += 1
+        self.telemetry.count("stored_contributions", **self._tl)
+        self.telemetry.gauge("buffered_contributions", self._fill,
+                             **self._tl)
         if self._fill >= self.buffer_size:
             self._apply(rng)
         return True
@@ -683,39 +719,46 @@ class AsyncServer:
         """
         if self._fill <= 0:
             return False
-        need = math.ceil(self.flush_quorum * self.buffer_size)
-        if not force and self._fill < need:
-            self.fault_metrics["subquorum_deferrals"] += 1
-            return False
-        self._apply(rng)
+        with self._span("flush", forced=force, fill=self._fill):
+            need = math.ceil(self.flush_quorum * self.buffer_size)
+            if not force and self._fill < need:
+                self.fault_metrics["subquorum_deferrals"] += 1
+                return False
+            self._apply(rng)
         return True
 
     # -- server step --------------------------------------------------------
     def _apply(self, rng=None) -> None:
         if rng is None:  # deterministic per-version stream for rounding/noise
             rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
-        if self._streaming:
-            present = jnp.asarray([1.0 if p else 0.0 for p in self._present],
-                                  jnp.float32)
-            if self._fill >= self.buffer_size:
-                step = self._step  # complete session: no recovery needed
+        recovery = self._fill < self.buffer_size
+        with self._span("decode", recovery=recovery, fill=self._fill) as sp:
+            if self._streaming:
+                present = jnp.asarray(
+                    [1.0 if p else 0.0 for p in self._present], jnp.float32)
+                if not recovery:
+                    step = self._step  # complete session: no recovery needed
+                else:
+                    if self._flush_step is None:
+                        self._flush_step = self._build_flush_step()
+                    step = self._flush_step  # recovery for absent slots
+                self.params, self._opt_state, self.last_metrics = step(
+                    self.params, self._opt_state, self._bufs, present,
+                    self._wts, self._stal, self._norms, self._clips,
+                    self._session_key(), rng)
+                self._present = [False] * self.buffer_size
             else:
-                if self._flush_step is None:
-                    self._flush_step = self._build_flush_step()
-                step = self._flush_step  # dropout recovery for absent slots
-            self.params, self._opt_state, self.last_metrics = step(
-                self.params, self._opt_state, self._bufs, present, self._wts,
-                self._stal, self._norms, self._clips, self._session_key(),
-                rng)
-            self._present = [False] * self.buffer_size
-        else:
-            self.params, self._opt_state, self.last_metrics = self._step(
-                self.params, self._opt_state, self._bufs, self._stal,
-                self._valid, rng)
-            self._valid = jnp.zeros_like(self._valid)
-            self._present = [False] * self.buffer_size
+                self.params, self._opt_state, self.last_metrics = self._step(
+                    self.params, self._opt_state, self._bufs, self._stal,
+                    self._valid, rng)
+                self._valid = jnp.zeros_like(self._valid)
+                self._present = [False] * self.buffer_size
+            sp.fence(self.params)
         self.version += 1
         self._applied_updates += self._fill
+        self.telemetry.count("aggregated_contributions", self._fill,
+                             **self._tl)
+        self.telemetry.gauge("buffered_contributions", 0, **self._tl)
         self._fill = 0
         self.fault_metrics["released_updates"] += 1
 
@@ -847,7 +890,9 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
                       staleness_exponent: float = 0.5,
                       round_overhead: float = 30.0,
                       faults: Optional[Any] = None,
-                      data_by_device: bool = False) -> TrainingSimResult:
+                      data_by_device: bool = False,
+                      telemetry: Optional["tele.Telemetry"] = None
+                      ) -> TrainingSimResult:
     """The event-driven fleet simulation driving the real jitted engines.
 
     mode="sync": the shared jitted ``round_step`` over cohort-sized rounds
@@ -923,7 +968,8 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
     losses: List[float] = []
 
     if mode == "sync":
-        step = build_round_step(loss_fn, fl_cfg, cohort_size=cohort)
+        step = build_round_step(loss_fn, fl_cfg, cohort_size=cohort,
+                                telemetry=telemetry)
         state = init_fl_state(params, fl_cfg)
         # dedicated kill stream: device selection (and every seeded result at
         # dropout_rate=0) stays bit-identical to the dropout-free engine
@@ -970,12 +1016,12 @@ def simulate_training(mode: str, *, loss_fn: Callable, params, fl_cfg,
             srv = AsyncServer({"x": params, "c": zeros_c}, fl_cfg,
                               buffer_size=buffer_size,
                               staleness_exponent=staleness_exponent,
-                              mask_mode=mask_mode)
+                              mask_mode=mask_mode, telemetry=telemetry)
         else:
             client_update = jax.jit(build_client_update(loss_fn, fl_cfg))
             srv = AsyncServer(params, fl_cfg, buffer_size=buffer_size,
                               staleness_exponent=staleness_exponent,
-                              mask_mode=mask_mode)
+                              mask_mode=mask_mode, telemetry=telemetry)
         eng = srv
         if faults is not None:
             from repro.core.fl.faults import FaultInjector

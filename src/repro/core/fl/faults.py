@@ -31,9 +31,11 @@ aggregate of a faulted session equals a clean replay of its survivors.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core import telemetry as tele
 
 __all__ = ["FaultSpec", "FaultPlan", "RetryPolicy", "FaultInjector"]
 
@@ -147,6 +149,7 @@ class _Pending:
     slot: Optional[int] = None  # pinned slot (raw modes)
     push_id: int = 0
     attempts: int = 0
+    dup: bool = False  # wire duplicate: delivered once, never re-encoded
 
 
 class FaultInjector:
@@ -161,11 +164,19 @@ class FaultInjector:
     """
 
     def __init__(self, server, plan: FaultPlan,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 telemetry: Optional["tele.Telemetry"] = None):
         self.server = server
         server.strict = False  # the injector relies on count-and-drop
         self.plan = plan
         self.retry = retry if retry is not None else RetryPolicy()
+        # share the wrapped server's registry by default so the funnel
+        # reconciler sees both sides of the bridge in one place
+        self.telemetry = (telemetry if telemetry is not None
+                          else getattr(server, "telemetry", None)
+                          or tele.get_default())
+        self._eid = tele.new_session_id()
+        self._il = {"component": "injector", "eid": self._eid}
         self._tick = 0
         self._seq = 0
         self._pending: List[_Pending] = []
@@ -173,6 +184,13 @@ class FaultInjector:
         self._fired_leaf_deaths: set = set()
         self.delivered: List[Tuple[int, int]] = []  # (seq, slot) landings
         self.dropped: List[Tuple[int, str]] = []  # (seq, reason)
+        # seq -> terminal ledger state ("landed" / "dropped" / "killed").
+        # A submission reaches exactly one terminal state no matter how many
+        # wire copies of it exist; "landed" is absorbing (a duplicate copy
+        # can land AFTER the original exhausted its retries, in which case
+        # the drop is retracted — see _finalize).
+        self._terminal: Dict[int, str] = {}
+        self._drop_reason: Dict[int, str] = {}
         # what each session ACTUALLY aggregated: version -> {slot: seq}.
         # Deliveries add entries; a leaf death removes the contributions it
         # lost.  The bit-identity tests replay exactly this record against
@@ -200,6 +218,45 @@ class FaultInjector:
         return self.server.pull()
 
     # -- internals -----------------------------------------------------------
+    def _finalize(self, seq: int, state: str,
+                  reason: Optional[str] = None) -> None:
+        """Move a submission to its terminal ledger state (exactly once).
+
+        ``landed`` is absorbing.  The one legal transition is
+        dropped -> landed: the original copy exhausted its retries but a
+        wire duplicate later landed, so the submission DID reach the
+        aggregate — the drop is retracted (the dropped counter decrements
+        under the remembered reason) before counting the landing.
+        """
+        prev = self._terminal.get(seq)
+        if prev is not None:
+            if prev == "dropped" and state == "landed":
+                self.telemetry.count("dropped_contributions", -1,
+                                     reason=self._drop_reason.pop(seq),
+                                     **self._il)
+            else:
+                return
+        self._terminal[seq] = state
+        if state == "landed":
+            self.telemetry.count("landed_contributions", **self._il)
+        elif state == "killed":
+            self.telemetry.count("killed_contributions", **self._il)
+        else:
+            self._drop_reason[seq] = reason or "unknown"
+            self.telemetry.count("dropped_contributions",
+                                 reason=reason or "unknown", **self._il)
+        self.telemetry.gauge("in_flight_contributions",
+                             self._seq - len(self._terminal), **self._il)
+
+    def _decide(self, site: str, p: float) -> bool:
+        fired = self.plan.decide(site, p)
+        self.telemetry.count("fault_decisions", site=site, fired=fired,
+                             **self._il)
+        return fired
+
+    def _event(self, kind: str) -> None:
+        self.telemetry.count("fault_events", kind=kind, **self._il)
+
     def _free_slot(self) -> Optional[int]:
         for s in self.server.open_slots():
             if s not in self._reserved:
@@ -232,6 +289,7 @@ class FaultInjector:
             self.plan.record("leaf_death",
                              {"phase": phase, "version": ver, "leaf": leaf,
                               "lost_slots": list(lost)})
+            self._event("leaf_death")
             self._reroute_dead_leaf(leaf)
 
     def _reroute_dead_leaf(self, leaf: int) -> None:
@@ -244,10 +302,18 @@ class FaultInjector:
             if slot is None or slot // Bl != leaf:
                 continue
             self._reserved.discard(slot)
+            if e.dup or self._terminal.get(e.seq) == "landed":
+                # a duplicate copy (or a copy of an already-landed
+                # submission): re-encoding it onto a live leaf would
+                # double-store the delta
+                self.plan.record("duplicate_noop", e.seq)
+                e.ready = -1
+                continue
             new = self._free_slot()
             if new is None:
                 self.dropped.append((e.seq, "dead_leaf_no_capacity"))
                 self.plan.record("rerouted_drop", e.seq)
+                self._finalize(e.seq, "dropped", "dead_leaf_no_capacity")
                 e.ready = -1  # tombstone: drained as a drop below
                 continue
             self._reserved.add(new)
@@ -258,6 +324,7 @@ class FaultInjector:
                 e.slot = new
             self.plan.record("rerouted", {"seq": e.seq, "from_leaf": leaf,
                                           "to_slot": new})
+            self._event("rerouted")
         self._pending = [e for e in self._pending if e.ready != -1]
 
     def _deliver(self, e: _Pending, rng=None) -> None:
@@ -284,22 +351,35 @@ class FaultInjector:
                                                         e.client_version)
             self.plan.record("delivered",
                              {"seq": e.seq, "slot": slot, "version": ver})
+            self._finalize(e.seq, "landed")
             return
         # rejected (stale session / closed slot) or an idempotent duplicate
         # no-op.  Duplicates are done; rejections go through capped backoff.
-        if e.push_id and e.push_id in getattr(self.server,
-                                              "_delivered_tokens", set()):
+        # The terminal-state check covers mask_mode="client", where the
+        # duplicate copy carries the encoded ClientPush token rather than
+        # the raw push_id — retrying it under a fresh encoding would land
+        # the same submission twice.
+        if (self._terminal.get(e.seq) == "landed"
+                or (e.push_id and e.push_id in getattr(
+                    self.server, "_delivered_tokens", set()))):
+            self.plan.record("duplicate_noop", e.seq)
+            return
+        if e.dup:
+            # a failed wire duplicate never retries: re-encoding it would
+            # give it a fresh token, able to land beside the original
             self.plan.record("duplicate_noop", e.seq)
             return
         e.attempts += 1
         if e.attempts > self.retry.max_retries:
             self.dropped.append((e.seq, "retries_exhausted"))
             self.plan.record("retry_exhausted", e.seq)
+            self._finalize(e.seq, "dropped", "retries_exhausted")
             return
         new = self._free_slot()
         if new is None:
             self.dropped.append((e.seq, "no_open_slot"))
             self.plan.record("retry_no_slot", e.seq)
+            self._finalize(e.seq, "dropped", "no_open_slot")
             return
         self._reserved.add(new)
         if e.cp is not None:  # re-encode against the CURRENT session
@@ -311,6 +391,7 @@ class FaultInjector:
         self._pending.append(e)
         self.plan.record("retry", {"seq": e.seq, "attempt": e.attempts,
                                    "ready": e.ready})
+        self._event("retry")
 
     def _drain(self, rng=None, deadline: bool = False) -> None:
         progressed = True
@@ -341,10 +422,14 @@ class FaultInjector:
         self._tick += 1
         seq = self._seq
         self._seq += 1
+        self.telemetry.count("submitted_contributions", **self._il)
+        self.telemetry.gauge("in_flight_contributions",
+                             self._seq - len(self._terminal), **self._il)
         self._maybe_kill_leaves("ingest")
-        if self.plan.decide("client_death", self.plan.spec.p_client_death):
+        if self._decide("client_death", self.plan.spec.p_client_death):
             self.dropped.append((seq, "client_death"))
             self.plan.record("client_killed", seq)
+            self._finalize(seq, "killed")
             self._drain(rng)
             return False
         slot = self._free_slot()
@@ -352,6 +437,7 @@ class FaultInjector:
             # session saturated by in-flight reservations: count-and-drop
             self.dropped.append((seq, "no_open_slot"))
             self.plan.record("submit_no_slot", seq)
+            self._finalize(seq, "dropped", "no_open_slot")
             self._drain(rng)
             return False
         self._reserved.add(slot)
@@ -366,21 +452,24 @@ class FaultInjector:
             e.cp = self.server.encode_push(delta, client_version, slot=slot)
         else:
             e.slot = slot
-        if self.plan.decide("delay", self.plan.spec.p_delay):
+        if self._decide("delay", self.plan.spec.p_delay):
             e.ready = self._tick + self.plan.spec.delay_pushes
             self.plan.record("delayed", {"seq": seq, "ready": e.ready})
+            self._event("delayed")
         self._pending.append(e)
-        if self.plan.decide("duplicate", self.plan.spec.p_duplicate):
+        if self._decide("duplicate", self.plan.spec.p_duplicate):
             dup = _Pending(seq=seq, ready=e.ready, delta=delta,
                            client_version=client_version, cp=e.cp,
-                           slot=e.slot, push_id=e.push_id)
+                           slot=e.slot, push_id=e.push_id, dup=True)
             self._pending.append(dup)
             self.plan.record("duplicated", seq)
-        if (self.plan.decide("reorder", self.plan.spec.p_reorder)
+            self._event("duplicated")
+        if (self._decide("reorder", self.plan.spec.p_reorder)
                 and len(self._pending) >= 2):
             self._pending[-1], self._pending[-2] = (self._pending[-2],
                                                     self._pending[-1])
             self.plan.record("reordered", seq)
+            self._event("reordered")
         self._drain(rng)
         return True
 
@@ -391,8 +480,11 @@ class FaultInjector:
         Returns True when the deadline released at least one params update
         (counting sessions the landing arrivals completed themselves)."""
         before = self.server.fault_metrics["released_updates"]
-        self._drain(rng, deadline=True)
-        self._maybe_kill_leaves("flush")
-        self._drain(rng, deadline=True)  # re-routed arrivals land
-        flushed = self.server.flush(rng, force=force)
+        with self.telemetry.span("injector.flush", forced=force, **self._il):
+            self._drain(rng, deadline=True)
+            self._maybe_kill_leaves("flush")
+            self._drain(rng, deadline=True)  # re-routed arrivals land
+            flushed = self.server.flush(rng, force=force)
+        self.telemetry.gauge("in_flight_contributions",
+                             self._seq - len(self._terminal), **self._il)
         return flushed or self.server.fault_metrics["released_updates"] > before

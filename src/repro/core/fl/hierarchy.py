@@ -75,9 +75,11 @@ try:  # moved out of experimental on newer jax
 except ImportError:  # pragma: no cover
     shard_map = jax.shard_map
 
+from repro.core import telemetry as tele
 from repro.core.fl import aggregation as agg
 from repro.core.fl import secure_agg as sa
-from repro.core.fl.async_fl import ClientPush, batch_count, staleness_weight
+from repro.core.fl.async_fl import (FAULT_METRIC_KEYS, ClientPush,
+                                    batch_count, staleness_weight)
 from repro.core.fl.server_opt import build_server_opt
 from repro.launch.mesh import (LEAF_AXIS, leaves_per_device, make_agg_mesh,
                                make_leaf_mesh)
@@ -616,7 +618,8 @@ class ShardedAsyncServer:
                  mask_mode: str = "off", session_seed: int = 0x5A5E,
                  two_level: Optional[bool] = None,
                  mesh=None, use_pallas: Optional[bool] = None,
-                 strict: bool = True):
+                 strict: bool = True,
+                 telemetry: Optional["tele.Telemetry"] = None):
         if mask_mode not in ("off", "tee", "tee_stream", "client"):
             raise ValueError(f"mask_mode {mask_mode!r}")
         num_leaves = num_leaves or fl_cfg.num_leaves
@@ -648,11 +651,15 @@ class ShardedAsyncServer:
         # rows are recovered exactly like client dropouts (present-gated).
         self.strict = strict
         self.flush_quorum = float(getattr(fl_cfg, "flush_quorum", 0.0))
-        self.fault_metrics = {
-            "duplicate_pushes": 0, "rejected_pushes": 0,
-            "subquorum_deferrals": 0, "lost_contributions": 0,
-            "released_updates": 0, "dead_leaves": 0,
-        }
+        # one registry for every counter/span the tier emits (eid = an
+        # EPHEMERAL random id separating this instance's series)
+        self.telemetry = (telemetry if telemetry is not None
+                          else tele.get_default())
+        self._eid = tele.new_session_id()
+        self._tl = {"engine": "tier", "eid": self._eid}
+        # deprecated PR 8 spelling: a dict view over the registry counters
+        self.fault_metrics = tele.TelemetryCounterView(
+            self.telemetry, FAULT_METRIC_KEYS + ("dead_leaves",), **self._tl)
         self._token_counter = 0
         self._delivered_tokens: set = set()
         self._dead_leaves: set = set()
@@ -917,6 +924,13 @@ class ShardedAsyncServer:
         self._token_counter += 1
         return self._token_counter
 
+    def _span(self, name: str, **labels):
+        """Tier span: labeled with the ephemeral eid and the session."""
+        return self.telemetry.span(
+            name, round=self.version,
+            topology="tree" if self.two_level else "flat",
+            **self._tl, **labels)
+
     @property
     def live_capacity(self) -> int:
         """Session slots on leaves still alive — the quorum denominator."""
@@ -954,6 +968,8 @@ class ShardedAsyncServer:
             self._present[s] = False
         self._fill -= len(lost)
         self.fault_metrics["lost_contributions"] += len(lost)
+        self.telemetry.gauge("buffered_contributions", self._fill,
+                             **self._tl)
         if not self._streaming:
             # the "tee" engine gates rows by the device-side valid plane
             self._valid = self._valid.at[leaf].set(
@@ -1145,10 +1161,12 @@ class ShardedAsyncServer:
         if slots is None:
             slots = self._take_slots(K)
         stals = self._staleness_of(client_version, K)
-        rows, w, nrm, clipped = self._encode_batch(
-            deltas, jnp.asarray(slots, jnp.int32), jnp.asarray(stals),
-            self._session_key(),
-            jax.random.fold_in(self._push_base, self.version))
+        with self._span("encode_push", k=K) as sp:
+            rows, w, nrm, clipped = self._encode_batch(
+                deltas, jnp.asarray(slots, jnp.int32), jnp.asarray(stals),
+                self._session_key(),
+                jax.random.fold_in(self._push_base, self.version))
+            sp.fence(rows)
         # single-chunk pushes carry the bare packed (W,) word stream (the
         # legacy wire shape); multi-chunk pushes carry the per-chunk tuple
         row_of = ((lambda i: rows[0][i]) if len(rows) == 1
@@ -1212,18 +1230,20 @@ class ShardedAsyncServer:
             return 0
         cps = kept
         stals = np.asarray([cp.staleness for cp in cps], np.float32)
-        idx, lsl, valid, st = self._route_by_leaf(slots, stals)
-        crows = [cp.row if isinstance(cp.row, tuple) else (cp.row,)
-                 for cp in cps]
-        wrows = tuple(jnp.stack([cr[c] for cr in crows])
-                      for c in range(self._plan.num_chunks))
-        (self._bufs, self._wts, self._norms, self._clips,
-         self._stal) = self._scatter_packed(
-            self._bufs, self._wts, self._norms, self._clips, self._stal,
-            wrows, idx, lsl, valid, st,
-            jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
-            jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
-            jnp.stack([jnp.asarray(cp.clipped) for cp in cps]))
+        with self._span("push_encoded", k=len(cps)) as sp:
+            idx, lsl, valid, st = self._route_by_leaf(slots, stals)
+            crows = [cp.row if isinstance(cp.row, tuple) else (cp.row,)
+                     for cp in cps]
+            wrows = tuple(jnp.stack([cr[c] for cr in crows])
+                          for c in range(self._plan.num_chunks))
+            (self._bufs, self._wts, self._norms, self._clips,
+             self._stal) = self._scatter_packed(
+                self._bufs, self._wts, self._norms, self._clips, self._stal,
+                wrows, idx, lsl, valid, st,
+                jnp.stack([jnp.asarray(cp.weight) for cp in cps]),
+                jnp.stack([jnp.asarray(cp.norm) for cp in cps]),
+                jnp.stack([jnp.asarray(cp.clipped) for cp in cps]))
+            sp.fence(self._bufs)
         for cp in cps:
             if cp.token:
                 self._delivered_tokens.add(cp.token)
@@ -1281,24 +1301,31 @@ class ShardedAsyncServer:
                  else [slot_of[i] for i in kept])
         stals = self._staleness_of(client_version, K)
         if not self._streaming:  # "tee": store raw rows, mask lane at flush
-            leaf, local = self._leaf_local(slots)
-            self._bufs, self._stal, self._valid = self._scatter_raw(
-                self._bufs, self._stal, self._valid, leaf, local, deltas,
-                jnp.asarray(stals))
+            with self._span("ingest", k=K, lane="raw") as sp:
+                leaf, local = self._leaf_local(slots)
+                self._bufs, self._stal, self._valid = self._scatter_raw(
+                    self._bufs, self._stal, self._valid, leaf, local, deltas,
+                    jnp.asarray(stals))
+                sp.fence(self._bufs)
             self._mark(slots, rng)
             return
-        idx, lsl, valid, st = self._route_by_leaf(slots, stals)
-        (self._bufs, self._wts, self._norms, self._clips,
-         self._stal) = self._ingest_sharded(
-            self._bufs, self._wts, self._norms, self._clips, self._stal,
-            deltas, idx, lsl, valid, st, self._session_key(),
-            jax.random.fold_in(self._push_base, self.version))
+        with self._span("ingest", k=K, lane="stream") as sp:
+            idx, lsl, valid, st = self._route_by_leaf(slots, stals)
+            (self._bufs, self._wts, self._norms, self._clips,
+             self._stal) = self._ingest_sharded(
+                self._bufs, self._wts, self._norms, self._clips, self._stal,
+                deltas, idx, lsl, valid, st, self._session_key(),
+                jax.random.fold_in(self._push_base, self.version))
+            sp.fence(self._bufs)
         self._mark(slots, rng)
 
     def _mark(self, slots, rng) -> None:
         for s in slots:
             self._present[s] = True
         self._fill += len(slots)
+        self.telemetry.count("stored_contributions", len(slots), **self._tl)
+        self.telemetry.gauge("buffered_contributions", self._fill,
+                             **self._tl)
         # with dead leaves the session can never reach buffer_size, so the
         # deadline trigger is the LIVE capacity; _apply then routes through
         # the recovering flush step (dead slots are absent -> recovered)
@@ -1318,11 +1345,12 @@ class ShardedAsyncServer:
         overrides.  Returns True when a params update was released."""
         if self._fill <= 0:
             return False
-        need = math.ceil(self.flush_quorum * max(self.live_capacity, 1))
-        if not force and self._fill < need:
-            self.fault_metrics["subquorum_deferrals"] += 1
-            return False
-        self._apply(rng)
+        with self._span("flush", forced=force, fill=self._fill):
+            need = math.ceil(self.flush_quorum * max(self.live_capacity, 1))
+            if not force and self._fill < need:
+                self.fault_metrics["subquorum_deferrals"] += 1
+                return False
+            self._apply(rng)
         return True
 
     # -- server step --------------------------------------------------------
@@ -1330,28 +1358,34 @@ class ShardedAsyncServer:
         if rng is None:  # deterministic per-version stream for rounding/noise
             rng = jax.random.fold_in(jax.random.PRNGKey(0xA5), self.version)
         L, Bl = self.num_leaves, self.leaf_buffer
-        if self._streaming:
-            present = jnp.asarray(
-                [1.0 if p else 0.0 for p in self._present],
-                jnp.float32).reshape(L, Bl)
-            if self._fill >= self.buffer_size:
-                step = self._step  # complete session: no recovery needed
+        recovery = self._fill < self.buffer_size
+        with self._span("decode", recovery=recovery, fill=self._fill) as sp:
+            if self._streaming:
+                present = jnp.asarray(
+                    [1.0 if p else 0.0 for p in self._present],
+                    jnp.float32).reshape(L, Bl)
+                if not recovery:
+                    step = self._step  # complete session: no recovery needed
+                else:
+                    if self._flush_step is None:
+                        self._flush_step = self._build_flush_step()
+                    step = self._flush_step  # dropout recovery
+                self.params, self._opt_state, self.last_metrics = step(
+                    self.params, self._opt_state, self._bufs, present,
+                    self._wts, self._stal, self._norms, self._clips,
+                    self._session_key(), rng)
             else:
-                if self._flush_step is None:
-                    self._flush_step = self._build_flush_step()
-                step = self._flush_step  # dropout recovery
-            self.params, self._opt_state, self.last_metrics = step(
-                self.params, self._opt_state, self._bufs, present, self._wts,
-                self._stal, self._norms, self._clips, self._session_key(),
-                rng)
-        else:
-            self.params, self._opt_state, self.last_metrics = self._step(
-                self.params, self._opt_state, self._bufs, self._stal,
-                self._valid, rng)
-            self._valid = jnp.zeros_like(self._valid)
+                self.params, self._opt_state, self.last_metrics = self._step(
+                    self.params, self._opt_state, self._bufs, self._stal,
+                    self._valid, rng)
+                self._valid = jnp.zeros_like(self._valid)
+            sp.fence(self.params)
         self._present = [False] * self.buffer_size
         self.version += 1
         self._applied_updates += self._fill
+        self.telemetry.count("aggregated_contributions", self._fill,
+                             **self._tl)
+        self.telemetry.gauge("buffered_contributions", 0, **self._tl)
         self._fill = 0
         self._dead_leaves.clear()  # restarted leaves join the new session
         self.fault_metrics["released_updates"] += 1

@@ -28,11 +28,13 @@ Two execution strategies over the cohort:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+import itertools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tele
 from repro.core.fl import aggregation as agg
 from repro.core.fl.server_opt import build_server_opt
 
@@ -139,25 +141,35 @@ _sa_decode_tree = agg.decode_tree
 # ---------------------------------------------------------------------------
 def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
                      client_parallel: bool = True,
-                     clients_per_chunk: int = 0) -> Callable:
+                     clients_per_chunk: int = 0,
+                     telemetry: Optional["tele.Telemetry"] = None) -> Callable:
     """Returns round_step(state, batch, rng) -> (state, metrics).
 
     batch: pytree whose leaves have leading axis `cohort_size`
            (per-client on-device data), plus optional 'weight' (cohort,)
            from the Orchestrator's sample-submission control.
-    """
-    client_update = build_client_update(loss_fn, fl_cfg)
-    server = build_server_opt(fl_cfg)
-    spec = agg.make_spec(fl_cfg, cohort_size)
-    use_secure_agg = spec.use_secure_agg
-    sa_scale = spec.sa_scale
-    masked = use_secure_agg and getattr(fl_cfg, "secure_agg_masked", False)
 
-    if clients_per_chunk <= 0:
-        clients_per_chunk = cohort_size if client_parallel else 1
-    m = clients_per_chunk
-    assert cohort_size % m == 0
-    n_chunks = cohort_size // m
+    The returned step is instrumented with ``round.execute`` spans on the
+    ``telemetry`` registry (the process default when None).  The span label
+    is a host-side call counter, never a traced value — callers are free to
+    ``jax.jit`` the returned function (spans then record at trace time
+    only, which is what a jitted replay can observe anyway).
+    """
+    tel = telemetry if telemetry is not None else tele.get_default()
+    with tel.span("round.setup", kind="sync", cohort=cohort_size):
+        client_update = build_client_update(loss_fn, fl_cfg)
+        server = build_server_opt(fl_cfg)
+        spec = agg.make_spec(fl_cfg, cohort_size)
+        use_secure_agg = spec.use_secure_agg
+        sa_scale = spec.sa_scale
+        masked = use_secure_agg and getattr(fl_cfg, "secure_agg_masked",
+                                            False)
+
+        if clients_per_chunk <= 0:
+            clients_per_chunk = cohort_size if client_parallel else 1
+        m = clients_per_chunk
+        assert cohort_size % m == 0
+        n_chunks = cohort_size // m
 
     def one_client(params, cbatch, rng):
         delta, loss = client_update(params, cbatch, rng)
@@ -268,14 +280,34 @@ def build_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         }
         return FLState(new_params, new_opt, state.round_idx + 1), metrics
 
-    return round_step
+    return _instrument_step(round_step, tel, "sync")
+
+
+def _instrument_step(round_step: Callable, tel: "tele.Telemetry",
+                     kind: str) -> Callable:
+    """Wrap a round step with ``round.execute`` spans.
+
+    The ``call`` label is a host-side counter — NOT ``state.round_idx`` —
+    so the wrapper never reads a traced value (it must survive being
+    jitted by the caller)."""
+    calls = itertools.count()
+
+    def instrumented_round_step(state, batch, rng):
+        with tel.span("round.execute", kind=kind, call=next(calls)) as sp:
+            out = round_step(state, batch, rng)
+            sp.fence(out)
+        return out
+
+    return instrumented_round_step
 
 
 # ---------------------------------------------------------------------------
 # Cohort-sharded synchronous rounds — the aggregation tier's sync path
 # ---------------------------------------------------------------------------
 def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
-                             num_leaves: int, mesh=None) -> Callable:
+                             num_leaves: int, mesh=None,
+                             telemetry: Optional["tele.Telemetry"] = None
+                             ) -> Callable:
     """A synchronous round sharded over the aggregation tier's leaf mesh.
 
     The cohort splits into ``num_leaves`` contiguous shards; each leaf
@@ -301,18 +333,21 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         shard_map = jax.shard_map
     from repro.launch.mesh import LEAF_AXIS, make_agg_mesh
 
-    assert cohort_size % num_leaves == 0
-    m = cohort_size // num_leaves
-    client_update = build_client_update(loss_fn, fl_cfg)
-    server = build_server_opt(fl_cfg)
-    spec = agg.make_spec(fl_cfg, cohort_size)
-    if not spec.use_secure_agg:
-        raise ValueError("the sharded tier aggregates in the secure-agg "
-                         "integer field: set secure_agg_bits > 0")
-    masked = getattr(fl_cfg, "secure_agg_masked", False)
-    if mesh is None:
-        mesh = make_agg_mesh(num_leaves)
-    sa_scale = spec.sa_scale
+    tel = telemetry if telemetry is not None else tele.get_default()
+    with tel.span("round.setup", kind="sharded", cohort=cohort_size,
+                  leaves=num_leaves):
+        assert cohort_size % num_leaves == 0
+        m = cohort_size // num_leaves
+        client_update = build_client_update(loss_fn, fl_cfg)
+        server = build_server_opt(fl_cfg)
+        spec = agg.make_spec(fl_cfg, cohort_size)
+        if not spec.use_secure_agg:
+            raise ValueError("the sharded tier aggregates in the secure-agg "
+                             "integer field: set secure_agg_bits > 0")
+        masked = getattr(fl_cfg, "secure_agg_masked", False)
+        if mesh is None:
+            mesh = make_agg_mesh(num_leaves)
+        sa_scale = spec.sa_scale
 
     def round_step(state: FLState, batch, rng):
         params = state.params
@@ -385,7 +420,7 @@ def build_sharded_round_step(loss_fn: Callable, fl_cfg, *, cohort_size: int,
         }
         return FLState(new_params, new_opt, state.round_idx + 1), metrics
 
-    return jax.jit(round_step)
+    return _instrument_step(jax.jit(round_step), tel, "sharded")
 
 
 def rounds_to_epsilon(fl_cfg, cohort_size: int, population: int, rounds: int) -> float:

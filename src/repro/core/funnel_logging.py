@@ -7,6 +7,7 @@ session id (random, unlinkable to a user) — never a device/user identifier.
 """
 from __future__ import annotations
 
+import re
 import secrets
 from collections import defaultdict
 from dataclasses import dataclass, field
@@ -29,6 +30,57 @@ class FunnelEvent:
 
 _FORBIDDEN_KEYS = ("device_id", "user", "email", "phone", "label", "feature")
 
+# Value-shaped identifiers the key scan cannot catch: a detail string (or a
+# telemetry label value) that never says "email" can still CONTAIN one.
+_VALUE_PATTERNS = (
+    (re.compile(r"[\w.+-]+@[\w-]+\.[\w.-]{2,}"), "an email-shaped token"),
+    (re.compile(r"\d{9,}"), "a long digit run (phone/IMEI-shaped)"),
+)
+
+# Label keys sanctioned to carry an EPHEMERAL random id (new_session_id()):
+# unlinkable to a user by construction, and the only identifier-shaped value
+# allowed through the de-identification gate.
+_EPHEMERAL_LABEL_KEYS = frozenset({"sid", "eid", "session", "session_id"})
+
+
+def pii_violation(text: str) -> Optional[str]:
+    """Why ``text`` may not be logged/exported, or None if it is clean.
+
+    Guards both dimensions of the paper's de-identification contract: the
+    forbidden KEY vocabulary (a record must not even talk about device ids,
+    users, labels or features) and identifier-shaped VALUES (emails, long
+    digit runs) that a key scan alone would miss.
+    """
+    low = text.lower()
+    for bad in _FORBIDDEN_KEYS:
+        if bad in low:
+            return f"mentions {bad!r}"
+    for pat, what in _VALUE_PATTERNS:
+        if pat.search(text):
+            return f"contains {what}"
+    return None
+
+
+def scrub_label(key: str, value) -> None:
+    """De-identification gate for one telemetry/span label.
+
+    Raises ``ValueError`` when either the label key or a string value trips
+    :func:`pii_violation`.  Keys in ``_EPHEMERAL_LABEL_KEYS`` may carry
+    ephemeral random ids (hex tokens), so their VALUES are exempt — the key
+    itself is still checked.
+    """
+    bad = pii_violation(key)
+    if bad is not None:
+        raise ValueError(
+            f"privacy violation: label key {key!r} {bad} — logging of "
+            "identifying information is forbidden")
+    if isinstance(value, str) and key not in _EPHEMERAL_LABEL_KEYS:
+        bad = pii_violation(value)
+        if bad is not None:
+            raise ValueError(
+                f"privacy violation: label {key}={value!r} {bad} — logging "
+                "of identifying information is forbidden")
+
 
 class FunnelLogger:
     """Server-side sink of de-identified events + integrity checking."""
@@ -42,12 +94,11 @@ class FunnelLogger:
             detail: str = "") -> None:
         if phase not in self.phases:
             raise ValueError(f"unknown phase {phase!r}")
-        low = detail.lower()
-        for bad in _FORBIDDEN_KEYS:
-            if bad in low:
-                raise ValueError(
-                    f"privacy violation: detail mentions {bad!r} — logging of "
-                    "identifying information is forbidden")
+        bad = pii_violation(detail)
+        if bad is not None:
+            raise ValueError(
+                f"privacy violation: detail {bad} — logging of "
+                "identifying information is forbidden")
         key = (session_id, phase, step)
         if key in self._dedup:  # session-scoped dedup across use cases
             return

@@ -1,0 +1,15 @@
+"""Observability exporters + the funnel-conservation reconciler.
+
+Everything here consumes a :class:`repro.core.telemetry.Telemetry`
+snapshot; nothing re-validates privacy because the registry's record-time
+de-identification gate already did.
+"""
+from repro.core.obs.conservation import ConservationReport, reconcile
+from repro.core.obs.export import (chrome_trace, prometheus_text,
+                                   write_chrome_trace, write_prometheus,
+                                   write_round_csv)
+
+__all__ = [
+    "ConservationReport", "reconcile", "chrome_trace", "prometheus_text",
+    "write_chrome_trace", "write_prometheus", "write_round_csv",
+]

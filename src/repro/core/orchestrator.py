@@ -15,6 +15,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import telemetry as tele
 from repro.core.analytics.label_balance import DropoffPolicy, policy_from_ratio
 from repro.core.device_sim import DevicePopulation, DeviceState
 from repro.core.funnel_logging import FunnelLogger, new_session_id
@@ -77,10 +78,15 @@ class CohortSelection(List[DeviceState]):
 
 class Orchestrator:
     def __init__(self, population: DevicePopulation, metadata: MetadataStore,
-                 logger: Optional[FunnelLogger] = None, seed: int = 0):
+                 logger: Optional[FunnelLogger] = None, seed: int = 0,
+                 telemetry: Optional["tele.Telemetry"] = None):
         self.population = population
         self.metadata = metadata
         self.logger = logger or FunnelLogger(FUNNEL_PHASES)
+        self.telemetry = (telemetry if telemetry is not None
+                          else tele.get_default())
+        self._eid = new_session_id()
+        self._ol = {"component": "orchestrator", "eid": self._eid}
         self.rs = np.random.RandomState(seed)
         self.round_idx = 0
         # trailing per-round eligibility pass rates -> adaptive over_select
@@ -131,33 +137,42 @@ class Orchestrator:
         """
         if over_select is None:
             over_select = self._adaptive_over_select()
-        candidates = self.population.sample(int(cohort_size * over_select))
-        cohort = CohortSelection()
-        checked = eligible = 0
-        for d in candidates:
-            sid = new_session_id()
-            self.logger.log(sid, "scheduled", "selected", True)
-            ok, reason = self.check_eligibility(d)
-            self.logger.log(sid, "eligibility", reason, ok)
-            checked += 1
-            if not ok:
-                continue
-            eligible += 1
-            self.logger.log(sid, "data_init", "metadata_fetch", True)
-            cohort.append(d)
-            if len(cohort) >= cohort_size:
-                break
-        rate = eligible / checked if checked else 0.0
-        self._eligibility_rates.append(rate)
-        cohort.requested = int(cohort_size)
-        cohort.shortfall = max(0, cohort_size - len(cohort))
-        cohort.over_select_used = float(over_select)
-        cohort.eligibility_rate = rate
-        if cohort.shortfall > 0:
-            self.logger.log(
-                new_session_id(), "scheduled", "cohort_shortfall", False,
-                detail=f"short={cohort.shortfall}/{cohort_size} "
-                       f"pass_rate={rate:.2f} over_select={over_select:.2f}")
+        tel = self.telemetry
+        with tel.span("cohort_select", round=self.round_idx, **self._ol):
+            candidates = self.population.sample(int(cohort_size * over_select))
+            cohort = CohortSelection()
+            checked = eligible = 0
+            for d in candidates:
+                sid = new_session_id()
+                self.logger.log(sid, "scheduled", "selected", True)
+                ok, reason = self.check_eligibility(d)
+                self.logger.log(sid, "eligibility", reason, ok)
+                checked += 1
+                tel.count("cohort_checked", **self._ol)
+                if not ok:
+                    tel.count("cohort_ineligible", reason=reason, **self._ol)
+                    continue
+                eligible += 1
+                tel.count("cohort_eligible", **self._ol)
+                self.logger.log(sid, "data_init", "metadata_fetch", True)
+                cohort.append(d)
+                if len(cohort) >= cohort_size:
+                    break
+            rate = eligible / checked if checked else 0.0
+            self._eligibility_rates.append(rate)
+            cohort.requested = int(cohort_size)
+            cohort.shortfall = max(0, cohort_size - len(cohort))
+            cohort.over_select_used = float(over_select)
+            cohort.eligibility_rate = rate
+            tel.gauge("eligibility_rate", rate, **self._ol)
+            tel.gauge("over_select_factor", float(over_select), **self._ol)
+            if cohort.shortfall > 0:
+                tel.count("cohort_shortfall", cohort.shortfall, **self._ol)
+                self.logger.log(
+                    new_session_id(), "scheduled", "cohort_shortfall", False,
+                    detail=f"short={cohort.shortfall}/{cohort_size} "
+                           f"pass_rate={rate:.2f} "
+                           f"over_select={over_select:.2f}")
         return cohort
 
     # --- sample submission control (label balancing) ------------------------

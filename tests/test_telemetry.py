@@ -1,0 +1,405 @@
+"""The telemetry spine: registry semantics, privacy gate, exporters, and
+the headline funnel-conservation invariant.
+
+The conservation property (the PR's acceptance bar): for any simulated run
+— including under a seeded chaotic :class:`FaultPlan` with client deaths,
+duplicates, delays, reorders and a whole-leaf death — the exported
+telemetry reconciles EXACTLY:
+
+    submitted = aggregated + (dropped + lost) + killed
+                + (in_flight + buffered)
+
+with ``aggregated`` cross-checked against the engine's own decode count.
+Enforced per mask mode on the flat server everywhere, and on both tier
+topologies under 8 forced host devices.
+"""
+import csv
+import dataclasses
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import telemetry as tele
+from repro.core.fl.async_fl import AsyncServer
+from repro.core.fl.faults import FaultInjector, FaultPlan, FaultSpec
+from repro.core.obs import (chrome_trace, prometheus_text, reconcile,
+                            write_chrome_trace, write_prometheus,
+                            write_round_csv)
+from repro.core.telemetry import (SIZE_BUCKETS, Telemetry,
+                                  TelemetryCounterView)
+
+D = 41
+FL = FLConfig(clip_norm=1.0, server_lr=1.0, secure_agg_bits=24)
+MODES = ("off", "tee", "tee_stream", "client")
+
+multidev = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="leaf mesh needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+CHAOS = FaultSpec(p_client_death=0.1, p_duplicate=0.3, p_delay=0.3,
+                  delay_pushes=2, p_reorder=0.3, seed=5)
+
+
+def _params():
+    return {"w": jnp.zeros((D,), jnp.float32),
+            "b": jnp.zeros((3,), jnp.float32)}
+
+
+def _deltas(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        out.append({"w": 0.1 * jax.random.normal(k, (D,)),
+                    "b": 0.1 * jax.random.normal(jax.random.fold_in(k, 1),
+                                                 (3,))})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_counters_gauges(self):
+        tel = Telemetry()
+        tel.count("pushes")
+        tel.count("pushes", 2, mode="tee")
+        assert tel.value("pushes") == 1
+        assert tel.value("pushes", mode="tee") == 2
+        assert tel.total("pushes") == 3
+        tel.gauge("fill", 5, eid="a")
+        tel.gauge("fill", 5, eid="a")  # set, not add
+        tel.gauge("fill", 2, eid="b")
+        assert tel.gauge_total("fill") == 7
+
+    def test_histogram_buckets_fixed(self):
+        tel = Telemetry()
+        tel.declare_histogram("bytes", SIZE_BUCKETS)
+        tel.observe("bytes", 3.0)
+        tel.observe("bytes", 1e9)  # lands in +Inf
+        (key, h), = tel.histograms().items()
+        assert h.n == 2 and h.counts[-1] == 1
+        with pytest.raises(ValueError):
+            tel.declare_histogram("bytes", (1.0, 2.0))
+
+    def test_span_nesting_and_duration_histogram(self):
+        tel = Telemetry(record_spans=True)
+        with tel.span("outer", round=0):
+            with tel.span("inner", round=0):
+                pass
+        outer = next(s for s in tel.spans if s.name == "outer")
+        inner = next(s for s in tel.spans if s.name == "inner")
+        assert inner.parent == outer.sid and outer.parent is None
+        assert inner.t0_ns >= outer.t0_ns
+        assert inner.t0_ns + inner.dur_ns <= outer.t0_ns + outer.dur_ns
+        hks = {name for (name, _) in tel.histograms()}
+        assert "span_duration_seconds" in hks
+
+    def test_noop_recorder_counts_but_never_records_spans(self):
+        tel = Telemetry(record_spans=False)
+        with tel.span("flush", round=1) as sp:
+            sp.fence(jnp.zeros(()))
+            tel.count("stored_contributions")
+        assert tel.spans == []
+        assert tel.total("stored_contributions") == 1
+
+    def test_span_cap_counts_drops(self):
+        tel = Telemetry(record_spans=True, max_spans=1)
+        with tel.span("a"):
+            pass
+        with tel.span("b"):
+            pass
+        assert len(tel.spans) == 1
+        assert tel.value("dropped_spans") == 1
+
+    def test_set_default_roundtrip(self):
+        mine = Telemetry(record_spans=True)
+        prev = tele.set_default(mine)
+        try:
+            assert tele.get_default() is mine
+        finally:
+            tele.set_default(prev)
+        assert tele.get_default() is prev
+
+
+# ---------------------------------------------------------------------------
+# the de-identification gate
+# ---------------------------------------------------------------------------
+class TestPrivacyGate:
+    def test_forbidden_label_key_rejected(self):
+        tel = Telemetry()
+        with pytest.raises(ValueError):
+            tel.count("pushes", device_id=42)
+        with pytest.raises(ValueError):
+            tel.gauge("fill", 1, user="alice")
+
+    def test_identifier_shaped_values_rejected(self):
+        tel = Telemetry()
+        with pytest.raises(ValueError):
+            tel.count("pushes", origin="bob@example.com")
+        with pytest.raises(ValueError):
+            tel.count("pushes", origin="4915551234567")  # IMEI-shaped
+
+    def test_ephemeral_ids_allowed_under_sanctioned_keys_only(self):
+        tel = Telemetry(record_spans=True)
+        eid = tele.new_session_id()
+        tel.count("pushes", eid=eid)  # hex id under the eid key: fine
+        with tel.span("flush", sid=eid):
+            pass
+        # the same hex value under a NON-ephemeral key must not have been
+        # whitelisted by the pass above
+        long_digits = "1234567890"
+        with pytest.raises(ValueError):
+            tel.count("pushes", origin=long_digits)
+
+    def test_no_pii_reaches_exports(self):
+        tel = Telemetry(record_spans=True)
+        srv = AsyncServer(_params(), FL, buffer_size=4, mask_mode="client",
+                          strict=False, telemetry=tel)
+        for d in _deltas(5):
+            srv.push(d, srv.version)
+        srv.flush(force=True)
+        forbidden = ("device_id", "user", "email", "phone")
+        trace = json.dumps(chrome_trace(tel))
+        prom = prometheus_text(tel)
+        for needle in forbidden:
+            assert needle not in trace and needle not in prom
+
+
+# ---------------------------------------------------------------------------
+# the fault_metrics deprecation shim
+# ---------------------------------------------------------------------------
+class TestCounterView:
+    def test_dict_spellings(self):
+        tel = Telemetry()
+        view = TelemetryCounterView(tel, ("a_total", "b_total"), eid="x")
+        view["a_total"] += 2
+        view["b_total"] = 5
+        assert dict(view) == {"a_total": 2, "b_total": 5}
+        assert len(view) == 2 and set(view) == {"a_total", "b_total"}
+        assert tel.value("a_total", eid="x") == 2
+        with pytest.raises(KeyError):
+            view["unknown"]
+        with pytest.raises(TypeError):
+            del view["a_total"]
+
+    def test_server_fault_metrics_is_registry_backed(self):
+        tel = Telemetry()
+        srv = AsyncServer(_params(), FL, buffer_size=4, strict=False,
+                          telemetry=tel)
+        srv.fault_metrics["rejected_pushes"] += 3
+        assert tel.total("rejected_pushes") == 3
+        assert srv.fault_metrics["rejected_pushes"] == 3
+
+
+# ---------------------------------------------------------------------------
+# funnel conservation — the headline invariant
+# ---------------------------------------------------------------------------
+def _drive_chaos(srv, tel, n=40, spec=CHAOS):
+    inj = FaultInjector(srv, FaultPlan(spec))
+    for d in _deltas(n):
+        inj.push(d, srv.version)
+    inj.flush(force=True)
+    return inj
+
+
+class TestConservation:
+    @pytest.mark.parametrize("mode", MODES)
+    def test_flat_chaos_conserves(self, mode):
+        tel = Telemetry(record_spans=True)
+        srv = AsyncServer(_params(), FL, buffer_size=4, mask_mode=mode,
+                          strict=False, telemetry=tel)
+        inj = _drive_chaos(srv, tel)
+        rep = reconcile(tel, applied_updates=srv._applied_updates)
+        assert rep.ok, rep.problems
+        assert rep.totals["submitted"] == 40
+        assert rep.totals["landed"] == len(inj.delivered)
+        # everything drained at the forced deadline flush
+        assert rep.totals["in_flight"] == 0
+        assert rep.totals["buffered"] == 0
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_flat_chaos_conserves_under_replay(self, mode):
+        tel = Telemetry(record_spans=True)
+        srv = AsyncServer(_params(), FL, buffer_size=4, mask_mode=mode,
+                          strict=False, telemetry=tel)
+        inj = _drive_chaos(srv, tel)
+        tel2 = Telemetry(record_spans=True)
+        srv2 = AsyncServer(_params(), FL, buffer_size=4, mask_mode=mode,
+                           strict=False, telemetry=tel2)
+        inj2 = FaultInjector(srv2, inj.plan.replayed())
+        for d in _deltas(40):
+            inj2.push(d, srv2.version)
+        inj2.flush(force=True)
+        rep = reconcile(tel2, applied_updates=srv2._applied_updates)
+        assert rep.ok, rep.problems
+        assert rep.totals == reconcile(tel).totals
+
+    def test_duplicates_never_double_land(self):
+        # regression: in mask_mode="client" a failed wire duplicate used to
+        # retry under a fresh encoding token and land beside the original
+        tel = Telemetry()
+        srv = AsyncServer(_params(), FL, buffer_size=4, mask_mode="client",
+                          strict=False, telemetry=tel)
+        inj = _drive_chaos(srv, tel)
+        seqs = [s for s, _ in inj.delivered]
+        assert len(seqs) == len(set(seqs))
+        assert srv.fault_metrics["duplicate_pushes"] > 0
+
+    @multidev
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("two_level", (False, True))
+    def test_tier_chaos_with_leaf_death_conserves(self, mode, two_level):
+        from repro.core.fl.hierarchy import ShardedAsyncServer
+        spec = dataclasses.replace(CHAOS, leaf_deaths=(("ingest", 1, 1),))
+        tel = Telemetry(record_spans=True)
+        srv = ShardedAsyncServer(_params(), FL, num_leaves=2, leaf_buffer=2,
+                                 mask_mode=mode, two_level=two_level,
+                                 strict=False, telemetry=tel)
+        _drive_chaos(srv, tel, n=24, spec=spec)
+        rep = reconcile(tel, applied_updates=srv._applied_updates)
+        assert rep.ok, rep.problems
+        assert rep.totals["lost"] > 0  # the leaf death cost something
+        assert srv.fault_metrics["dead_leaves"] >= 1
+
+    def test_reconcile_flags_imbalance(self):
+        tel = Telemetry()
+        tel.count("stored_contributions", 5)
+        tel.count("aggregated_contributions", 3)  # 2 unaccounted
+        rep = reconcile(tel)
+        assert not rep.ok
+        assert any("stored == aggregated" in p for p in rep.problems)
+
+    def test_decode_count_cross_check(self):
+        tel = Telemetry()
+        srv = AsyncServer(_params(), FL, buffer_size=4, strict=False,
+                          telemetry=tel)
+        for d in _deltas(4):
+            srv.push(d, srv.version)
+        assert reconcile(tel, applied_updates=srv._applied_updates).ok
+        assert not reconcile(tel, applied_updates=99).ok
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+def _recorded_run():
+    tel = Telemetry(record_spans=True)
+    srv = AsyncServer(_params(), FL, buffer_size=4, mask_mode="client",
+                      strict=False, telemetry=tel)
+    for d in _deltas(6):
+        srv.push(d, srv.version)
+    srv.flush(force=True)
+    return tel, srv
+
+
+_PROM_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9.e+-]+$")
+
+
+class TestExporters:
+    def test_chrome_trace_schema(self, tmp_path):
+        tel, _ = _recorded_run()
+        path = tmp_path / "trace.json"
+        write_chrome_trace(tel, str(path))
+        doc = json.loads(path.read_text())
+        events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+        assert events, "no complete events exported"
+        for e in events:
+            assert set(e) >= {"name", "ph", "pid", "tid", "ts", "dur"}
+            assert e["ts"] >= 0 and e["dur"] >= 0
+        names = {e["name"] for e in events}
+        assert {"push", "encode_push", "push_encoded", "decode",
+                "flush"} <= names
+        # parent containment: every child lies inside its parent's window
+        by_sid = {e["args"]["sid"]: e for e in events}
+        for e in events:
+            p = e["args"].get("parent")
+            if p is not None and p in by_sid:
+                pe = by_sid[p]
+                assert pe["ts"] <= e["ts"]
+                assert e["ts"] + e["dur"] <= pe["ts"] + pe["dur"] + 1e-3
+
+    def test_prometheus_text_parses(self, tmp_path):
+        tel, _ = _recorded_run()
+        path = tmp_path / "metrics.prom"
+        write_prometheus(tel, str(path))
+        text = path.read_text()
+        assert "# TYPE stored_contributions counter" in text
+        for line in text.strip().splitlines():
+            if line.startswith("#"):
+                assert re.match(
+                    r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* "
+                    r"(counter|gauge|histogram)$", line), line
+            else:
+                assert _PROM_LINE.match(line), line
+
+    def test_prometheus_histogram_cumulative(self):
+        tel = Telemetry()
+        tel.observe("lat", 1e-6)
+        tel.observe("lat", 1.0)
+        text = prometheus_text(tel)
+        buckets = [int(line.rsplit(" ", 1)[1])
+                   for line in text.splitlines()
+                   if line.startswith("lat_bucket")]
+        assert buckets == sorted(buckets)  # cumulative => monotone
+        assert buckets[-1] == 2  # +Inf bucket == _count
+        assert "lat_count 2" in text
+
+    def test_round_csv(self, tmp_path):
+        tel, _ = _recorded_run()
+        path = tmp_path / "rounds.csv"
+        nrows = write_round_csv(tel, str(path))
+        assert nrows > 0
+        with open(path) as f:
+            rows = list(csv.reader(f))
+        assert rows[0] == ["round", "span", "calls", "total_ms", "max_ms"]
+        assert len(rows) == nrows + 1
+        spans = {r[1] for r in rows[1:]}
+        assert "decode" in spans
+
+
+# ---------------------------------------------------------------------------
+# seam coverage: round builders and the orchestrator
+# ---------------------------------------------------------------------------
+class TestSeams:
+    def test_round_step_spans(self):
+        from repro.core.fl.round import build_round_step, init_fl_state
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2), {}
+
+        tel = Telemetry(record_spans=True)
+        fl = dataclasses.replace(FL, local_steps=1)
+        step = build_round_step(loss_fn, fl, cohort_size=4, telemetry=tel)
+        params = {"w": jnp.zeros((3,), jnp.float32)}
+        state = init_fl_state(params, fl)
+        batch = {"x": jnp.ones((4, 2, 3)), "y": jnp.zeros((4, 2))}
+        state, _ = step(state, batch, jax.random.PRNGKey(0))
+        state, _ = step(state, batch, jax.random.PRNGKey(1))
+        names = [s.name for s in tel.spans]
+        assert names.count("round.setup") == 1
+        assert names.count("round.execute") == 2
+        calls = [s.labels["call"] for s in tel.spans
+                 if s.name == "round.execute"]
+        assert calls == [0, 1]
+
+    def test_orchestrator_telemetry(self):
+        from repro.core.device_sim import DevicePopulation
+        from repro.core.orchestrator import MetadataStore, Orchestrator
+        tel = Telemetry(record_spans=True)
+        pop = DevicePopulation(n=64, seed=3)
+        orch = Orchestrator(pop, MetadataStore(), seed=0, telemetry=tel)
+        cohort = orch.select_cohort(8)
+        assert tel.total("cohort_checked") >= len(cohort)
+        assert tel.total("cohort_eligible") == \
+            tel.total("cohort_checked") - tel.total("cohort_ineligible")
+        assert any(s.name == "cohort_select" for s in tel.spans)
+        rates = [v for (n, _), v in tel.gauges().items()
+                 if n == "eligibility_rate"]
+        assert rates and 0.0 <= rates[0] <= 1.0
