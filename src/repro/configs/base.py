@@ -290,6 +290,20 @@ class FLConfig:
     # each chunk runs its own mask session and the engines never
     # materialize the full (D,) aggregation.
     param_chunk_elems: int = 0
+    # --- upload compression (core/fl/compression.py) ---
+    # structured/sketched client updates inside the masked field (McMahan
+    # et al., arXiv 1602.05629): "none" ships every coordinate (legacy);
+    # "subsample" keeps a PRF-seeded random compress_rate fraction of each
+    # chunk; "sketch" random-rotates (sign-flip + block Walsh-Hadamard)
+    # before subsampling so sparse updates survive.  Operators derive from
+    # the session key at both ends of the push split — nothing extra on
+    # the wire.  Streaming engines only (mask_mode off/tee_stream/client).
+    compress_mode: str = "none"
+    compress_rate: float = 1.0  # kept fraction of coordinates, (0, 1]
+    # enclave wire quantization: tee/tee_stream uploads are raw f32 by
+    # default; > 0 stochastically quantizes the client delta to this many
+    # bits (packed words on the wire) before enclave ingest.  0 = off.
+    enclave_wire_bits: int = 0
     # --- graceful degradation (core/fl/faults.py) ---
     # minimum fraction of live session slots that must be filled before a
     # deadline flush releases a params update.  0.0 keeps the legacy
@@ -340,6 +354,26 @@ class FLConfig:
             raise ValueError(
                 f"param_chunk_elems must be >= 0 (0 = single-chunk flat "
                 f"plan); got {self.param_chunk_elems}.")
+        if self.compress_mode not in ("none", "subsample", "sketch"):
+            raise ValueError(
+                f"compress_mode={self.compress_mode!r}: want 'none', "
+                f"'subsample' or 'sketch' (core/fl/compression.py).")
+        if not 0.0 < self.compress_rate <= 1.0:
+            raise ValueError(
+                f"compress_rate={self.compress_rate} is the kept fraction "
+                f"of each chunk's coordinates; want 0 < rate <= 1 (1.0 "
+                f"disables compression).")
+        if (self.compress_mode != "none" and self.compress_rate < 1.0
+                and self.secure_agg_bits == 0):
+            raise ValueError(
+                f"compress_mode={self.compress_mode!r} rides the "
+                f"fixed-point secure-aggregation wire; set secure_agg_bits "
+                f"> 0 (it is 0 = disabled).")
+        if self.enclave_wire_bits != 0 and not (
+                2 <= self.enclave_wire_bits <= 32):
+            raise ValueError(
+                f"enclave_wire_bits={self.enclave_wire_bits}: want 0 (raw "
+                f"f32 enclave wire) or a packed width in [2, 32].")
         if not 0.0 <= self.flush_quorum <= 1.0:
             raise ValueError(
                 f"flush_quorum is a fraction of live session slots; got "

@@ -46,6 +46,7 @@ from typing import Any, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.fl import compression as comp
 from repro.core.fl import dp
 from repro.core.fl import secure_agg as sa
 from repro.kernels import prf
@@ -73,6 +74,11 @@ class AggregationSpec(NamedTuple):
     # 2^32) — travels with every MaskSession so reduced-field transports
     # know the session's wire residue width
     field_modulus: int = 1 << 32
+    # structured/sketched upload compression inside the masked field
+    # (core/fl/compression.py).  The identity spec is the exact legacy
+    # code path; active specs shrink every streamed wire/buffer width to
+    # the compressed chunk sizes.
+    compression: comp.CompressionSpec = comp.CompressionSpec()
 
 
 def fixed_point_scale(fl_cfg, num_contributors: int) -> float:
@@ -105,6 +111,9 @@ def make_spec(fl_cfg, num_contributors: int) -> AggregationSpec:
         field_modulus=sa.field_modulus(fl_cfg.secure_agg_bits,
                                        num_contributors)
         if use_sa else 1 << 32,
+        compression=comp.CompressionSpec(
+            mode=getattr(fl_cfg, "compress_mode", "none"),
+            rate=getattr(fl_cfg, "compress_rate", 1.0)),
     )
 
 
@@ -528,7 +537,9 @@ def aggregate_buffer(buf: jnp.ndarray, weights: jnp.ndarray,
 # Chunk session keys: fold_in(fold_in(engine_key, CHUNK_SESSION_TAG), c).
 # Disjoint from every other stream tag in the system (0x5E55 sync session,
 # 0x7EE tee session, 0xDEE tee noise, 0xA5 push base, 0x5A5E session seed,
-# 0x1EAF/0x4007 two-level leaf/root, 0x6B52 graph perm).
+# 0x1EAF/0x4007 two-level leaf/root, 0x6B52 graph perm, 0xCB01 compression
+# operator — compression.COMPRESSION_TAG, folded from each CHUNK session
+# key by plan_operators).
 CHUNK_SESSION_TAG = 0xC401
 
 # Multi-chunk plans pad each chunk to this multiple so the fused Pallas
@@ -767,9 +778,40 @@ def plan_sessions(spec: AggregationSpec, plan: ParamPlan, key, *,
         for k in plan.session_keys(key))
 
 
+def plan_wire_chunks(spec: AggregationSpec, plan: ParamPlan):
+    """Per-chunk WIRE widths under the spec's compression (identity spec =
+    the plan's own widths verbatim).  Every streamed buffer, recovery
+    sweep, mask and packed word count runs at these widths."""
+    return comp.wire_chunks(spec.compression, plan.chunks)
+
+
+def plan_operators(spec: AggregationSpec, plan: ParamPlan, session_key):
+    """Per-chunk compression operators, or None for the identity spec.
+
+    Derived from the ENGINE session key: each chunk's session key
+    (``plan.session_keys``) folds :data:`compression.COMPRESSION_TAG`, so
+    both ends of the push split — and both tier topologies, whose leaf
+    partials all sum into one root aggregate — regenerate the SAME
+    operator with no wire payload.  Deliberately slot-invariant: the
+    server accumulates in the sketch domain and expands the SUM once at
+    decode, which requires every contributor to share one linear operator
+    per chunk (see compression.py).  When the session rolls, the key
+    rolls, and so do the operators.
+    """
+    c = spec.compression
+    if c.identity:
+        return None
+    return tuple(
+        comp.chunk_operators(
+            jax.random.fold_in(k, comp.COMPRESSION_TAG), c.mode, ck.size,
+            c.rate)
+        for k, ck in zip(plan.session_keys(session_key), plan.chunks))
+
+
 def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
                      spec: AggregationSpec, plan: ParamPlan, sessions, rng, *,
-                     masked: bool = True, use_pallas: bool = False):
+                     masked: bool = True, use_pallas: bool = False,
+                     ops=None):
     """The streamed per-arrival encode on PRE-CHUNKED flat arrays.
 
     ``xs`` is the tuple of UNPADDED per-chunk f32 arrays of one delta (what
@@ -780,7 +822,14 @@ def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
     chunk masked under its own session at its own slot-local stream.  The
     single-chunk plan reproduces the legacy row bit-for-bit.
 
-    Returns (tuple of PADDED (padded_c,) int32 rows, pre-clip norm,
+    ``ops`` (from :func:`plan_operators`) switches the chunk onto the
+    COMPRESSED wire: rotate/subsample in the operator domain, stochastic
+    quantize there (uniform stream positions are operator-domain indices
+    at the chunk's global offset), gather the kept coordinates, then mask
+    at the WIRE width — masks, recovery and packing all live in the sketch
+    domain from here on.
+
+    Returns (tuple of PADDED (wire_padded_c,) int32 rows, pre-clip norm,
     was_clipped).
     """
     sq = plan_sq_norms(plan, xs)
@@ -788,6 +837,7 @@ def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
     clip_scale = jnp.minimum(1.0, spec.clip_norm / jnp.maximum(nrm, 1e-12))
     weight = jnp.asarray(weight, jnp.float32)
     u_words = prf.key_words(jax.random.fold_in(rng, 2))
+    wire = plan_wire_chunks(spec, plan) if ops is not None else plan.chunks
     rows = []
     for c, (ck, x) in enumerate(zip(plan.chunks, xs)):
         xw = x * (weight * clip_scale)
@@ -795,6 +845,33 @@ def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
             noise = jax.random.normal(plan.chunk_noise_key(rng, c), x.shape,
                                       jnp.float32)
             xw = xw + noise * (spec.dev_noise * weight)
+        if ops is not None:
+            op, wc = ops[c], wire[c]
+            if op.mode == "sketch" and use_pallas:
+                from repro.kernels import secure_agg as _ksa
+                q_full = _ksa.rotate_quantize_prf(
+                    xw, spec.sa_scale, op.key_words, jnp.stack(u_words),
+                    u_offset=ck.offset,
+                    interpret=jax.default_backend() != "tpu")
+            else:
+                if op.mode == "sketch":
+                    y = xw if op.full == ck.size else jnp.pad(
+                        xw, (0, op.full - ck.size))
+                    y = comp.block_rotate(y, op.signs)
+                else:
+                    y = xw
+                yf = y * spec.sa_scale
+                floor = jnp.floor(yf)
+                bit = (prf.uniform_block(*u_words, op.full, offset=ck.offset)
+                       < (yf - floor)).astype(jnp.float32)
+                q_full = (floor + bit).astype(jnp.int32)
+            row = jnp.take(q_full, op.idx)
+            if masked:
+                row = row + sessions[c].mask((wc.size,), slot)  # mod 2^32
+            if wc.padded > wc.size:
+                row = jnp.pad(row, (0, wc.padded - wc.size))
+            rows.append(row)
+            continue
         if masked and use_pallas:
             from repro.kernels import secure_agg as _ksa
             row = _ksa.quantize_mask_prf(
@@ -817,40 +894,44 @@ def encode_plan_flat(xs: Sequence[jnp.ndarray], weight, slot,
 
 def encode_plan_contribution(delta, weight, slot, spec: AggregationSpec,
                              plan: ParamPlan, sessions, rng, *,
-                             masked: bool = True, use_pallas: bool = False):
+                             masked: bool = True, use_pallas: bool = False,
+                             ops=None):
     """Pytree form of :func:`encode_plan_flat` — the client-side encode."""
     return encode_plan_flat(plan.chunk_arrays(delta), weight, slot, spec,
                             plan, sessions, rng, masked=masked,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas, ops=ops)
 
 
 def aggregate_plan_masked_buffer(bufs: Sequence[jnp.ndarray],
                                  present: jnp.ndarray, total_weight,
                                  spec: AggregationSpec, plan: ParamPlan,
                                  sessions, rng, *, recover: bool = True,
-                                 masked: bool = True):
+                                 masked: bool = True, ops=None):
     """Plan form of :func:`aggregate_masked_buffer`.
 
     ``bufs`` is the tuple of per-chunk (B, padded_c) int32 buffers; each
     chunk gates absent slots and runs ITS session's recovery sweep at the
-    unpadded width (padding carries no mask shares).  Returns the
-    weight-normalized mean delta as a PYTREE shaped like the plan.
+    unpadded WIRE width (padding carries no mask shares; under an active
+    compression spec the wire width is the compressed chunk size — the
+    whole sweep runs in the sketch domain).  Returns the weight-normalized
+    mean delta as a PYTREE shaped like the plan.
     """
     pres_i = jnp.asarray(present).astype(jnp.int32)
+    wire = plan_wire_chunks(spec, plan)
     accs = []
-    for c, (ck, mbuf) in enumerate(zip(plan.chunks, bufs)):
+    for c, (wc, mbuf) in enumerate(zip(wire, bufs)):
         if recover:
             acc = jnp.sum(mbuf * pres_i[:, None], axis=0)  # mod 2^32
             if masked:
-                rec = sessions[c].recovery((ck.size,), present)
-                if ck.padded > ck.size:
-                    rec = jnp.pad(rec, (0, ck.padded - ck.size))
+                rec = sessions[c].recovery((wc.size,), present)
+                if wc.padded > wc.size:
+                    rec = jnp.pad(rec, (0, wc.padded - wc.size))
                 acc = acc + rec
         else:
             acc = jnp.sum(mbuf, axis=0)  # full session: masks cancel exactly
         accs.append(acc)
     return finalize_plan_aggregate(accs, total_weight, spec, plan,
-                                   jax.random.fold_in(rng, 0xDEE))
+                                   jax.random.fold_in(rng, 0xDEE), ops=ops)
 
 
 def plan_buffer_noise_and_uniforms(rng, B: int, spec: AggregationSpec,
@@ -942,18 +1023,26 @@ def aggregate_plan_buffer(bufs: Sequence[jnp.ndarray], weights: jnp.ndarray,
 
 
 def finalize_plan_aggregate(accs: Sequence[jnp.ndarray], total_weight,
-                            spec: AggregationSpec, plan: ParamPlan, rng):
+                            spec: AggregationSpec, plan: ParamPlan, rng, *,
+                            ops=None):
     """Plan form of :func:`finalize_aggregate`: decode, mean, TEE noise.
 
     Slices each chunk's padded tail, decodes, divides by the total weight,
     reassembles the MODEL PYTREE, and draws TEE noise on the tree
     (``dp.add_noise`` keys per leaf, so the draw is chunk-invariant — it
     depends only on the model structure, never on the chunking).
+
+    ``ops`` (from :func:`plan_operators`) decodes a SKETCH-DOMAIN
+    accumulator: the chunk's wire coordinates are recentered and descaled
+    in the field, then expanded once — ``(full/m) · Rᵀ Sᵀ`` over the
+    already-summed aggregate, the only full-width touch in the whole
+    compressed pipeline.
     """
     w = jnp.maximum(total_weight, 1e-9)
     flats = []
-    for ck, acc in zip(plan.chunks, accs):
-        a = acc[:ck.size]
+    for c, (ck, acc) in enumerate(zip(plan.chunks, accs)):
+        op = None if ops is None else ops[c]
+        a = acc[:ck.size] if op is None else acc[:op.m]
         if spec.use_secure_agg:
             # the accumulator is a mod-2^32 representative of the mod-C sum
             # (C = spec.field_modulus): raw masked rows sum to the signed
@@ -964,6 +1053,8 @@ def finalize_plan_aggregate(accs: Sequence[jnp.ndarray], total_weight,
             # by field sizing), so both ingest formats decode bit-equal.
             a = sa.recenter(a, spec.field_modulus)
             a = a.astype(jnp.float32) / spec.sa_scale
+        if op is not None:
+            a = comp.expand(a, op, ck.size)
         flats.append(a / w)
     mean = plan.unchunk(flats)
     if spec.tee_noise > 0.0:

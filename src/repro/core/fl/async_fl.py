@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import telemetry as tele
 from repro.core.fl import aggregation as agg
+from repro.core.fl import compression as comp
 from repro.core.fl import secure_agg as sa
 from repro.core.fl.server_opt import build_server_opt
 
@@ -120,6 +121,13 @@ def build_async_buffer_step(params, fl_cfg, *, buffer_size: int,
     spec = agg.make_spec(fl_cfg, buffer_size)
     if mask_mode == "tee" and not spec.use_secure_agg:
         raise ValueError("mask_mode='tee' requires secure_agg_bits > 0")
+    if not spec.compression.identity:
+        raise ValueError(
+            f"upload compression ({spec.compression.describe()}) runs on "
+            "the STREAMING engines only (mask_mode 'client'/'tee_stream' "
+            "or the streamed 'off' encode): the batched buffer step holds "
+            "raw f32 deltas, so there is no client-side wire to compress. "
+            "Set compress_rate=1.0 here or switch to a streaming mode.")
     server = build_server_opt(fl_cfg)
     plan = agg.plan_for(params, fl_cfg)
 
@@ -190,9 +198,12 @@ def build_masked_async_buffer_step(params, fl_cfg, *, buffer_size: int,
         w_total = w.sum()
         sessions = agg.plan_sessions(spec, plan, session_key) if masked \
             else None
+        # compressed-wire decode: re-derive the session's operators from
+        # the SAME key the clients encoded against (None when identity)
+        ops = agg.plan_operators(spec, plan, session_key)
         mean_delta = agg.aggregate_plan_masked_buffer(
             mbufs, present, w_total, spec, plan, sessions, rng,
-            recover=recover, masked=masked)
+            recover=recover, masked=masked, ops=ops)
         new_params, new_opt = server.apply(params, opt_state, mean_delta)
         denom = jnp.maximum(w_total, 1e-9)
         metrics = {
@@ -235,6 +246,10 @@ class ClientPush(NamedTuple):
     # replayed ClientPush is an idempotent no-op instead of a double-count.
     # 0 = untokened (hand-built pushes keep the strict legacy semantics).
     token: int = 0
+    # the upload-compression spec the row was encoded under: the server
+    # rejects a push whose sketch domain does not match its session's
+    # (the identity spec == today's uncompressed packed wire)
+    compression: comp.CompressionSpec = comp.CompressionSpec()
 
 
 class AsyncServer:
@@ -345,6 +360,38 @@ class AsyncServer:
 
         spec = agg.make_spec(fl_cfg, buffer_size)
         self._spec = spec
+        # enclave quantized wire: tee modes can ship packed sub-32-bit
+        # words instead of the raw f32 delta (FLConfig.enclave_wire_bits)
+        ebits = int(getattr(fl_cfg, "enclave_wire_bits", 0))
+        self._enclave_bits = ebits if mask_mode in ("tee", "tee_stream") \
+            else 0
+        if self._enclave_bits:
+            emod = (1 << ebits) if ebits < 32 else (1 << 32)
+            evr = float(fl_cfg.secure_agg_range)
+            eplan = self._plan
+
+            @jax.jit
+            def _enclave_wire(delta, rng):
+                """CLIENT-side jit: stochastic quantize -> canonical field
+                residues -> packed uint32 words (the actual wire) ->
+                enclave-side unpack -> dequantize.  No f32 delta crosses
+                the wire; the enclave ingests the quantized reconstruction.
+                """
+                xs = eplan.chunk_arrays(delta)
+                keys = jax.random.split(rng, len(xs))
+                outs, words = [], []
+                for x, k in zip(xs, keys):
+                    q = sa.quantize(x, ebits, evr, k)
+                    w = sa.pack_residues(sa.to_field(q, emod), emod)
+                    q2 = sa.recenter(
+                        sa.unpack_residues(w, x.shape[-1], emod), emod)
+                    outs.append(sa.dequantize(q2, ebits, evr))
+                    words.append(w)
+                return eplan.unchunk(tuple(outs)), tuple(words)
+
+            self._enclave_wire = _enclave_wire
+            self._enclave_seq = 0
+            self._enclave_base = jax.random.PRNGKey(0xE7C)
         if mask_mode == "off":
             # the baseline engine streams its encode too (when it has an
             # integer field to stream into) — flush becomes near-free
@@ -364,8 +411,11 @@ class AsyncServer:
                 raise ValueError(
                     f"mask_mode={mask_mode!r} requires secure_agg_bits > 0")
             masked = mask_mode != "off"
-            self._bufs = tuple(jnp.zeros((buffer_size, ck.padded), jnp.int32)
-                               for ck in plan.chunks)
+            # buffers live at the WIRE widths: under an active compression
+            # spec every slot stores the compressed (sketch-domain) row
+            wire = agg.plan_wire_chunks(spec, plan)
+            self._bufs = tuple(jnp.zeros((buffer_size, wc.padded), jnp.int32)
+                               for wc in wire)
             self._wts = jnp.zeros((buffer_size,), jnp.float32)
             self._norms = jnp.zeros((buffer_size,), jnp.float32)
             self._clips = jnp.zeros((buffer_size,), jnp.float32)
@@ -397,9 +447,10 @@ class AsyncServer:
                 w = staleness_weight(s, s_mode, s_exp)
                 sessions = (agg.plan_sessions(spec, plan, session_key)
                             if masked else None)
+                ops = agg.plan_operators(spec, plan, session_key)
                 rows, nrm, clipped = agg.encode_plan_contribution(
                     delta, w, slot, spec, plan, sessions, rng,
-                    masked=masked, use_pallas=use_pallas)
+                    masked=masked, use_pallas=use_pallas, ops=ops)
                 return rows, w, nrm, clipped
 
             @jax.jit
@@ -427,8 +478,8 @@ class AsyncServer:
                 """SERVER-side jit: packed wire words back to the int32
                 residue rows the modular-sum buffer stores."""
                 return tuple(
-                    sa.unpack_residues(wr, ck.padded, spec.field_modulus)
-                    for wr, ck in zip(wrows, plan.chunks))
+                    sa.unpack_residues(wr, wc.padded, spec.field_modulus)
+                    for wr, wc in zip(wrows, wire))
 
             self._masked_encode = _masked_encode
             self._write_row = _write_row
@@ -546,9 +597,14 @@ class AsyncServer:
             # wire format: the packed residue stream is what travels
             rows = self._wire_pack(rows, self._session_key())
             sp.fence(rows)
+        self.telemetry.count(
+            "upload_bytes", 4 * sum(int(r.size) for r in rows),
+            lane=("packed" if self._spec.compression.identity
+                  else "compressed"), **self._tl)
         row = rows[0] if len(rows) == 1 else rows
         return ClientPush(row, w, nrm, clipped, staleness, self.version,
-                          slot, self._spec.field_modulus, self._new_token())
+                          slot, self._spec.field_modulus, self._new_token(),
+                          self._spec.compression)
 
     def _encode_for_slot(self, delta, staleness, slot: int, rng=None):
         """One masked encode bound to (current session, ``slot``)."""
@@ -603,7 +659,19 @@ class AsyncServer:
                 f"({sa.wire_bits(self._spec.field_modulus)}-bit): the "
                 "residue stream cannot be unpacked — client and server must "
                 "agree on secure_agg_bits and the session size")
+        if cp.compression != self._spec.compression:
+            raise ValueError(
+                f"ClientPush encoded under compression "
+                f"{cp.compression.describe()} but the server's session "
+                f"expects {self._spec.compression.describe()}: the row "
+                "lives in a different sketch domain and would decode to "
+                "garbage — client and server must agree on compress_mode "
+                "and compress_rate for the session")
         wrows = cp.row if isinstance(cp.row, tuple) else (cp.row,)
+        self.telemetry.count(
+            "upload_bytes", 4 * sum(int(w_.size) for w_ in wrows),
+            lane=("packed" if self._spec.compression.identity
+                  else "compressed"), **self._tl)
         rows = self._wire_unpack(wrows)  # back to int32 residue rows
         if cp.token:
             self._delivered_tokens.add(cp.token)
@@ -677,6 +745,16 @@ class AsyncServer:
         staleness = self.version - client_version  # host-int metadata only
         if push_id is not None:
             self._delivered_tokens.add(push_id)
+        if self._enclave_bits:
+            # enclave quantized wire: the delta the tee ingests is the
+            # client-side stochastic quantization's reconstruction; the
+            # packed word streams are what actually crossed the wire
+            ekey = jax.random.fold_in(self._enclave_base, self._enclave_seq)
+            self._enclave_seq += 1
+            delta, ewords = self._enclave_wire(delta, ekey)
+            self.telemetry.count(
+                "upload_bytes", 4 * sum(int(w_.size) for w_ in ewords),
+                lane="enclave", **self._tl)
         if self._streaming:
             # streaming encode: process the arriving delta NOW (one jitted
             # call — in "tee_stream" masked, so the raw update never rests

@@ -382,7 +382,11 @@ class FaultInjector:
             self._finalize(e.seq, "dropped", "no_open_slot")
             return
         self._reserved.add(new)
-        if e.cp is not None:  # re-encode against the CURRENT session
+        if e.cp is not None:  # re-encode against the CURRENT session —
+            # this also re-derives the session's upload-compression
+            # operators (sign-flip/selection PRF streams are keyed by the
+            # session key, so a roll rotates them with the masks; nothing
+            # about the operators is cached on the retry path)
             e.cp = self.server.encode_push(e.delta, e.client_version,
                                            slot=new)
         else:

@@ -158,20 +158,22 @@ def _warn_deprecated(old: str, new: str) -> None:
 
 
 def _finalize_root(params, opt_state, accs, w, norms, clips, staleness,
-                   participation, spec, plan, server, rng):
+                   participation, spec, plan, server, rng, ops=None):
     """The root tail every tier flush shares: decode the combined modular
     sums into the noised mean PYTREE, apply the server optimizer, assemble
     the round metrics.
 
     ``accs``: tuple of per-chunk combined accumulators (the ParamPlan's
-    layout); ``w``: (B,) effective per-slot weights (staleness discount x
-    present/valid gate); ``participation``: (B,) 1/0 present (streamed
-    engines) or valid (batched engines) vector — the staleness_mean
-    denominator.
+    layout — or, under an active compression spec, the WIRE layout: the
+    sketch-domain sums, expanded here exactly once via ``ops``); ``w``:
+    (B,) effective per-slot weights (staleness discount x present/valid
+    gate); ``participation``: (B,) 1/0 present (streamed engines) or valid
+    (batched engines) vector — the staleness_mean denominator.
     """
     w_total = w.sum()
     mean = agg.finalize_plan_aggregate(accs, w_total, spec, plan,
-                                       jax.random.fold_in(rng, 0xDEE))
+                                       jax.random.fold_in(rng, 0xDEE),
+                                       ops=ops)
     new_params, new_opt = server.apply(params, opt_state, mean)
     denom = jnp.maximum(w_total, 1e-9)
     metrics = {
@@ -218,11 +220,16 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
     plan = agg.plan_for(params, fl_cfg)
+    # wire-domain chunk widths: under an active compression spec the
+    # buffers, masks and recovery sweeps all live at the COMPRESSED sizes
+    # (the protocol primitives are width-agnostic); identity == the plan's
+    wire = agg.plan_wire_chunks(spec, plan)
     if mesh is None:
         mesh = make_agg_mesh(num_leaves)
 
     def step(params, opt_state, mbuf, present, weights, staleness, norms,
              clips, session_key, rng):
+        ops = agg.plan_operators(spec, plan, session_key)
         bufs = _as_chunks(mbuf)  # tuple of (L, Bl, padded_c)
         # global slot s = leaf * leaf_buffer + local
         rows = tuple(b.reshape(B, b.shape[-1]) for b in bufs)
@@ -242,12 +249,12 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
                 pres_i = pres_l.astype(jnp.int32)
                 ckeys = plan.session_keys(skey)
                 accs = []
-                for c, ck in enumerate(plan.chunks):
+                for c, wc in enumerate(wire):
                     acc = jnp.sum(rows_l[c] * pres_i[:, None],
                                   axis=0)  # int32, wraps mod 2^32
-                    rec = sa.recovery_sweep((ck.size,), pres_all, lo_l[c],
+                    rec = sa.recovery_sweep((wc.size,), pres_all, lo_l[c],
                                             hi_l[c], ckeys[c], ew_l[c])
-                    accs.append(acc + _pad_to(rec, ck.padded))
+                    accs.append(acc + _pad_to(rec, wc.padded))
                 # field-modulus combine, chunk-wise
                 return jax.lax.psum(tuple(accs), LEAF_AXIS)
 
@@ -280,7 +287,7 @@ def build_sharded_masked_step(params, fl_cfg, *, num_leaves: int,
         w = weights.reshape(B) * pres_full
         return _finalize_root(params, opt_state, accs, w, norms.reshape(B),
                               clips.reshape(B), staleness.reshape(B),
-                              pres_full, spec, plan, server, rng)
+                              pres_full, spec, plan, server, rng, ops=ops)
 
     return jax.jit(step)
 
@@ -317,6 +324,12 @@ def build_sharded_buffer_step(params, fl_cfg, *, num_leaves: int,
     if not spec.use_secure_agg:
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
+    if not spec.compression.identity:
+        raise ValueError(
+            f"upload compression ({spec.compression.describe()}) runs on "
+            "the STREAMING engines only — this batched step buffers raw "
+            "f32 rows, so there is no compressed wire to save. Set "
+            "compress_rate=1.0 here or switch to a streaming mode.")
     server = build_server_opt(fl_cfg)
     plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
@@ -410,6 +423,9 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
                          "integer field: set secure_agg_bits > 0")
     server = build_server_opt(fl_cfg)
     plan = agg.plan_for(params, fl_cfg)
+    # the session tree runs at the WIRE widths too: every leaf session,
+    # root mask and recovery sweep operates on the compressed rows
+    wire = agg.plan_wire_chunks(spec, plan)
     if mesh is None:
         mesh = make_leaf_mesh(num_leaves)
     lpd = leaves_per_device(num_leaves, mesh)
@@ -417,6 +433,7 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
 
     def step(params, opt_state, mbuf, present, weights, staleness, norms,
              clips, session_key, rng):
+        ops = agg.plan_operators(spec, plan, session_key)
         bufs = _as_chunks(mbuf)  # tuple of (L, Bl, padded_c)
 
         def dev_fn(rows_b, pres_b, skey):
@@ -436,7 +453,7 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
                 pres_i = pres_l.astype(jnp.int32)
                 alive = (pres_i.sum() > 0).astype(jnp.int32)
                 accs = []
-                for c, ck in enumerate(plan.chunks):
+                for c, wc in enumerate(wire):
                     acc = jnp.sum(rows_l[c] * pres_i[:, None],
                                   axis=0)  # mod 2^32
                     if masked:
@@ -445,9 +462,9 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
                         # chunk, under the chunk's own session tree
                         lsess = leaf_session(spec, ckeys[c], g, Bl)
                         acc = acc + _pad_to(
-                            lsess.recovery((ck.size,), pres_l), ck.padded)
+                            lsess.recovery((wc.size,), pres_l), wc.padded)
                         acc = acc + _pad_to(
-                            alive * rsess[c].mask((ck.size,), g), ck.padded)
+                            alive * rsess[c].mask((wc.size,), g), wc.padded)
                     accs.append(acc)
                 return tuple(accs)
 
@@ -471,13 +488,13 @@ def build_two_level_masked_step(params, fl_cfg, *, num_leaves: int,
             ckeys = plan.session_keys(session_key)
             accs = tuple(
                 acc + _pad_to(root_session(spec, ckeys[c], L).recovery(
-                    (ck.size,), alive_f), ck.padded)
-                for c, (acc, ck) in enumerate(zip(accs, plan.chunks)))
+                    (wc.size,), alive_f), wc.padded)
+                for c, (acc, wc) in enumerate(zip(accs, wire)))
 
         w = weights.reshape(B) * pres_full
         return _finalize_root(params, opt_state, accs, w, norms.reshape(B),
                               clips.reshape(B), staleness.reshape(B),
-                              pres_full, spec, plan, server, rng)
+                              pres_full, spec, plan, server, rng, ops=ops)
 
     return jax.jit(step)
 
@@ -508,6 +525,12 @@ def build_two_level_buffer_step(params, fl_cfg, *, num_leaves: int,
     if not spec.use_secure_agg:
         raise ValueError("the sharded tier aggregates in the secure-agg "
                          "integer field: set secure_agg_bits > 0")
+    if not spec.compression.identity:
+        raise ValueError(
+            f"upload compression ({spec.compression.describe()}) runs on "
+            "the STREAMING engines only — this batched step buffers raw "
+            "f32 rows, so there is no compressed wire to save. Set "
+            "compress_rate=1.0 here or switch to a streaming mode.")
     server = build_server_opt(fl_cfg)
     plan = agg.plan_for(params, fl_cfg)
     if mesh is None:
@@ -682,8 +705,45 @@ class ShardedAsyncServer:
         self._spec = spec
         plan = agg.plan_for(params, fl_cfg)
         self._plan = plan
+        # wire-domain widths (== the plan's under the identity spec)
+        wire = agg.plan_wire_chunks(spec, plan)
         self._opt_state = build_server_opt(fl_cfg).init(params)
         L, Bl = num_leaves, leaf_buffer
+        # enclave quantized wire: tee modes can ship packed sub-32-bit
+        # words instead of the raw f32 delta (FLConfig.enclave_wire_bits)
+        ebits = int(getattr(fl_cfg, "enclave_wire_bits", 0))
+        self._enclave_bits = ebits if mask_mode in ("tee", "tee_stream") \
+            else 0
+        if self._enclave_bits:
+            emod = (1 << ebits) if ebits < 32 else (1 << 32)
+            evr = float(fl_cfg.secure_agg_range)
+
+            @jax.jit
+            def _enclave_wire(deltas, rng):
+                """CLIENT-side jit over a (K,)-stacked batch: stochastic
+                quantize -> packed uint32 words (the actual wire) ->
+                enclave-side unpack -> dequantize.  No f32 delta crosses
+                the wire; the tier ingests the quantized reconstruction."""
+                K = jax.tree.leaves(deltas)[0].shape[0]
+
+                def one(delta, k):
+                    xs = plan.chunk_arrays(delta)
+                    ks = jax.random.split(k, len(xs))
+                    outs, words = [], []
+                    for x, kk in zip(xs, ks):
+                        q = sa.quantize(x, ebits, evr, kk)
+                        w = sa.pack_residues(sa.to_field(q, emod), emod)
+                        q2 = sa.recenter(
+                            sa.unpack_residues(w, x.shape[-1], emod), emod)
+                        outs.append(sa.dequantize(q2, ebits, evr))
+                        words.append(w)
+                    return plan.unchunk(tuple(outs)), tuple(words)
+
+                return jax.vmap(one)(deltas, jax.random.split(rng, K))
+
+            self._enclave_wire = _enclave_wire
+            self._enclave_seq = 0
+            self._enclave_base = jax.random.PRNGKey(0xE7C)
         zslot = lambda: jax.device_put(jnp.zeros((L, Bl), jnp.float32),
                                        s_slot)
         self._stal = zslot()
@@ -724,15 +784,19 @@ class ShardedAsyncServer:
                 sessions, mslot = row_sessions(skey, gslot)
             else:
                 sessions, mslot = None, 0
+            # compression operators are keyed by the ENGINE session key
+            # (not the leaf keys): every contributor of the round shares
+            # one operator per chunk, so sums commute with it
+            ops = agg.plan_operators(spec, plan, skey)
             rows, nrm, clipped = agg.encode_plan_flat(
                 xs, w, mslot, spec, plan, sessions, rng, masked=masked,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, ops=ops)
             return rows, w, nrm, clipped
 
         if self._streaming:
             self._bufs = tuple(
-                jax.device_put(jnp.zeros((L, Bl, ck.padded), jnp.int32),
-                               s_buf) for ck in plan.chunks)
+                jax.device_put(jnp.zeros((L, Bl, wc.padded), jnp.int32),
+                               s_buf) for wc in wire)
             self._wts, self._norms, self._clips = zslot(), zslot(), zslot()
             build_masked = (build_two_level_masked_step if two_level
                             else build_sharded_masked_step)
@@ -849,9 +913,9 @@ class ShardedAsyncServer:
                     def one_leaf(buf_l, wts_l, norms_l, clips_l, stal_l,
                                  wr_l, sl, vld, st, wl, nl, cl):
                         rows = tuple(
-                            sa.unpack_residues(r, ck.padded,
+                            sa.unpack_residues(r, wc.padded,
                                                spec.field_modulus)
-                            for r, ck in zip(wr_l, plan.chunks))
+                            for r, wc in zip(wr_l, wire))
                         tgt = jnp.where(vld > 0, sl, Bl)  # Bl -> dropped
                         return (tuple(b.at[tgt].set(r, mode="drop")
                                       for b, r in zip(buf_l, rows)),
@@ -1167,13 +1231,18 @@ class ShardedAsyncServer:
                 self._session_key(),
                 jax.random.fold_in(self._push_base, self.version))
             sp.fence(rows)
+        self.telemetry.count(
+            "upload_bytes", 4 * sum(int(r.size) for r in rows),
+            lane=("packed" if self._spec.compression.identity
+                  else "compressed"), **self._tl)
         # single-chunk pushes carry the bare packed (W,) word stream (the
         # legacy wire shape); multi-chunk pushes carry the per-chunk tuple
         row_of = ((lambda i: rows[0][i]) if len(rows) == 1
                   else (lambda i: tuple(r[i] for r in rows)))
         return [ClientPush(row_of(i), w[i], nrm[i], clipped[i],
                            float(stals[i]), self.version, int(s),
-                           self._spec.field_modulus, self._new_token())
+                           self._spec.field_modulus, self._new_token(),
+                           self._spec.compression)
                 for i, s in enumerate(slots)]
 
     def _push_encoded_impl(self, cps: Sequence[ClientPush],
@@ -1198,6 +1267,14 @@ class ShardedAsyncServer:
                     f"({sa.wire_bits(self._spec.field_modulus)}-bit): the "
                     "residue stream cannot be unpacked — client and tier "
                     "must agree on secure_agg_bits and the session size")
+            if cp.compression != self._spec.compression:
+                raise ValueError(
+                    f"ClientPush encoded under compression "
+                    f"{cp.compression.describe()} but the tier's session "
+                    f"expects {self._spec.compression.describe()}: the row "
+                    "lives in a different sketch domain and would decode "
+                    "to garbage — client and tier must agree on "
+                    "compress_mode and compress_rate for the session")
         kept: List[ClientPush] = []
         for cp in cps:
             if cp.token and cp.token in self._delivered_tokens:
@@ -1236,6 +1313,10 @@ class ShardedAsyncServer:
                      for cp in cps]
             wrows = tuple(jnp.stack([cr[c] for cr in crows])
                           for c in range(self._plan.num_chunks))
+            self.telemetry.count(
+                "upload_bytes", 4 * sum(int(w_.size) for w_ in wrows),
+                lane=("packed" if self._spec.compression.identity
+                      else "compressed"), **self._tl)
             (self._bufs, self._wts, self._norms, self._clips,
              self._stal) = self._scatter_packed(
                 self._bufs, self._wts, self._norms, self._clips, self._stal,
@@ -1300,6 +1381,16 @@ class ShardedAsyncServer:
         slots = (self._take_slots(K) if slot_of is None
                  else [slot_of[i] for i in kept])
         stals = self._staleness_of(client_version, K)
+        if self._enclave_bits:
+            # enclave quantized wire: the rows the tier ingests are the
+            # client-side stochastic quantization's reconstruction; the
+            # packed word streams are what actually crossed the wire
+            ekey = jax.random.fold_in(self._enclave_base, self._enclave_seq)
+            self._enclave_seq += 1
+            deltas, ewords = self._enclave_wire(deltas, ekey)
+            self.telemetry.count(
+                "upload_bytes", 4 * sum(int(w_.size) for w_ in ewords),
+                lane="enclave", **self._tl)
         if not self._streaming:  # "tee": store raw rows, mask lane at flush
             with self._span("ingest", k=K, lane="raw") as sp:
                 leaf, local = self._leaf_local(slots)

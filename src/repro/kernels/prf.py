@@ -43,6 +43,8 @@ _PARITY = 0x1BD11BDA  # Threefry key-schedule parity constant (2x32)
 # counter tags: disjoint stream families under one pair/key (see layout note)
 TAG_MASK = 0
 TAG_UNIFORM = 1
+TAG_SIGN = 2  # compression: random sign-flip diagonal (rotation sketch)
+TAG_SELECT = 3  # compression: coordinate-selection ranking words
 
 
 def key_words(key) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -175,6 +177,47 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot: int,
     q = (floor + bit).astype(jnp.int32)
     return q + prf_session_mask(D, slot, session.num_slots,
                                 session.key_words, session.degree, perm)
+
+
+def rotate_quantize_prf(x: jnp.ndarray, scale: float, op_key_words,
+                        uniform_key_words, u_offset: int = 0,
+                        block: int = 512) -> jnp.ndarray:
+    """Oracle for the fused sketch encode: q(scale * H(signs ⊙ x)).
+
+    Deliberately an independent formulation — the ±1 diagonal one
+    TAG_SIGN word per position, the Walsh–Hadamard butterfly as explicit
+    per-element GATHERS (each stage reads its two operands by index
+    arithmetic rather than the reshape cascade the kernel and
+    ``core.fl.compression.fwht`` both use; the per-element float ops are
+    the same single add/sub, so the result is bit-identical while the
+    indexing is derived independently), stochastic-rounding uniforms one
+    TAG_UNIFORM word per position at the chunk's global offset.  Returns
+    the full operator-domain vector, Hadamard pad included, matching the
+    kernel's output length.
+    """
+    (D,) = x.shape
+    full = -(-D // block) * block
+    o0, o1 = jnp.asarray(op_key_words, prf.U32)
+    e = jnp.arange(full)
+    sbits = prf.stream_at(o0, o1, e, tag=prf.TAG_SIGN)
+    signs = 1.0 - 2.0 * (sbits & 1).astype(jnp.float32)
+    y = (jnp.pad(x.astype(jnp.float32), (0, full - D)) * signs
+         ).reshape(full // block, block)
+    idx = jnp.arange(block)
+    h = 1
+    while h < block:
+        # position p = g*2h + s*h + t: stage output is a+b at s=0, a-b at
+        # s=1, with a = y[g*2h + t], b = y[g*2h + h + t]
+        g, s, t = idx // (2 * h), (idx // h) % 2, idx % h
+        a, b = y[:, g * 2 * h + t], y[:, g * 2 * h + h + t]
+        y = jnp.where(s == 0, a + b, a - b)
+        h *= 2
+    y = (y * jnp.float32(1.0 / math.sqrt(block))).reshape(full)
+    yf = y * scale
+    floor = jnp.floor(yf)
+    bit = (prf_uniforms(full, uniform_key_words, u_offset)
+           < (yf - floor)).astype(jnp.float32)
+    return (floor + bit).astype(jnp.int32)
 
 
 def weighted_quantize_accum_prf(x: jnp.ndarray, weights: jnp.ndarray,

@@ -253,6 +253,86 @@ def quantize_mask_prf(x: jnp.ndarray, scale: float, slot,
     return out[:D]
 
 
+# ---------------------------------------------------------------------------
+# Fused compression lane: sign-flip ∘ block-FWHT rotate + stochastic quantize
+# ---------------------------------------------------------------------------
+SKETCH_BLOCK = 512  # == core.fl.compression.SKETCH_BLOCK (Hadamard width)
+
+
+def _rotate_quantize_prf_kernel(x_ref, meta_ref, out_ref, *, scale: float,
+                                block: int):
+    """One Hadamard block of the rotation sketch's client encode.
+
+    The rotation mixes elements WITHIN a 512 block only, so the grid is
+    embarrassingly parallel over blocks.  The ±1 diagonal is regenerated
+    in-kernel from the operator key's TAG_SIGN counter stream (position =
+    the element's operator-domain index), the butterfly replicates the
+    EXACT reshape cascade of ``core.fl.compression.fwht`` (bit-identity
+    with the host path), and the stochastic-rounding uniforms come from
+    the TAG_UNIFORM stream at the chunk's global offset — the same words
+    the uncompressed encode would consume.
+    """
+    import math as _math
+    # meta: (5,) uint32 = operator key words, uniform key words, u offset
+    o0, o1 = meta_ref[0], meta_ref[1]
+    u0, u1 = meta_ref[2], meta_ref[3]
+    u_off = meta_ref[4]
+    e = (pl.program_id(0) * block).astype(prf.U32) + _iota_u32(block)
+    sbits = prf.stream_at(o0, o1, e, tag=prf.TAG_SIGN)
+    signs = 1.0 - 2.0 * (sbits & 1).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32) * signs
+    n = block
+    h = 1
+    while h < n:  # static unroll: log2(block) butterfly stages
+        x = x.reshape(n // (2 * h), 2, h)
+        a, b = x[..., 0, :], x[..., 1, :]
+        x = jnp.stack((a + b, a - b), axis=-2).reshape(n)
+        h *= 2
+    x = x * jnp.float32(1.0 / _math.sqrt(n))
+    xf = x * scale
+    floor = jnp.floor(xf)
+    u = prf.bits_to_uniform(
+        prf.stream_at(u0, u1, u_off + e, tag=prf.TAG_UNIFORM))
+    bit = (u < (xf - floor)).astype(jnp.float32)
+    out_ref[...] = (floor + bit).astype(jnp.int32)
+
+
+def rotate_quantize_prf(x: jnp.ndarray, scale: float, op_key_words,
+                        uniform_key_words, *, u_offset=0,
+                        block: int = SKETCH_BLOCK,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused sketch encode: q(scale * blockFWHT(signs ⊙ x)) -> int32.
+
+    x: (D,) f32 already clipped/weighted (the pre-encode client value);
+    ``op_key_words``: (2,) uint32 words of the chunk's compression operator
+    key (``fold_in(chunk_session_key, COMPRESSION_TAG)``);
+    ``uniform_key_words``: (2,) uint32 stochastic-rounding PRF key;
+    ``u_offset`` (traced ok) shifts the uniform stream to the chunk's
+    global flat offset.  Returns the FULL operator-domain quantized vector
+    — length ``ceil(D / block) * block``, the Hadamard pad included — so
+    the caller can gather the operator's kept coordinates from it.
+    Bit-identical to the host oracle ``ref.rotate_quantize_prf`` and to
+    the unfused ``compression.block_rotate`` + stochastic-quantize path.
+    """
+    (D,) = x.shape
+    xp = _pad1(x.astype(jnp.float32), block)
+    meta = jnp.concatenate([
+        jnp.asarray(op_key_words, prf.U32).reshape(2),
+        jnp.asarray(uniform_key_words, prf.U32).reshape(2),
+        jnp.asarray(u_offset, prf.U32).reshape(1)])
+    kern = functools.partial(_rotate_quantize_prf_kernel, scale=scale,
+                             block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((5,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(xp, meta)
+
+
 DEFAULT_BLOCK_D = 512
 DEFAULT_BLOCK_C = 8
 

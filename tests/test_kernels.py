@@ -220,3 +220,41 @@ def test_unpack_residues_kernel_word_count_mismatch_raises():
     words = jnp.zeros((10,), jnp.uint32)
     with pytest.raises(ValueError, match="packed stream"):
         ksa.unpack_residues(words, 999, 19, interpret=True)
+
+
+# --- fused sketch rotate + quantize ------------------------------------------
+@pytest.mark.parametrize("D,off", [(512, 0), (700, 0), (1300, 1000),
+                                   (45, 2245)])
+def test_rotate_quantize_prf_kernel_oracle_host_three_way(D, off):
+    """Fused sign-flip ∘ block-FWHT ∘ stochastic-round kernel == gather-
+    based oracle == the host compression path, bit for bit.
+
+    Three independent formulations of the rotation (in-kernel reshape
+    butterfly, index-gather butterfly in the oracle, the reshape cascade
+    in ``core.fl.compression``) plus two PRF stream forms (``stream_at``
+    in the kernels, ``stream_block`` on the host) must agree exactly —
+    this is what lets the Pallas lane drop into ``encode_plan_flat``
+    without breaking the client/server bit-parity contract."""
+    from repro.core.fl import compression as comp
+    from repro.kernels import prf
+
+    scale = float(1 << 16)
+    key = jax.random.PRNGKey(D + off)
+    x = jax.random.normal(key, (D,)) * 2.0
+    op_key = jax.random.fold_in(key, comp.COMPRESSION_TAG)
+    u_key = jax.random.fold_in(key, 0xA5)
+    ow = jnp.stack(prf.key_words(op_key))
+    uw = jnp.stack(prf.key_words(u_key))
+    got = ksa.rotate_quantize_prf(x, scale, ow, uw, u_offset=off,
+                                  interpret=True)
+    want = ref.rotate_quantize_prf(x, scale, ow, uw, u_offset=off)
+    assert got.dtype == want.dtype == jnp.int32
+    assert bool(jnp.all(got == want))  # integer path: bit-exact
+    # host path: rotate via compression.block_rotate, same uniform stream
+    op = comp.chunk_operators(op_key, "sketch", D, 1.0)
+    full = op.full
+    y = comp.block_rotate(jnp.pad(x, (0, full - D)), op.signs) * scale
+    floor = jnp.floor(y)
+    u = prf.uniform_block(*prf.key_words(u_key), full, offset=off)
+    host = (floor + (u < (y - floor)).astype(jnp.float32)).astype(jnp.int32)
+    assert bool(jnp.all(got == host))
